@@ -1,0 +1,31 @@
+"""Shared benchmark helpers: timing + CSV emission.
+
+CPU wall-times here are a *proxy* (the paper's hardware is an A100; our
+deployment target is TPU v5e via the dry-run/roofline). What transfers
+from CPU measurement: algorithmic scaling (O(N^2) vs O(N)), precision
+byte-traffic ratios, and layout/locality effects. Absolute speedups
+belong to the roofline analysis in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
+    """Best-of wall time in seconds for a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(table: str, row: dict):
+    """One CSV-ish line: `table,key=value,...` (greppable, diffable)."""
+    body = ",".join(f"{k}={v}" for k, v in row.items())
+    print(f"{table},{body}", flush=True)

@@ -1,0 +1,49 @@
+"""Paper Figs 13-15: float precision vs NNPS runtime, all-list and RCLL.
+
+On CPU, fp16 arithmetic is emulated (no native half ALUs) so wall-time
+ratios understate the paper's GPU gains; we therefore also report the
+*bytes-streamed* model per search (the quantity that scales on TPU:
+the paper's own Table 6 shows the O(N) search is bandwidth-bound).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import emit, time_fn
+from repro.core import domain as D, nnps, rcll
+
+
+def coord_bytes(n, dim, dtype_bytes, candidates):
+    """bytes streamed per search: coords read once per candidate pair."""
+    return n * candidates * dim * dtype_bytes
+
+
+def main(full: bool = False):
+    rng = np.random.default_rng(0)
+    n = 16000 if full else 6000
+    ds = (1.0 / n) ** 0.5
+    dom = D.unit_square(h=1.2 * ds)
+    x = rng.uniform(0, 1, (n, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    k = 64
+    cand = 9 * 8  # 3x3 cells x mean occupancy
+    for name, dt in (("fp64", jnp.float64), ("fp32", jnp.float32),
+                     ("bf16", jnp.bfloat16), ("fp16", jnp.float16)):
+        if name == "fp64" and not jax.config.read("jax_enable_x64"):
+            continue
+        t_all = time_fn(jax.jit(lambda z: nnps.all_list_count(
+            z, dom.radius_norm, dtype=dt)), xn)
+        st = rcll.init_state(dom, xn, dtype=dt)
+        t_rcll = time_fn(jax.jit(lambda r, c: nnps.rcll_neighbors(
+            dom, r, c, dtype=dt, k=k).count), st.rel, st.cell_xy)
+        nbytes = jnp.dtype(dt).itemsize
+        emit("fig13_precision", {
+            "precision": name, "n": n,
+            "all_list_s": f"{t_all:.4f}",
+            "rcll_s": f"{t_rcll:.4f}",
+            "rcll_stream_bytes": coord_bytes(n, 2, nbytes, cand),
+        })
+
+
+if __name__ == "__main__":
+    main()

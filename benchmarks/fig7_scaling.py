@@ -1,0 +1,37 @@
+"""Paper Fig 7: runtime scaling of all-list (O(N^2)) vs cell/RCLL (O(N)).
+
+CPU wall-times (jit, best-of-3) - the scaling exponents and crossover
+are the transferable result; absolute times are CPU-proxy (see _util).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import emit, time_fn
+from repro.core import domain as D, nnps, rcll
+
+
+def main(full: bool = False):
+    rng = np.random.default_rng(0)
+    sizes = (1000, 4000, 16000) + ((64000,) if full else ())
+    k = 64
+    for n in sizes:
+        ds = (1.0 / n) ** 0.5
+        dom = D.unit_square(h=1.2 * ds)
+        x = rng.uniform(0, 1, (n, 2))
+        xn = dom.normalize(jnp.asarray(x))
+        st = rcll.init_state(dom, xn, dtype=jnp.float16)
+
+        t_all = time_fn(jax.jit(lambda z: nnps.all_list_count(
+            z, dom.radius_norm, dtype=jnp.float32)), xn)
+        t_cell = time_fn(jax.jit(lambda z: nnps.cell_list_neighbors(
+            dom, z, dtype=jnp.float32, k=k).count), xn)
+        t_rcll = time_fn(jax.jit(lambda r, c: nnps.rcll_neighbors(
+            dom, r, c, dtype=jnp.float16, k=k).count), st.rel, st.cell_xy)
+        emit("fig7_scaling", {
+            "n": n, "all_list_s": f"{t_all:.4f}",
+            "cell_list_s": f"{t_cell:.4f}", "rcll_s": f"{t_rcll:.4f}"})
+
+
+if __name__ == "__main__":
+    main()

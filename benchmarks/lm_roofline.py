@@ -1,0 +1,37 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md section
+Roofline reads this output verbatim)."""
+import glob
+import json
+import os
+
+from benchmarks._util import emit
+
+
+def main(full: bool = False, dryrun_dir: str = "experiments/dryrun"):
+    files = sorted(glob.glob(os.path.join(dryrun_dir, "*.json")))
+    if not files:
+        emit("lm_roofline", {"note": "no dry-run artifacts; run "
+                             "python -m repro.launch.dryrun --all first"})
+        return
+    for path in files:
+        with open(path) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            emit("lm_roofline", {"arch": rec["arch"], "shape": rec["shape"],
+                                 "mesh": rec["mesh"], "ok": False})
+            continue
+        uf = rec.get("useful_flops_frac")
+        emit("lm_roofline", {
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "variant": rec.get("variant", "baseline"),
+            "probe": rec.get("probe", "raw"),
+            "t_compute_ms": round(rec["t_compute"] * 1e3, 2),
+            "t_memory_ms": round(rec["t_memory"] * 1e3, 2),
+            "t_collective_ms": round(rec["t_collective"] * 1e3, 2),
+            "bottleneck": rec["bottleneck"],
+            "useful_flops_frac": round(uf, 3) if uf else None,
+        })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Render the §Roofline markdown table (+ variant deltas) from the
+dry-run artifacts."""
+import glob
+import json
+import os
+from collections import defaultdict
+
+
+def load(dryrun_dir="experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_ms(x):
+    return f"{x*1e3:.1f}"
+
+
+def main(full=False, dryrun_dir="experiments/dryrun"):
+    recs = [r for r in load(dryrun_dir) if r.get("ok")]
+    base = [r for r in recs
+            if r["mesh"] == "16x16" and r.get("variant", "baseline")
+            == "baseline"]
+    print("| arch | shape | compute ms | memory ms | collective ms |"
+          " bottleneck | useful | probe |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(base, key=lambda r: (r["arch"], r["shape"])):
+        uf = r.get("useful_flops_frac")
+        print(f"| {r['arch']} | {r['shape']} | {fmt_ms(r['t_compute'])} "
+              f"| {fmt_ms(r['t_memory'])} | {fmt_ms(r['t_collective'])} "
+              f"| {r['bottleneck']} | "
+              f"{'' if uf is None else round(uf, 3)} "
+              f"| {r.get('probe', 'raw')} |")
+    variants = [r for r in recs if r.get("variant", "baseline")
+                != "baseline"]
+    if variants:
+        print("\n| arch | shape | variant | compute ms | memory ms |"
+              " collective ms | temp GiB |")
+        print("|---|---|---|---|---|---|---|")
+        for r in sorted(variants,
+                        key=lambda r: (r["arch"], r["shape"],
+                                       r["variant"])):
+            tmp = r["memory"].get("temp_size_in_bytes", 0) / 2**30
+            print(f"| {r['arch']} | {r['shape']} | {r['variant']} "
+                  f"| {fmt_ms(r['t_compute'])} | {fmt_ms(r['t_memory'])} "
+                  f"| {fmt_ms(r['t_collective'])} | {tmp:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Table 1: incorrect in/out determinations for particles on a
+circle of radius 1 disturbed by +-dR, per float precision."""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks._util import emit
+
+
+def main(full: bool = False):
+    rng = np.random.default_rng(7)
+    n = 100
+    theta = rng.uniform(0, 2 * np.pi, n)
+    sign = np.where(rng.uniform(size=n) < 0.5, 1.0, -1.0)
+    for dr in (1e-1, 1e-2, 1e-3, 1e-4, 1e-6, 1e-8):
+        row = {"dR": dr}
+        for name, dt in (("fp32", jnp.float32), ("fp16", jnp.float16)):
+            r_true = 1.0 + sign * dr
+            x = np.stack([r_true * np.cos(theta),
+                          r_true * np.sin(theta)], -1)
+            xl = jnp.asarray(x, dt)
+            d2 = jnp.sum(xl * xl, axis=-1)
+            inside = d2 <= jnp.asarray(1.0, dt)
+            row[name] = int(jnp.sum(inside != (sign < 0)))
+        emit("table1_circle", row)
+
+
+if __name__ == "__main__":
+    main()

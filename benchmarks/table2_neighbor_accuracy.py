@@ -1,0 +1,85 @@
+"""Paper Table 2: % incorrect neighbor determinations vs particle
+spacing, for absolute-coordinate fp16 (all-list == link-list) vs RCLL.
+
+Two protocols reported (DESIGN.md):
+  orig   - truth = fp32 determinations on the ORIGINAL coordinates
+           (includes fp16 storage quantization, the paper's framing);
+  stored - truth = fp32 determinations on the STORED coordinates (in
+           approach III the stored state IS the position; this isolates
+           arithmetic error and is exactly 0 in the TPU-native
+           fp16-storage/fp32-compute mode).
+
+Default sizes are scaled to CPU time; --full sweeps down to ds=5e-4
+(N=4e6 equivalent via the elongated-domain construction).
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks._util import emit
+from repro.core import domain as D, nnps, rcll
+
+
+def cell_counts(dom, xn, dtype, k):
+    return nnps.cell_list_neighbors(dom, xn, dtype=dtype, k=k)
+
+
+def main(full: bool = False):
+    rng = np.random.default_rng(0)
+    # unit square, N = 1/ds^2 (paper's construction), capped for CPU
+    ds_list = (0.01, 0.005, 0.002) + ((0.00125, 0.001) if full else ())
+    k = 64
+    for ds in ds_list:
+        n = int(round(1.0 / ds**2))
+        dom = D.unit_square(h=1.2 * ds)
+        x = rng.uniform(0, 1, (n, 2))
+        xn = dom.normalize(jnp.asarray(x))
+        truth = cell_counts(dom, xn, jnp.float32, k)
+        total = int(jnp.sum(truth.count))
+        abs16 = cell_counts(dom, xn, jnp.float16, k)
+        st = rcll.init_state(dom, xn, dtype=jnp.float16)
+        rcll16 = nnps.rcll_neighbors(dom, st.rel, st.cell_xy,
+                                     dtype=jnp.float16, k=k)
+        rcll16_f32c = nnps.rcll_neighbors(dom, st.rel, st.cell_xy,
+                                          dtype=jnp.float16,
+                                          compute_dtype=jnp.float32, k=k)
+        xq = rcll.to_normalized(dom, st)
+        truth_stored = cell_counts(dom, xq, jnp.float32, k)
+        wrong = lambda t, a: 100.0 * int(
+            nnps.count_wrong_determinations(t, a)) / max(total, 1)
+        emit("table2_accuracy", {
+            "ds": ds, "n": n,
+            "abs_fp16_pct": round(wrong(truth, abs16), 4),
+            "rcll_fp16_pct": round(wrong(truth, rcll16), 4),
+            "rcll_fp16_stored_pct": round(
+                wrong(truth_stored, rcll16), 4),
+            "rcll_fp16_f32compute_stored_pct": round(
+                wrong(truth_stored, rcll16_f32c), 4),
+        })
+    # elongated domain: same normalized spacing as the paper's finest
+    # rows without 1e6 particles (ds/h_d = 1.25e-4 ~ paper ds=2.5e-4)
+    for span in (40.0, 160.0):
+        n = 4000
+        ds = 0.02
+        dom = D.Domain(lo=(0.0, 0.0), hi=(span, 1.0), h=1.2 * ds)
+        x = np.stack([rng.uniform(0, span, n), rng.uniform(0, 1, n)], -1)
+        xn = dom.normalize(jnp.asarray(x))
+        truth = cell_counts(dom, xn, jnp.float32, k)
+        total = int(jnp.sum(truth.count))
+        abs16 = cell_counts(dom, xn, jnp.float16, k)
+        st = rcll.init_state(dom, xn, dtype=jnp.float16)
+        rcll16 = nnps.rcll_neighbors(dom, st.rel, st.cell_xy,
+                                     dtype=jnp.float16,
+                                     compute_dtype=jnp.float32, k=k)
+        emit("table2_accuracy_elongated", {
+            "ds_over_hd": ds / span, "n": n,
+            "abs_fp16_pct": round(100.0 * int(
+                nnps.count_wrong_determinations(truth, abs16))
+                / max(total, 1), 3),
+            "rcll_fp16_pct": round(100.0 * int(
+                nnps.count_wrong_determinations(truth, rcll16))
+                / max(total, 1), 4),
+        })
+
+
+if __name__ == "__main__":
+    main()

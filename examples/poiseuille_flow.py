@@ -1,0 +1,73 @@
+"""End-to-end SPH driver: 2D Poiseuille flow with the mixed-precision
+RCLL framework (the paper's validation problem, Table 4/5, Figs 11-12).
+
+Runs the full WCSPH solver (continuity + momentum + Morris viscosity +
+Eq. 8 persistent relative coordinates), compares the velocity profile to
+the analytic transient solution, and reports the approach I vs III
+discrepancy.
+
+  PYTHONPATH=src python examples/poiseuille_flow.py [--ds 0.05] [--t 0.2]
+"""
+import argparse
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import cases, solver
+from repro.core.precision import PrecisionPolicy
+
+
+def run(ds: float, t_end: float, algo: str, policy: PrecisionPolicy):
+    case = cases.PoiseuilleCase(ds=ds, Lx=0.4, algo=algo, policy=policy)
+    cfg, st = case.build()
+    nsteps = int(round(t_end / cfg.dt))
+    out = solver.simulate(cfg, st, nsteps)
+    return case, cfg, st, out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ds", type=float, default=0.05)
+    ap.add_argument("--t", type=float, default=0.2)
+    args = ap.parse_args()
+
+    print(f"# Poiseuille, ds={args.ds}, to t={args.t}")
+    case, cfg, st0, out3 = run(args.ds, args.t, "rcll",
+                               PrecisionPolicy(nnps="fp16", coords="fp16"))
+    _, cfg1, _, out1 = run(args.ds, args.t, "cell",
+                           PrecisionPolicy(nnps="fp32", coords="fp32"))
+
+    pos = solver.positions(cfg, out3)
+    fl = ~np.asarray(st0.fixed)
+    y = np.asarray(pos[:, 1])[fl]
+    vx = np.asarray(out3.fluid.v[:, 0])[fl]
+    va = np.asarray(case.analytic_vx(jnp.asarray(y), float(out3.t)))
+    print(f"t = {float(out3.t):.3f}  steps = {int(out3.t / cfg.dt)}")
+    print(f"v_max  simulated {vx.max():.5f}  analytic {va.max():.5f}")
+    print(f"velocity L_inf error vs analytic: "
+          f"{np.abs(vx - va).max() / va.max():.3f} (relative)")
+
+    # approach I vs III (paper Table 5: III tracks I)
+    p1 = np.asarray(solver.positions(cfg1, out1))[fl]
+    p3 = np.asarray(pos)[fl]
+    print(f"approach I vs III max position gap: "
+          f"{np.abs(p1 - p3).max() / args.ds:.4f} ds")
+
+    # crude ASCII profile
+    print("\nvelocity profile (x = analytic, o = SPH):")
+    bins = np.linspace(0, 1, 21)
+    for lo, hi in zip(bins[:-1], bins[1:]):
+        sel = (y >= lo) & (y < hi)
+        if not sel.any():
+            continue
+        vsim = vx[sel].mean()
+        vana = float(case.analytic_vx(
+            jnp.asarray([(lo + hi) / 2]), float(out3.t))[0])
+        row = [" "] * 52
+        row[int(50 * vana / (va.max() + 1e-9))] = "x"
+        row[int(50 * vsim / (va.max() + 1e-9))] = "o"
+        print(f"y={lo:.2f} |" + "".join(row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end LM training driver with fault tolerance: trains a reduced
+assigned-architecture config for a few hundred steps on CPU, with
+checkpoint/restart, heartbeats, and straggler watchdog.
+
+  PYTHONPATH=src python examples/train_lm.py --arch llama3.2-3b \
+      --steps 200 --ckpt-dir /tmp/lm_ckpt
+
+Kill it at any point and rerun: it resumes from the last complete
+checkpoint with the data iterator skipped ahead (bitwise-identical to an
+uninterrupted run - tests/test_integration.py asserts this).
+
+On a real pod the same TrainRun drives the production mesh; the dry-run
+(repro.launch.dryrun) proves the full-size configs lower and compile on
+(16,16) and (2,16,16).
+"""
+import argparse
+
+from repro.launch.train import TrainRun
+from repro.models import registry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b",
+                    choices=registry.ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (multi-billion-param) config - "
+                    "needs a real pod, not this CPU container")
+    args = ap.parse_args()
+
+    run = TrainRun(
+        arch=args.arch,
+        smoke=not args.full_config,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        lr=args.lr,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=50,
+        heartbeat_dir=args.ckpt_dir + "/hb",
+        log_every=20,
+    )
+    out = run.run()
+    losses = out["losses"]
+    if losses:
+        k = max(1, len(losses) // 10)
+        print(f"[example] loss: first-{k}-mean "
+              f"{sum(losses[:k]) / k:.4f} -> last-{k}-mean "
+              f"{sum(losses[-k:]) / k:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""lpNNPS4SPH-JAX: mixed-precision SPH with cell-based relative coordinates
+on TPU, plus the assigned 10-architecture LM stack. See DESIGN.md."""
+__version__ = "0.1.0"

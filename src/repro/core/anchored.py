@@ -1,0 +1,110 @@
+"""Anchored mixed-precision arrays: the RCLL decomposition, generalized.
+
+RCLL stores ``position = cell_center(int index) + h_c/2 * residual(fp16)``
+with the residual normalized to [-1, 1]. The identical decomposition
+applies to any memory-bound tensor whose values are *locally clustered*:
+
+    value = anchor(block, fp32) + scale(block, fp32) * residual(lo)
+
+with the residual normalized into [-1, 1] per block. We use it in three
+places (DESIGN.md section 2):
+  1. SPH coordinates (the paper, via core.rcll - specialized because the
+     anchor grid is spatial);
+  2. RCLL-KV: block-anchored quantized KV caches for LM decode;
+  3. anchored gradient compression for data-parallel all-reduce.
+
+Residual dtypes: fp16 / bf16 / int8 (symmetric, 127 levels).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class Anchored(NamedTuple):
+    """Block-anchored representation of an array.
+
+    The blocked axis is folded as (..., nblocks, block_size, trailing...).
+    anchor/scale have block_size dim of 1 (broadcastable).
+    """
+
+    anchor: Array  # fp32, (..., nblocks, 1, ...)
+    scale: Array  # fp32, (..., nblocks, 1, ...)
+    residual: Array  # lo dtype, (..., nblocks, block_size, ...)
+    axis: int  # original blocked axis (static metadata)
+    orig_len: int  # original length along axis (for unpadding)
+
+
+def _to_blocks(x: Array, axis: int, block: int) -> tuple[Array, int]:
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    pad = (-n) % block
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        # edge padding keeps padded entries inside the data range, so
+        # they never inflate the per-block scale (zero-padding would
+        # wreck blocks whose data sits far from zero - the exact failure
+        # mode anchoring exists to avoid).
+        x = jnp.pad(x, widths, mode="edge")
+    shape = list(x.shape)
+    shape[axis : axis + 1] = [shape[axis] // block, block]
+    return x.reshape(shape), n
+
+
+def encode(
+    x: Array,
+    *,
+    block: int,
+    axis: int = -1,
+    dtype=jnp.float16,
+    eps: float = 1e-30,
+) -> Anchored:
+    """Encode x into anchor + scaled low-precision residual.
+
+    anchor = per-block mean, scale = per-block max|x - anchor| (so the
+    residual exactly spans [-1, 1], maximizing low-precision mantissa use -
+    the same normalization the paper applies in Eqs. 5-6).
+    """
+    axis = axis % x.ndim
+    xb, orig_len = _to_blocks(x.astype(jnp.float32), axis, block)
+    bax = axis + 1  # the within-block axis after reshape
+    anchor = jnp.mean(xb, axis=bax, keepdims=True)
+    dev = xb - anchor
+    scale = jnp.max(jnp.abs(dev), axis=bax, keepdims=True)
+    scale = jnp.maximum(scale, eps)
+    resid = dev / scale
+    if jnp.dtype(dtype) == jnp.int8:
+        resid = jnp.clip(jnp.round(resid * 127.0), -127, 127).astype(jnp.int8)
+    else:
+        resid = resid.astype(dtype)
+    return Anchored(anchor, scale, resid, axis, orig_len)
+
+
+def decode(a: Anchored, dtype=jnp.float32) -> Array:
+    """Reconstruct the original array (high precision)."""
+    resid = a.residual
+    if resid.dtype == jnp.int8:
+        resid = resid.astype(jnp.float32) / 127.0
+    else:
+        resid = resid.astype(jnp.float32)
+    xb = a.anchor + a.scale * resid
+    shape = list(xb.shape)
+    shape[a.axis : a.axis + 2] = [shape[a.axis] * shape[a.axis + 1]]
+    x = xb.reshape(shape)
+    idx = [slice(None)] * x.ndim
+    idx[a.axis] = slice(0, a.orig_len)
+    return x[tuple(idx)].astype(dtype)
+
+
+def quantization_error_bound(a: Anchored) -> Array:
+    """Per-block worst-case absolute reconstruction error."""
+    if a.residual.dtype == jnp.int8:
+        step = 1.0 / 127.0
+    else:
+        step = float(jnp.finfo(a.residual.dtype).eps)
+    return a.scale * step

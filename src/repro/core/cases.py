@@ -1,0 +1,170 @@
+"""Benchmark cases: 2D Poiseuille flow (Morris 1997 / paper refs 40,42)
+and the cubic-function gradient-accuracy field (paper Table 3).
+
+Poiseuille: flow between plates y=0 and y=L driven by body force F, no-slip
+walls, periodic in x. Analytic transient (series) solution:
+
+  v_x(y,t) = F/(2 nu) * y (L - y)
+           - sum_n 4 F L^2 / (nu pi^3 (2n+1)^3) * sin(pi y (2n+1)/L)
+             * exp(-(2n+1)^2 pi^2 nu t / L^2)
+
+Nondimensional defaults: L=1, nu=1, v_max = F L^2 / (8 nu).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solver as solver_lib
+from repro.core.domain import Domain
+from repro.core.precision import PrecisionPolicy
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class PoiseuilleCase:
+    ds: float = 0.025
+    L: float = 1.0  # channel width (y)
+    Lx: float = 0.4  # periodic streamwise extent
+    nu: float = 1.0
+    rho0: float = 1.0
+    v_max: float = 0.125
+    n_wall: int = 3  # dummy-particle wall layers per side
+    algo: str = "rcll"
+    policy: PrecisionPolicy = PrecisionPolicy()
+    max_neighbors: int = 40
+    cfl: float = 0.125
+
+    @property
+    def F(self) -> float:
+        return 8.0 * self.nu * self.v_max / (self.L * self.L)
+
+    @property
+    def c0(self) -> float:
+        return 10.0 * self.v_max
+
+    @property
+    def h(self) -> float:
+        return 1.2 * self.ds
+
+    @property
+    def dt(self) -> float:
+        dt_visc = self.cfl * self.h * self.h / self.nu
+        dt_acoustic = 0.25 * self.h / self.c0
+        dt_force = 0.25 * np.sqrt(self.h / max(self.F, 1e-12))
+        return float(min(dt_visc, dt_acoustic, dt_force))
+
+    def domain(self) -> Domain:
+        wall = self.n_wall * self.ds
+        return Domain(
+            lo=(0.0, -wall),
+            hi=(self.Lx, self.L + wall),
+            h=self.h,
+            periodic=(True, False),
+        )
+
+    def build(self) -> tuple[solver_lib.SPHConfig, solver_lib.SPHState]:
+        ds, L = self.ds, self.L
+        nx = int(round(self.Lx / ds))
+        xs = (np.arange(nx) + 0.5) * ds
+        # fluid rows in (0, L); wall rows outside
+        ys_fluid = (np.arange(int(round(L / ds))) + 0.5) * ds
+        ys_wall_lo = -(np.arange(self.n_wall) + 0.5) * ds
+        ys_wall_hi = L + (np.arange(self.n_wall) + 0.5) * ds
+        ys = np.concatenate([ys_fluid, ys_wall_lo, ys_wall_hi])
+        fixed_rows = np.concatenate(
+            [np.zeros_like(ys_fluid, bool),
+             np.ones_like(ys_wall_lo, bool),
+             np.ones_like(ys_wall_hi, bool)]
+        )
+        X, Y = np.meshgrid(xs, ys, indexing="ij")
+        pos = np.stack([X.ravel(), Y.ravel()], axis=-1)
+        fixed = np.broadcast_to(fixed_rows[None, :], X.shape).ravel().copy()
+        n = pos.shape[0]
+        m = np.full((n,), self.rho0 * ds * ds)
+        rho = np.full((n,), self.rho0)
+        v = np.zeros((n, 2))
+        cfg = solver_lib.SPHConfig(
+            domain=self.domain(),
+            ds=ds,
+            dt=self.dt,
+            rho0=self.rho0,
+            c0=self.c0,
+            mu=self.rho0 * self.nu,
+            body_force=(self.F, 0.0),
+            max_neighbors=self.max_neighbors,
+            algo=self.algo,
+            policy=self.policy,
+        )
+        state = solver_lib.init_state(
+            cfg, pos, v, m, rho, fixed=jnp.asarray(fixed)
+        )
+        return cfg, state
+
+    def analytic_vx(self, y: Array, t: float, nterms: int = 60) -> Array:
+        """Transient series solution (paper ref [42], Morris 1997)."""
+        F, nu, L = self.F, self.nu, self.L
+        y = jnp.asarray(y)
+        steady = F / (2.0 * nu) * y * (L - y)
+        total = steady
+        for n in range(nterms):
+            k = 2 * n + 1
+            term = (
+                4.0 * F * L * L / (nu * np.pi**3 * k**3)
+                * jnp.sin(np.pi * y * k / L)
+                * np.exp(-(k**2) * np.pi**2 * nu * t / (L * L))
+            )
+            total = total - term
+        return total
+
+    def analytic_displacement(self, y: Array, t: float,
+                              nterms: int = 60) -> Array:
+        """x-displacement = integral of analytic_vx over [0, t] (Table 5)."""
+        F, nu, L = self.F, self.nu, self.L
+        y = jnp.asarray(y)
+        disp = F / (2.0 * nu) * y * (L - y) * t
+        for n in range(nterms):
+            k = 2 * n + 1
+            lam = (k**2) * np.pi**2 * nu / (L * L)
+            term = (
+                4.0 * F * L * L / (nu * np.pi**3 * k**3)
+                * jnp.sin(np.pi * y * k / L)
+                * (1.0 - np.exp(-lam * t)) / lam
+            )
+            disp = disp - term
+        return disp
+
+
+def gradient_test_particles(
+    ds: float, jitter: float = 0.2, seed: int = 0, dim: int = 2
+) -> tuple[Domain, np.ndarray]:
+    """Unit-domain particle set for the f(x)=x^3 gradient study (Table 3).
+
+    Jitter breaks lattice symmetry so the gradient operator is actually
+    exercised off the trivial symmetric case (and avoids exact-boundary
+    distance ties that make low-precision comparisons ill-posed).
+    """
+    h = 1.2 * ds
+    if dim == 2:
+        dom = Domain(lo=(0.0, 0.0), hi=(1.0, 1.0), h=h)
+    else:
+        dom = Domain(lo=(0.0,) * dim, hi=(1.0,) * dim, h=h)
+    axes = [np.arange(ds / 2, 1.0, ds) for _ in range(dim)]
+    grid = np.meshgrid(*axes, indexing="ij")
+    x = np.stack([g.ravel() for g in grid], axis=-1).astype(np.float64)
+    rng = np.random.default_rng(seed)
+    x = x + rng.uniform(-jitter * ds, jitter * ds, size=x.shape)
+    x = np.clip(x, 1e-6, 1.0 - 1e-6)
+    return dom, x
+
+
+def cubic_field(x: Array) -> Array:
+    """f = x^3 (the paper's Table 3 test function, applied to axis 0)."""
+    return x[..., 0] ** 3
+
+
+def cubic_gradient_x(x: Array) -> Array:
+    return 3.0 * x[..., 0] ** 2

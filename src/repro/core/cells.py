@@ -1,0 +1,142 @@
+"""Static-capacity background-cell binning (the TPU-native 'link list').
+
+CUDA link lists are pointer-chasing structures; XLA/TPU need static shapes.
+A cell table of shape (ncells_total, capacity) holding particle indices
+(-1 = empty) is the dense equivalent. Building it via a stable sort by flat
+cell id doubles as the paper's Thrust xy-sort locality optimization: after
+binning, particles that share a cell are contiguous, and row-major cell
+order means adjacent cells are adjacent in memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.domain import Domain
+
+Array = jnp.ndarray
+
+
+class CellBinning(NamedTuple):
+    """Result of binning N particles into the background grid.
+
+    table:     (ncells_total, capacity) int32 particle ids, -1 padded.
+    counts:    (ncells_total,) int32 occupancy (may exceed capacity; the
+               table silently drops overflow - check ``overflow`` at runtime).
+    cell_id:   (N,) int32 flat cell id per particle.
+    cell_xy:   (N, dim) int32 per-axis cell coordinates per particle.
+    order:     (N,) int32 spatial sort permutation (particles sorted by cell).
+    overflow:  () int32 number of particles dropped from the table.
+    """
+
+    table: Array
+    counts: Array
+    cell_id: Array
+    cell_xy: Array
+    order: Array
+    overflow: Array
+
+
+def bin_particles(domain: Domain, xn: Array, capacity: int) -> CellBinning:
+    """Assign particles (normalized coords ``xn``) to cells.
+
+    Args:
+      domain: static Domain.
+      xn: (N, dim) normalized absolute coordinates (fp32+; binning is a
+          hi-precision operation - only *distances* go low-precision).
+      capacity: static max particles per cell.
+    """
+    cell_xy = domain.cell_coords_of(xn)
+    cell_id = domain.flat_cell_id(cell_xy)
+    return bin_by_cell_id(domain, cell_id, cell_xy, capacity)
+
+
+def bin_by_cell_id(
+    domain: Domain, cell_id: Array, cell_xy: Array, capacity: int
+) -> CellBinning:
+    """Bin from a *precomputed* cell assignment (the RCLL persistent path).
+
+    RCLL maintains (cell index, relative coordinate) as the source of truth
+    (paper Eq. 8); binning must respect that assignment rather than
+    recomputing it from absolute positions (which RCLL never materializes).
+    """
+    n_total = domain.ncells_total
+    npart = cell_id.shape[0]
+
+    # Stable sort by cell id == spatial sort (paper's locality optimization).
+    order = jnp.argsort(cell_id, stable=True).astype(jnp.int32)
+    sorted_cid = cell_id[order]
+
+    counts = jnp.bincount(cell_id, length=n_total).astype(jnp.int32)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)[:-1]]
+    )
+    slot = jnp.arange(npart, dtype=jnp.int32) - starts[sorted_cid]
+
+    keep = slot < capacity
+    overflow = jnp.sum(~keep).astype(jnp.int32)
+    # Route dropped entries to a scratch row we slice off afterwards.
+    safe_cid = jnp.where(keep, sorted_cid, n_total)
+    safe_slot = jnp.where(keep, slot, 0)
+    table = jnp.full((n_total + 1, capacity), -1, dtype=jnp.int32)
+    table = table.at[safe_cid, safe_slot].set(order, mode="drop")
+    return CellBinning(
+        table=table[:n_total],
+        counts=counts,
+        cell_id=cell_id,
+        cell_xy=cell_xy,
+        order=order,
+        overflow=overflow,
+    )
+
+
+def neighbor_cell_offsets(dim: int) -> np.ndarray:
+    """All 3^dim offsets in {-1,0,1}^dim (static, host-side)."""
+    grids = np.meshgrid(*([np.array([-1, 0, 1])] * dim), indexing="ij")
+    return np.stack([g.ravel() for g in grids], axis=-1).astype(np.int32)
+
+
+def candidate_cells(domain: Domain, cell_xy: Array) -> tuple[Array, Array]:
+    """For each particle, the flat ids of its 3^dim neighborhood cells.
+
+    Returns (nb_flat (N, 3^dim) int32, nb_valid (N, 3^dim) bool). Periodic
+    axes wrap; non-periodic out-of-range cells are flagged invalid.
+    """
+    offs = jnp.asarray(neighbor_cell_offsets(domain.dim))  # (M, dim)
+    nb = cell_xy[:, None, :] + offs[None, :, :]  # (N, M, dim)
+    n = jnp.asarray(domain.ncells, dtype=jnp.int32)
+    per = jnp.asarray(np.asarray(domain.periodic))
+    wrapped = jnp.where(per, nb % n, nb)
+    valid = jnp.all((wrapped >= 0) & (wrapped < n), axis=-1)
+    clipped = jnp.clip(wrapped, 0, n - 1)
+    flat = clipped[..., 0]
+    for a in range(1, domain.dim):
+        flat = flat * domain.ncells[a] + clipped[..., a]
+    return flat.astype(jnp.int32), valid
+
+
+def gather_candidates(
+    domain: Domain, binning: CellBinning
+) -> tuple[Array, Array]:
+    """Candidate particle ids from each particle's 3^dim cell neighborhood.
+
+    Returns:
+      cand: (N, 3^dim * capacity) int32 particle ids (invalid -> 0, masked).
+      mask: (N, 3^dim * capacity) bool validity (slot occupied & cell valid).
+    """
+    nb_flat, nb_valid = candidate_cells(domain, binning.cell_xy)
+    cand = binning.table[nb_flat]  # (N, M, cap)
+    mask = (cand >= 0) & nb_valid[:, :, None]
+    npart = binning.cell_id.shape[0]
+    cand = jnp.where(mask, cand, 0)
+    return cand.reshape(npart, -1), mask.reshape(npart, -1)
+
+
+def default_capacity(domain: Domain, n_particles: int, safety: float = 3.0) -> int:
+    """Static per-cell capacity estimate: mean occupancy x safety, >= 4."""
+    mean = n_particles / max(1, domain.ncells_total)
+    cap = int(np.ceil(mean * safety)) + 2
+    return max(4, cap)

@@ -1,0 +1,237 @@
+"""Domain specification and coordinate normalization (paper Eqs. 5-6).
+
+The paper normalizes all coordinates twice:
+  1. Eq. (5): absolute coordinates -> [-1, 1] over the *longest* domain span
+     h_d, so every axis shares one scale (preserves isotropy of distances).
+  2. Eq. (6): within each background cell, coordinates are re-expressed
+     relative to the cell center and normalized to [-1, 1] by the cell size.
+
+Cell sizes are *per axis*: on periodic axes the grid must tile the span
+exactly (ncells = floor(span/target), cell = span/ncells >= radius), on
+wall axes we use ceil with cell = cell_factor * radius and let the grid
+overhang the box (harmless without wrap). RCLL distance math works in
+"reference cell units" with O(1) per-axis anisotropy weights
+w_a = hc_a / hc_ref, so fp16 never sees tiny absolute scales (DESIGN.md
+section 2).
+
+All functions take an explicit ``dtype`` so that precision is a *policy*,
+never an ambient global (see repro.core.precision).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    """Static (trace-time) description of the simulation box.
+
+    Attributes:
+      lo / hi: physical bounds per axis, python floats (static).
+      h: SPH smoothing length (physical units). Search radius is ``2*h``.
+      cell_factor: target cell size as a multiple of the search radius (>=1).
+      periodic: per-axis periodic wrap flags.
+    """
+
+    lo: tuple[float, ...]
+    hi: tuple[float, ...]
+    h: float
+    cell_factor: float = 1.0
+    periodic: tuple[bool, ...] = ()
+
+    def __post_init__(self):
+        if not self.periodic:
+            object.__setattr__(self, "periodic", (False,) * self.dim)
+        assert len(self.lo) == len(self.hi) == len(self.periodic)
+        assert self.cell_factor >= 1.0
+        for a, p in enumerate(self.periodic):
+            if p:
+                assert self.ncells[a] >= 3, (
+                    f"periodic axis {a} needs >= 3 cells "
+                    f"(span {self.spans[a]}, radius {self.radius}); the "
+                    "3-cell neighborhood would alias otherwise"
+                )
+
+    # ---- static geometry -------------------------------------------------
+    @property
+    def dim(self) -> int:
+        return len(self.lo)
+
+    @property
+    def spans(self) -> tuple[float, ...]:
+        return tuple(h - l for l, h in zip(self.lo, self.hi))
+
+    @property
+    def h_d(self) -> float:
+        """Maximum domain span (the paper's h_d, Eq. 5)."""
+        return max(self.spans)
+
+    @property
+    def radius(self) -> float:
+        """Physical search radius 2h."""
+        return 2.0 * self.h
+
+    @property
+    def radius_norm(self) -> float:
+        """Search radius in normalized coordinates (length L -> 2L/h_d)."""
+        return 2.0 * self.radius / self.h_d
+
+    @property
+    def ncells(self) -> tuple[int, ...]:
+        """Cells per axis: exact tiling (floor) on periodic axes, ceil on
+        wall axes. Cell size >= search radius is preserved either way."""
+        target = self.cell_factor * self.radius
+        out = []
+        for s, p in zip(self.spans, self.periodic):
+            if p:
+                out.append(max(1, int(np.floor(s / target + 1e-9))))
+            else:
+                out.append(max(1, int(np.ceil(s / target - 1e-9))))
+        return tuple(out)
+
+    @property
+    def cell_sizes(self) -> tuple[float, ...]:
+        """Physical cell edge per axis (>= search radius)."""
+        target = self.cell_factor * self.radius
+        return tuple(
+            s / n if p else target
+            for s, n, p in zip(self.spans, self.ncells, self.periodic)
+        )
+
+    @property
+    def ncells_total(self) -> int:
+        return int(np.prod(self.ncells))
+
+    @property
+    def hc_norm_axes(self) -> tuple[float, ...]:
+        """Cell edges in normalized coordinates (the paper's h_c, per axis)."""
+        return tuple(2.0 * c / self.h_d for c in self.cell_sizes)
+
+    @property
+    def hc_ref(self) -> float:
+        """Reference (minimum) normalized cell edge for RCLL cell units."""
+        return min(self.hc_norm_axes)
+
+    @property
+    def cell_weights(self) -> tuple[float, ...]:
+        """O(1) anisotropy weights w_a = hc_a / hc_ref (>= 1, ~1)."""
+        ref = self.hc_ref
+        return tuple(c / ref for c in self.hc_norm_axes)
+
+    # ---- Eq. (5): absolute -> normalized [-1, 1] --------------------------
+    def normalize(self, x: Array, dtype=jnp.float32) -> Array:
+        """x' = (2 x0 - (xmax + xmin)) / h_d  (paper Eq. 5), per axis."""
+        lo = jnp.asarray(self.lo, dtype=dtype)
+        hi = jnp.asarray(self.hi, dtype=dtype)
+        hd = jnp.asarray(self.h_d, dtype=dtype)
+        x = x.astype(dtype)
+        return (2.0 * x - (hi + lo)) / hd
+
+    def denormalize(self, xn: Array, dtype=jnp.float32) -> Array:
+        lo = jnp.asarray(self.lo, dtype=dtype)
+        hi = jnp.asarray(self.hi, dtype=dtype)
+        hd = jnp.asarray(self.h_d, dtype=dtype)
+        return (xn.astype(dtype) * hd + (hi + lo)) / 2.0
+
+    # Normalized lower corner of the cell grid (cells tile from the lo corner).
+    @property
+    def origin_norm(self) -> tuple[float, ...]:
+        lo = np.asarray(self.lo)
+        hi = np.asarray(self.hi)
+        hd = self.h_d
+        return tuple((2.0 * lo - (hi + lo)) / hd)
+
+    # ---- Eq. (6): normalized absolute -> cell-relative [-1, 1] -----------
+    def cell_center_norm(self, cell_coords: Array, dtype=jnp.float32) -> Array:
+        """Normalized coordinates of a cell center given integer cell coords."""
+        org = jnp.asarray(self.origin_norm, dtype=dtype)
+        hc = jnp.asarray(self.hc_norm_axes, dtype=dtype)
+        return org + (cell_coords.astype(dtype) + 0.5) * hc
+
+    def to_relative(
+        self, xn: Array, cell_coords: Array, dtype=jnp.float16
+    ) -> Array:
+        """x = 2 (x' - x'_cc) / h_c (paper Eq. 6); result nominally in [-1,1].
+
+        The subtraction happens in fp32 (exact to fp32 precision), only the
+        *storage* of the small relative value is low precision - this is the
+        entire point of RCLL: relative values are O(1) so fp16's ~3 decimal
+        digits are plenty.
+        """
+        cc = self.cell_center_norm(cell_coords, dtype=jnp.float32)
+        hc = jnp.asarray(self.hc_norm_axes, dtype=jnp.float32)
+        rel = 2.0 * (xn.astype(jnp.float32) - cc) / hc
+        return rel.astype(dtype)
+
+    def from_relative(
+        self, rel: Array, cell_coords: Array, dtype=jnp.float32
+    ) -> Array:
+        """Inverse of Eq. (6): x' = x'_cc + x * h_c / 2 (hi-precision decode)."""
+        cc = self.cell_center_norm(cell_coords, dtype=dtype)
+        hc = jnp.asarray(self.hc_norm_axes, dtype=dtype)
+        return cc + rel.astype(dtype) * (hc / 2.0)
+
+    # ---- cell arithmetic ---------------------------------------------------
+    def cell_coords_of(self, xn: Array) -> Array:
+        """Integer cell coordinates of normalized positions (clipped)."""
+        org = jnp.asarray(self.origin_norm, dtype=jnp.float32)
+        hc = jnp.asarray(self.hc_norm_axes, dtype=jnp.float32)
+        c = jnp.floor((xn.astype(jnp.float32) - org) / hc)
+        n = jnp.asarray(self.ncells, dtype=jnp.int32)
+        return jnp.clip(c.astype(jnp.int32), 0, n - 1)
+
+    def flat_cell_id(self, cell_coords: Array) -> Array:
+        """Row-major flatten of per-axis cell coordinates.
+
+        Row-major order of a regular grid is itself the paper's 'sort by x
+        then y' locality optimization (see DESIGN.md section 2).
+        """
+        n = self.ncells
+        flat = cell_coords[..., 0].astype(jnp.int32)
+        for a in range(1, self.dim):
+            flat = flat * n[a] + cell_coords[..., a].astype(jnp.int32)
+        return flat
+
+    def unflatten_cell_id(self, flat: Array) -> Array:
+        n = self.ncells
+        coords = []
+        rem = flat.astype(jnp.int32)
+        for a in range(self.dim - 1, 0, -1):
+            coords.append(rem % n[a])
+            rem = rem // n[a]
+        coords.append(rem)
+        return jnp.stack(coords[::-1], axis=-1)
+
+    def wrap_cell_delta(self, delta: Array) -> Array:
+        """Minimum-image wrap of integer cell-coordinate deltas (periodic axes)."""
+        n = np.asarray(self.ncells, dtype=np.int32)
+        per = np.asarray(self.periodic)
+        half = jnp.asarray(n // 2, dtype=jnp.int32)
+        nn = jnp.asarray(n, dtype=jnp.int32)
+        wrapped = ((delta + half) % nn) - half
+        return jnp.where(jnp.asarray(per), wrapped, delta)
+
+
+def unit_square(h: float, **kw) -> Domain:
+    return Domain(lo=(0.0, 0.0), hi=(1.0, 1.0), h=h, **kw)
+
+
+def unit_cube(h: float, **kw) -> Domain:
+    return Domain(lo=(0.0, 0.0, 0.0), hi=(1.0, 1.0, 1.0), h=h, **kw)
+
+
+def lattice_positions(domain: Domain, ds: float, jitter: float = 0.0,
+                      seed: int = 0) -> np.ndarray:
+    """Regular particle lattice with optional jitter (numpy, host-side)."""
+    axes = [np.arange(lo + ds / 2, hi, ds) for lo, hi in zip(domain.lo, domain.hi)]
+    grid = np.meshgrid(*axes, indexing="ij")
+    x = np.stack([g.ravel() for g in grid], axis=-1).astype(np.float64)
+    if jitter > 0.0:
+        rng = np.random.default_rng(seed)
+        x = x + rng.uniform(-jitter * ds, jitter * ds, size=x.shape)
+    return x

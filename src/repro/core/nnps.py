@@ -1,0 +1,382 @@
+"""Nearest Neighboring Particle Search (NNPS) algorithms.
+
+Three searches, as in the paper:
+  * ``all_list_*``   - O(N^2) brute force (paper Fig. 3a), any dtype.
+  * ``cell_list_*``  - background-cell candidates + *absolute* normalized
+                       coordinates in the search dtype (paper approach II
+                       when dtype=fp16).
+  * ``rcll_*``       - background-cell candidates + *cell-relative*
+                       coordinates stored in the search dtype (the paper's
+                       contribution, approach III).
+
+Distance semantics: searches faithfully model the low-precision pipeline -
+coordinates are *stored* in ``dtype`` and differences/squares/sums are
+computed in ``dtype`` (fp16 hardware arithmetic on the A100; VPU fp32-with-
+fp16-storage on TPU is the adaptation, but interpretation here keeps the
+paper's arithmetic so accuracy tables reproduce).
+
+RCLL distances use cell units (Eq. 7 divided by the constant h_c/2):
+
+    du = (x_i - x_j)/2 + (I - J)        # I, J integer cell coords
+    r_cell^2 = du^2 + dv^2 (+ dw^2)
+    neighbor  <=>  r_cell <= radius/(h_c/2)
+
+which is the paper's Eq. (7) up to one exact global scale. Working in cell
+units is strictly better for fp16: all quantities are O(1), no tiny
+products. Periodic axes use minimum-image on the integer cell delta - an
+*exact* wrap (the paper's domains are non-periodic; this is needed for the
+Poiseuille channel).
+
+Outputs are static-shape neighbor lists (idx, mask, count) - XLA/TPU have
+no dynamic shapes, so K = max_neighbors is a static capacity and ``count``
+lets callers detect overflow.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cells as cells_lib
+from repro.core.domain import Domain
+
+Array = jnp.ndarray
+
+
+class NeighborList(NamedTuple):
+    """Static-capacity neighbor list.
+
+    idx:   (N, K) int32 neighbor particle ids (garbage where ~mask).
+    mask:  (N, K) bool valid-slot flags.
+    count: (N,)   int32 true neighbor count (may exceed K -> overflow).
+    """
+
+    idx: Array
+    mask: Array
+    count: Array
+
+    @property
+    def overflowed(self) -> Array:
+        return jnp.any(self.count > self.mask.shape[1])
+
+
+def select_k(cand: Array, ok: Array, k: int) -> tuple[Array, Array]:
+    """Pick (up to) k true entries of ``ok`` per row, returning gathered ids.
+
+    Uses top_k on the boolean mask: ties broken by lowest index, so the
+    selection is deterministic (first k valid candidates in candidate
+    order). Returns (idx (N,k) int32, mask (N,k) bool). When the row has
+    fewer than k candidate slots, outputs are padded (mask False).
+    """
+    kk = min(k, cand.shape[1])
+    score = ok.astype(jnp.float32)
+    vals, pos = jax.lax.top_k(score, kk)  # (N, kk)
+    idx = jnp.take_along_axis(cand, pos, axis=1).astype(jnp.int32)
+    mask = vals > 0.5
+    if kk < k:
+        pad = ((0, 0), (0, k - kk))
+        idx = jnp.pad(idx, pad)
+        mask = jnp.pad(mask, pad)
+    return idx, mask
+
+
+def _pairwise_r2(a: Array, b: Array, wrap_span: Array | None) -> Array:
+    """Squared distances between row sets a (N,d) and b (M,d), in a.dtype.
+
+    wrap_span: optional (d,) same-dtype spans for minimum-image wrap on
+    periodic axes (0 -> no wrap on that axis).
+    """
+    diff = a[:, None, :] - b[None, :, :]
+    if wrap_span is not None:
+        span = wrap_span.astype(diff.dtype)
+        # minimum image: wrap only axes with span > 0
+        wrapped = diff - jnp.round(diff / jnp.where(span > 0, span, 1)) * span
+        diff = jnp.where(span > 0, wrapped, diff)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def _wrap_span_norm(domain: Domain) -> Array | None:
+    if not any(domain.periodic):
+        return None
+    spans = [
+        (2.0 * s / domain.h_d) if p else 0.0
+        for s, p in zip(domain.spans, domain.periodic)
+    ]
+    return jnp.asarray(spans, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# All-list (O(N^2))
+# --------------------------------------------------------------------------
+def all_list_neighbors(
+    xn: Array,
+    radius_norm: float,
+    *,
+    dtype=jnp.float32,
+    k: int,
+    domain: Domain | None = None,
+    include_self: bool = False,
+    block: int = 2048,
+) -> NeighborList:
+    """Brute-force neighbor search on normalized absolute coordinates.
+
+    xn: (N, d) normalized coordinates (any float dtype; cast to ``dtype``
+        to model low-precision storage). Row-blocked to bound memory.
+    """
+    n = xn.shape[0]
+    x_lo = xn.astype(dtype)
+    r2 = jnp.asarray(radius_norm, dtype=dtype) ** 2
+    wrap = _wrap_span_norm(domain) if domain is not None else None
+    ids = jnp.arange(n, dtype=jnp.int32)
+
+    def row_block(lo):
+        a = jax.lax.dynamic_slice_in_dim(x_lo, lo, block, axis=0)
+        d2 = _pairwise_r2(a, x_lo, wrap)
+        ok = d2 <= r2
+        if not include_self:
+            rows = lo + jnp.arange(block, dtype=jnp.int32)
+            ok = ok & (rows[:, None] != ids[None, :])
+        cand = jnp.broadcast_to(ids[None, :], ok.shape)
+        idx, mask = select_k(cand, ok, k)
+        return idx, mask, jnp.sum(ok, axis=1).astype(jnp.int32)
+
+    if n <= block:
+        d2 = _pairwise_r2(x_lo, x_lo, wrap)
+        ok = d2 <= r2
+        if not include_self:
+            ok = ok & ~jnp.eye(n, dtype=bool)
+        cand = jnp.broadcast_to(ids[None, :], (n, n))
+        idx, mask = select_k(cand, ok, k)
+        return NeighborList(idx, mask, jnp.sum(ok, axis=1).astype(jnp.int32))
+
+    nblk = -(-n // block)
+    pad = nblk * block - n
+    xp = jnp.pad(x_lo, ((0, pad), (0, 0)))
+    x_lo_p = xp
+    starts = jnp.arange(nblk, dtype=jnp.int32) * block
+
+    def body(lo):
+        a = jax.lax.dynamic_slice_in_dim(x_lo_p, lo, block, axis=0)
+        d2 = _pairwise_r2(a, x_lo, wrap)
+        ok = d2 <= r2
+        if not include_self:
+            rows = lo + jnp.arange(block, dtype=jnp.int32)
+            ok = ok & (rows[:, None] != ids[None, :])
+        cand = jnp.broadcast_to(ids[None, :], ok.shape)
+        idx, mask = select_k(cand, ok, k)
+        return idx, mask, jnp.sum(ok, axis=1).astype(jnp.int32)
+
+    idx, mask, count = jax.lax.map(body, starts)
+    return NeighborList(
+        idx.reshape(-1, k)[:n], mask.reshape(-1, k)[:n], count.reshape(-1)[:n]
+    )
+
+
+def all_list_count(
+    xn: Array,
+    radius_norm: float,
+    *,
+    dtype=jnp.float32,
+    domain: Domain | None = None,
+    include_self: bool = False,
+    block: int = 1024,
+) -> Array:
+    """Count-only all-list search (used by scaling benchmarks; O(block*N) mem)."""
+    n = xn.shape[0]
+    x_lo = xn.astype(dtype)
+    r2 = jnp.asarray(radius_norm, dtype=dtype) ** 2
+    wrap = _wrap_span_norm(domain) if domain is not None else None
+    nblk = -(-n // block)
+    pad = nblk * block - n
+    xp = jnp.pad(x_lo, ((0, pad), (0, 0)), constant_values=1e4)
+    ids = jnp.arange(n, dtype=jnp.int32)
+
+    def body(lo):
+        a = jax.lax.dynamic_slice_in_dim(xp, lo, block, axis=0)
+        d2 = _pairwise_r2(a, x_lo, wrap)
+        ok = d2 <= r2
+        if not include_self:
+            rows = lo + jnp.arange(block, dtype=jnp.int32)
+            ok = ok & (rows[:, None] != ids[None, :])
+        return jnp.sum(ok, axis=1).astype(jnp.int32)
+
+    counts = jax.lax.map(body, jnp.arange(nblk, dtype=jnp.int32) * block)
+    return counts.reshape(-1)[:n]
+
+
+# --------------------------------------------------------------------------
+# Cell link-list (absolute coordinates in `dtype` -> paper approach II)
+# --------------------------------------------------------------------------
+def cell_list_neighbors(
+    domain: Domain,
+    xn: Array,
+    *,
+    dtype=jnp.float32,
+    k: int,
+    capacity: int | None = None,
+    binning: cells_lib.CellBinning | None = None,
+    include_self: bool = False,
+) -> NeighborList:
+    """Cell-candidate search with absolute normalized coordinates.
+
+    The binning itself always runs in fp32 (cell assignment is an integer
+    decision the paper also keeps exact); only the *distance filter* runs
+    in ``dtype``. This is exactly the paper's approach II pipeline when
+    dtype=fp16: coordinates truncated to fp16, distances in fp16.
+    """
+    n = xn.shape[0]
+    if binning is None:
+        capacity = capacity or cells_lib.default_capacity(domain, n)
+        binning = cells_lib.bin_particles(domain, xn, capacity)
+    cand, cmask = cells_lib.gather_candidates(domain, binning)  # (N, M)
+    x_lo = xn.astype(dtype)
+    xi = x_lo[:, None, :]  # (N, 1, d)
+    xj = x_lo[cand]  # (N, M, d)
+    diff = xi - xj
+    wrap = _wrap_span_norm(domain)
+    if wrap is not None:
+        span = wrap.astype(diff.dtype)
+        wrapped = diff - jnp.round(diff / jnp.where(span > 0, span, 1)) * span
+        diff = jnp.where(span > 0, wrapped, diff)
+    d2 = jnp.sum(diff * diff, axis=-1)
+    r2 = jnp.asarray(domain.radius_norm, dtype=dtype) ** 2
+    ok = cmask & (d2 <= r2)
+    if not include_self:
+        ok = ok & (cand != jnp.arange(n, dtype=jnp.int32)[:, None])
+    idx, mask = select_k(cand, ok, k)
+    return NeighborList(idx, mask, jnp.sum(ok, axis=1).astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# RCLL (cell-relative coordinates in `dtype` -> the paper's approach III)
+# --------------------------------------------------------------------------
+def rcll_r2_cell_units(
+    rel_i: Array,
+    rel_j: Array,
+    cell_delta: Array,
+    weights: Array | None = None,
+    *,
+    dtype=jnp.float16,
+) -> Array:
+    """Eq. (7) in reference-cell units from relative coords + cell delta.
+
+    rel_i: (..., d) relative coords of i in [-1,1], storage dtype.
+    rel_j: (..., d) relative coords of j.
+    cell_delta: (..., d) int32 exact cell-coordinate delta I - J
+                (minimum-image wrapped for periodic axes by the caller).
+    weights: (d,) O(1) per-axis anisotropy weights hc_a / hc_ref (None = 1).
+
+    ``dtype`` is the *arithmetic* dtype. Paper-faithful fp16 NNPS passes
+    fp16 (A100 half ALUs); the TPU adaptation stores fp16 but computes in
+    fp32 (the VPU upconverts for free), which removes arithmetic rounding
+    entirely - storage quantization is then the only error source.
+    """
+    rel_i = rel_i.astype(dtype)
+    rel_j = rel_j.astype(dtype)
+    # (x_i - x_j)/2: halving is exact in binary fp; difference of two
+    # in-[-1,1] numbers stays well-scaled. Cell delta is an exact small int.
+    du = (rel_i - rel_j) * jnp.asarray(0.5, dtype) + cell_delta.astype(dtype)
+    if weights is not None:
+        du = du * weights.astype(dtype)
+    return jnp.sum(du * du, axis=-1)
+
+
+def rcll_radius_cell_units(domain: Domain) -> float:
+    """Search radius in reference-cell units (= 1/cell_factor when square)."""
+    return float(domain.radius_norm / domain.hc_ref)
+
+
+def rcll_neighbors(
+    domain: Domain,
+    rel: Array,
+    cell_xy: Array,
+    *,
+    dtype=jnp.float16,
+    compute_dtype=None,
+    k: int,
+    capacity: int | None = None,
+    binning: cells_lib.CellBinning | None = None,
+    include_self: bool = False,
+) -> NeighborList:
+    """RCLL search from stored relative coordinates + integer cell coords.
+
+    rel: (N, d) cell-relative coordinates in [-1, 1], already stored in the
+         low-precision dtype (the state maintained by rcll.RCLLState).
+    cell_xy: (N, d) int32 per-axis cell coordinates.
+    compute_dtype: arithmetic dtype for Eq. (7). Defaults to ``dtype``
+         (paper-faithful); fp32 is the TPU-native mode (fp16 storage, VPU
+         fp32 arithmetic) with zero arithmetic rounding.
+    """
+    n = rel.shape[0]
+    cdt = compute_dtype or dtype
+    if binning is None:
+        capacity = capacity or cells_lib.default_capacity(domain, n)
+        cell_id = domain.flat_cell_id(cell_xy)
+        binning = cells_lib.bin_by_cell_id(domain, cell_id, cell_xy, capacity)
+    cand, cmask = cells_lib.gather_candidates(domain, binning)  # (N, M)
+    delta = cell_xy[:, None, :] - cell_xy[cand]  # (N, M, d) int32
+    delta = domain.wrap_cell_delta(delta)
+    w = jnp.asarray(domain.cell_weights)
+    rel = rel.astype(dtype)  # storage quantization
+    d2 = rcll_r2_cell_units(rel[:, None, :], rel[cand], delta, w, dtype=cdt)
+    rcell = jnp.asarray(rcll_radius_cell_units(domain), dtype=cdt)
+    ok = cmask & (d2 <= rcell * rcell)
+    if not include_self:
+        ok = ok & (cand != jnp.arange(n, dtype=jnp.int32)[:, None])
+    idx, mask = select_k(cand, ok, k)
+    return NeighborList(idx, mask, jnp.sum(ok, axis=1).astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Convenience: exact (fp64-on-CPU / fp32) reference determinations
+# --------------------------------------------------------------------------
+def reference_neighbors(
+    domain: Domain, xn: Array, *, k: int, include_self: bool = False
+) -> NeighborList:
+    """High-precision ground-truth determinations (cell-list in fp32 or
+    fp64 when x64 is enabled by the caller's entry point)."""
+    dt = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+    return cell_list_neighbors(
+        domain, xn, dtype=dt, k=k, include_self=include_self
+    )
+
+
+def neighbor_sets_equal(a: NeighborList, b: NeighborList) -> Array:
+    """Per-particle boolean: identical neighbor *sets* (order-insensitive)."""
+    def canon(nl: NeighborList) -> Array:
+        big = jnp.iinfo(jnp.int32).max
+        vals = jnp.where(nl.mask, nl.idx, big)
+        return jnp.sort(vals, axis=1)
+
+    return jnp.all(canon(a) == canon(b), axis=1) & (a.count == b.count)
+
+
+def count_wrong_determinations(
+    truth: NeighborList, test: NeighborList
+) -> Array:
+    """Total |symmetric difference| of neighbor sets across all particles.
+
+    This matches the paper's 'count of incorrect neighbor determinations':
+    every missed true neighbor and every spurious neighbor counts once.
+    """
+    k = max(truth.idx.shape[1], test.idx.shape[1])
+
+    def canon(nl):
+        big = jnp.iinfo(jnp.int32).max
+        vals = jnp.where(nl.mask, nl.idx, big)
+        pad = ((0, 0), (0, k - nl.idx.shape[1]))
+        return jnp.sort(jnp.pad(vals, pad, constant_values=big), axis=1)
+
+    a, b = canon(truth), canon(test)
+
+    def row_sym_diff(ra, rb):
+        in_b = jnp.isin(ra, rb)
+        in_a = jnp.isin(rb, ra)
+        valid_a = ra != jnp.iinfo(jnp.int32).max
+        valid_b = rb != jnp.iinfo(jnp.int32).max
+        return jnp.sum(valid_a & ~in_b) + jnp.sum(valid_b & ~in_a)
+
+    return jnp.sum(jax.vmap(row_sym_diff)(a, b))

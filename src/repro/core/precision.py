@@ -1,0 +1,86 @@
+"""Precision policies: which subsystem runs in which dtype.
+
+The paper's framework is *mixed*-precision by construction: NNPS runs in a
+low dtype (fp16), everything accuracy-critical (integration, density,
+forces) runs in a high dtype (fp64 on the A100; fp32 on TPU which has no
+fp64 ALUs — see DESIGN.md section 2/7). We make this a first-class policy
+object so precision is never ambient global state.
+
+fp64 note: library code never flips ``jax_enable_x64`` globally. CPU-side
+accuracy benchmarks that need true fp64 references enable it explicitly in
+their own entry points (benchmarks/_x64.py) before importing jax arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+# Canonical dtype table, keyed by the names used throughout configs/CLIs.
+DTYPES = {
+    "fp64": jnp.float64,
+    "fp32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "fp16": jnp.float16,
+}
+
+
+def dtype_of(name: str):
+    try:
+        return DTYPES[name]
+    except KeyError:
+        raise ValueError(f"unknown dtype name {name!r}; one of {sorted(DTYPES)}")
+
+
+def name_of(dtype) -> str:
+    for k, v in DTYPES.items():
+        if v == jnp.dtype(dtype):
+            return k
+    return str(jnp.dtype(dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-subsystem dtype assignment for the mixed-precision SPH step.
+
+    Attributes:
+      nnps: dtype of the neighbor-search distance pipeline (paper: fp16).
+      coords: dtype in which *positions* are stored for NNPS. For RCLL this
+        is the storage dtype of the cell-relative coordinates; for
+        absolute-coordinate searches it is the storage dtype of the
+        normalized absolute coordinates (paper approach II).
+      physics: dtype of density/momentum/energy updates (paper: fp64;
+        TPU default: fp32).
+      accum: dtype of reductions/accumulators inside physics ops.
+    """
+
+    nnps: str = "fp16"
+    coords: str = "fp16"
+    physics: str = "fp32"
+    accum: str = "fp32"
+
+    @property
+    def nnps_dtype(self):
+        return dtype_of(self.nnps)
+
+    @property
+    def coords_dtype(self):
+        return dtype_of(self.coords)
+
+    @property
+    def physics_dtype(self):
+        return dtype_of(self.physics)
+
+    @property
+    def accum_dtype(self):
+        return dtype_of(self.accum)
+
+
+# The paper's three experiment configurations (Table 4), adapted per
+# DESIGN.md section 7 (fp64 -> fp32 as the TPU high tier; the CPU accuracy
+# benchmarks still build true-fp64 references).
+APPROACH_I = PrecisionPolicy(nnps="fp32", coords="fp32", physics="fp32")
+APPROACH_II = PrecisionPolicy(nnps="fp16", coords="fp16", physics="fp32")
+APPROACH_III = PrecisionPolicy(nnps="fp16", coords="fp16", physics="fp32")
+
+APPROACHES = {"I": APPROACH_I, "II": APPROACH_II, "III": APPROACH_III}

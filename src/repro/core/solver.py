@@ -1,0 +1,185 @@
+"""Mixed-precision SPH solver (paper Fig. 6 flowchart).
+
+One jit-able ``step`` covering the paper's three approaches (Table 4):
+  I   : cell-list NNPS in hi precision, absolute fp32 positions.
+  II  : cell-list NNPS in fp16 *absolute* coordinates, fp32 positions.
+  III : RCLL - positions live permanently as (int cell, fp16 relative);
+        NNPS in fp16 relative coordinates (Eq. 7); positions advanced in
+        relative form (Eq. 8). No absolute round-trip after init.
+
+The physics tier (density/momentum/EOS/integration) is always the
+policy's ``physics`` dtype (fp32 here; fp64 on CPU for the accuracy
+benchmarks via scoped x64).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cells as cells_lib
+from repro.core import nnps, rcll, sph
+from repro.core.domain import Domain
+from repro.core.precision import PrecisionPolicy
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class SPHConfig:
+    domain: Domain
+    ds: float  # particle spacing
+    dt: float
+    rho0: float = 1.0
+    c0: float = 1.25  # speed of sound (>= 10 * v_max for WCSPH)
+    mu: float = 1.0  # dynamic viscosity (rho0 * nu)
+    body_force: tuple[float, ...] = (0.0, 0.0)
+    max_neighbors: int = 40
+    capacity: int | None = None
+    algo: str = "rcll"  # "all" | "cell" | "rcll"
+    policy: PrecisionPolicy = PrecisionPolicy()
+
+    @property
+    def h(self) -> float:
+        return self.domain.h
+
+    def cap(self, n: int) -> int:
+        return self.capacity or cells_lib.default_capacity(self.domain, n)
+
+
+class SPHState(NamedTuple):
+    """Particle system state. ``xn`` is the normalized-absolute position
+    (source of truth for algos all/cell); ``rc`` is the RCLL state (source
+    of truth for algo rcll). The inactive representation is frozen at its
+    initial value and never read."""
+
+    xn: Array  # (N, d) fp32 normalized absolute positions
+    rc: rcll.RCLLState
+    fluid: sph.FluidState
+    fixed: Array  # (N,) bool - wall/dummy particles (v pinned to 0)
+    t: Array  # () fp32 simulation time
+
+
+def init_state(
+    cfg: SPHConfig, x_phys, v, m, rho, fixed=None
+) -> SPHState:
+    xn = cfg.domain.normalize(jnp.asarray(x_phys), dtype=jnp.float32)
+    rc = rcll.init_state(cfg.domain, xn, dtype=cfg.policy.coords_dtype)
+    n = xn.shape[0]
+    fluid = sph.FluidState(
+        v=jnp.asarray(v, jnp.float32),
+        rho=jnp.asarray(rho, jnp.float32),
+        m=jnp.asarray(m, jnp.float32),
+    )
+    if fixed is None:
+        fixed = jnp.zeros((n,), bool)
+    return SPHState(xn=xn, rc=rc, fluid=fluid, fixed=fixed,
+                    t=jnp.zeros((), jnp.float32))
+
+
+def positions(cfg: SPHConfig, state: SPHState, dtype=jnp.float32) -> Array:
+    """Physical positions decoded from the active representation."""
+    if cfg.algo == "rcll":
+        xn = rcll.to_normalized(cfg.domain, state.rc, dtype=dtype)
+    else:
+        xn = state.xn
+    return cfg.domain.denormalize(xn, dtype=dtype)
+
+
+def _neighbors_and_pairs(cfg: SPHConfig, state: SPHState):
+    """NNPS (low-precision tier) + pair geometry (physics tier)."""
+    dom, pol = cfg.domain, cfg.policy
+    n = state.xn.shape[0]
+    k = cfg.max_neighbors
+    if cfg.algo == "rcll":
+        nl, _ = rcll.neighbors(
+            dom, state.rc, dtype=pol.nnps_dtype, k=k, capacity=cfg.cap(n)
+        )
+        disp, r = rcll.pair_displacements(dom, state.rc, nl,
+                                          dtype=pol.physics_dtype)
+        return nl, disp, r
+    if cfg.algo == "cell":
+        nl = nnps.cell_list_neighbors(
+            dom, state.xn, dtype=pol.nnps_dtype, k=k, capacity=cfg.cap(n)
+        )
+    elif cfg.algo == "all":
+        nl = nnps.all_list_neighbors(
+            state.xn, dom.radius_norm, dtype=pol.nnps_dtype, k=k, domain=dom
+        )
+    else:
+        raise ValueError(cfg.algo)
+    # Physics-tier pair geometry from hi-precision absolute positions.
+    xi = state.xn[:, None, :]
+    xj = state.xn[nl.idx]
+    diff = (xi - xj).astype(pol.physics_dtype)
+    span = [
+        (2.0 * s / dom.h_d) if p else 0.0
+        for s, p in zip(dom.spans, dom.periodic)
+    ]
+    if any(dom.periodic):
+        sp = jnp.asarray(span, diff.dtype)
+        wrapped = diff - jnp.round(diff / jnp.where(sp > 0, sp, 1)) * sp
+        diff = jnp.where(sp > 0, wrapped, diff)
+    disp = diff * (dom.h_d / 2.0)  # physical units
+    r = jnp.sqrt(jnp.sum(disp * disp, axis=-1))
+    return nl, disp, r
+
+
+def step(cfg: SPHConfig, state: SPHState) -> SPHState:
+    """One mixed-precision WCSPH step (symplectic Euler)."""
+    dom = cfg.domain
+    dim = dom.dim
+    nl, disp, r = _neighbors_and_pairs(cfg, state)
+    gw = sph.grad_w(disp, r, cfg.h, dim, nl.mask)
+
+    fl = state.fluid
+    # Continuity -> density (physics tier).
+    drho = sph.continuity_rhs(fl, nl.idx, nl.mask, gw)
+    rho = fl.rho + cfg.dt * drho
+    p = sph.eos_tait(rho, cfg.rho0, cfg.c0)
+
+    # Momentum -> velocity. Wall particles stay pinned.
+    bf = jnp.asarray(cfg.body_force, jnp.float32)
+    fl2 = sph.FluidState(v=fl.v, rho=rho, m=fl.m)
+    acc = sph.momentum_rhs(
+        fl2, p, nl.idx, nl.mask, gw, disp, r,
+        h=cfg.h, mu=cfg.mu, body_force=bf,
+    )
+    v = fl.v + cfg.dt * acc
+    v = jnp.where(state.fixed[:, None], 0.0, v)
+
+    # Kick positions (active representation only).
+    dx_phys = v * cfg.dt
+    dxn = dx_phys * (2.0 / dom.h_d)
+    if cfg.algo == "rcll":
+        rc = rcll.advance(dom, state.rc, dxn, dtype=cfg.policy.coords_dtype)
+        xn = state.xn
+    else:
+        xn = state.xn + dxn
+        # wrap periodic axes back into the box
+        lo = jnp.asarray([-s / dom.h_d for s in dom.spans], jnp.float32) * 0 - 1.0
+        span = jnp.asarray(
+            [2.0 * s / dom.h_d if p else 0.0
+             for s, p in zip(dom.spans, dom.periodic)], jnp.float32)
+        org = jnp.asarray(dom.origin_norm, jnp.float32)
+        wrapped = org + jnp.mod(xn - org, jnp.where(span > 0, span, 1.0))
+        xn = jnp.where(span > 0, wrapped, xn)
+        rc = state.rc
+    return SPHState(
+        xn=xn, rc=rc,
+        fluid=sph.FluidState(v=v, rho=rho, m=fl.m),
+        fixed=state.fixed, t=state.t + cfg.dt,
+    )
+
+
+@partial(jax.jit, static_argnums=(0, 2))
+def simulate(cfg: SPHConfig, state: SPHState, nsteps: int) -> SPHState:
+    """Run ``nsteps`` steps under lax.scan (single fused XLA program)."""
+    def body(s, _):
+        return step(cfg, s), None
+
+    out, _ = jax.lax.scan(body, state, None, length=nsteps)
+    return out

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: blocked (flash) causal attention for prefill.
+
+Standard online-softmax tiling: grid (B*H, nQ, nK); one (bq, dh) query
+tile revisits its output block across the nK inner steps, carrying running
+max/denominator in VMEM scratch. GQA is handled in the K/V index maps
+(query head h reads kv head h // (H/Hkv)) - no materialized repeat.
+
+The causal mask is applied elementwise inside the tile; fully-masked K
+tiles (ik*bk > (iq+1)*bq) still run - acceptable for the CPU-validated
+target kernel, and noted as a skip-block optimization in EXPERIMENTS.md.
+
+This kernel exists for the LM substrate of the assigned architectures;
+the models default to the XLA path (attention_impl='xla') and switch to
+this kernel on real TPU hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, bq, dh)
+    k_ref,  # (1, bk, dh)
+    v_ref,  # (1, bk, dh)
+    o_ref,  # (1, bq, dh)
+    m_ref,  # (bq, 1) scratch
+    l_ref,  # (bq, 1) scratch
+    acc_ref,  # (bq, dh) scratch
+    *,
+    scale: float,
+    causal: bool,
+    bq: int,
+    bk: int,
+    nk: int,
+):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)  # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale  # (bq, bk)
+
+    if causal:
+        rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    # guard: a fully-masked row keeps m at NEG_INF; exp(s - m) must be 0
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.where(l_ref[...] > 0, l_ref[...], 1.0)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: Array,  # (B, H, Lq, Dh)
+    k: Array,  # (B, Hkv, Lk, Dh)
+    v: Array,  # (B, Hkv, Lk, Dh)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> Array:
+    B, H, Lq, Dh = q.shape
+    _, Hkv, Lk, _ = k.shape
+    rep = H // Hkv
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(Dh))
+    bq, bk = min(block_q, Lq), min(block_k, Lk)
+    assert Lq % bq == 0 and Lk % bk == 0, (Lq, bq, Lk, bk)
+    nq, nk = Lq // bq, Lk // bk
+
+    qr = q.reshape(B * H, Lq, Dh)
+    kr = k.reshape(B * Hkv, Lk, Dh)
+    vr = v.reshape(B * Hkv, Lk, Dh)
+
+    def kv_index(bh, iq, ik):
+        b, h = bh // H, bh % H
+        return (b * Hkv + h // rep, ik, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, bq=bq, bk=bk, nk=nk
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, Dh), kv_index),
+            pl.BlockSpec((1, bk, Dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Lq, Dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Lq, Dh)

@@ -1,0 +1,174 @@
+"""Public jit'd wrappers for the Pallas kernels + cell-table packing.
+
+The kernels consume *cell-major* dense tables (C+1, d, cap) - the packing
+here is the TPU analogue of the paper's particle sort (particles that share
+a cell are contiguous; row-major cell order keeps spatial neighbors close
+in HBM). Row C is a sentinel empty cell: out-of-domain neighborhood slots
+point at it, so the kernels never branch on validity.
+
+``interpret`` defaults to True on CPU (this container) and should be False
+on real TPU. All wrappers are shape-polymorphic over (C, cap, d, M).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cells as cells_lib
+from repro.core import nnps as nnps_lib
+from repro.core.domain import Domain
+from repro.kernels import nnps_pairwise, sph_gradient
+
+Array = jnp.ndarray
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cell_neighbor_ids(domain: Domain) -> np.ndarray:
+    """(C, M) int32 flat neighbor-cell ids per cell; invalid -> sentinel C.
+
+    Static (host-side numpy): the cell graph depends only on the Domain.
+    """
+    ncells = np.asarray(domain.ncells)
+    C = int(np.prod(ncells))
+    dim = domain.dim
+    offs = cells_lib.neighbor_cell_offsets(dim)  # (M, d)
+    coords = np.stack(
+        np.meshgrid(*[np.arange(n) for n in ncells], indexing="ij"), -1
+    ).reshape(C, dim)
+    nb = coords[:, None, :] + offs[None, :, :]  # (C, M, d)
+    per = np.asarray(domain.periodic)
+    wrapped = np.where(per, nb % ncells, nb)
+    valid = np.all((wrapped >= 0) & (wrapped < ncells), axis=-1)
+    clipped = np.clip(wrapped, 0, ncells - 1)
+    flat = clipped[..., 0]
+    for a in range(1, dim):
+        flat = flat * ncells[a] + clipped[..., a]
+    return np.where(valid, flat, C).astype(np.int32)
+
+
+def particle_slots(binning: cells_lib.CellBinning) -> Array:
+    """(N,) int32 slot of each particle within its cell's table row."""
+    cap = binning.table.shape[1]
+    n = binning.cell_id.shape[0]
+    row = binning.table[binning.cell_id]  # (N, cap)
+    hit = row == jnp.arange(n, dtype=jnp.int32)[:, None]
+    return jnp.argmax(hit, axis=1).astype(jnp.int32)
+
+
+def pack_cells(
+    binning: cells_lib.CellBinning,
+    rel: Array,  # (N, d) storage dtype
+    *fields: Array,  # (N,) f32 each
+) -> tuple[Array, Array, list[Array]]:
+    """Pack per-particle data into cell-major tables with a sentinel row.
+
+    Returns (rel_table (C+1, d, cap), occ (C+1, cap), field_tables).
+    """
+    C, cap = binning.table.shape
+    d = rel.shape[1]
+    tbl = binning.table  # (C, cap) particle ids, -1 empty
+    occ = (tbl >= 0).astype(jnp.float32)
+    safe = jnp.maximum(tbl, 0)
+    rel_t = rel[safe]  # (C, cap, d)
+    rel_t = jnp.where(occ[..., None] > 0, rel_t, 0).transpose(0, 2, 1)
+    rel_t = jnp.concatenate(
+        [rel_t, jnp.zeros((1, d, cap), rel_t.dtype)], axis=0
+    )
+    occ = jnp.concatenate([occ, jnp.zeros((1, cap), occ.dtype)], axis=0)
+    packed_fields = []
+    for f in fields:
+        ft = jnp.where(occ[:-1] > 0, f[safe], 0).astype(jnp.float32)
+        ft = jnp.concatenate([ft, jnp.zeros((1, cap), ft.dtype)], axis=0)
+        packed_fields.append(ft)
+    return rel_t, occ, packed_fields
+
+
+def unpack_per_particle(
+    table: Array, binning: cells_lib.CellBinning
+) -> Array:
+    """Gather per-particle values out of a (C+1, cap, ...) table -> (N, ...)."""
+    slots = particle_slots(binning)
+    return table[binning.cell_id, slots]
+
+
+# --------------------------------------------------------------------------
+# RCLL adjacency + neighbor counts (kernel wrapper)
+# --------------------------------------------------------------------------
+def rcll_adjacency_cells(
+    domain: Domain,
+    binning: cells_lib.CellBinning,
+    rel: Array,  # (N, d) storage dtype
+    *,
+    compute_dtype=jnp.float32,
+    interpret: bool | None = None,
+) -> tuple[Array, Array]:
+    """Cell-blocked adjacency via the Pallas kernel.
+
+    Returns (adj (C+1, M, cap, cap) f32, counts per particle (N,) f32).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    rel_t, occ, _ = pack_cells(binning, rel)
+    nb = jnp.asarray(cell_neighbor_ids(domain))
+    nb = jnp.concatenate(  # sentinel row points at itself
+        [nb, jnp.full((1, nb.shape[1]), nb.shape[0], nb.dtype)], axis=0
+    )
+    offs = tuple(map(tuple, cells_lib.neighbor_cell_offsets(domain.dim)))
+    adj, cnt = nnps_pairwise.rcll_adjacency(
+        rel_t,
+        occ,
+        nb,
+        offs=offs,
+        weights=tuple(domain.cell_weights),
+        r_cell=nnps_lib.rcll_radius_cell_units(domain),
+        compute_dtype=compute_dtype,
+        interpret=interpret,
+    )
+    counts = unpack_per_particle(cnt, binning)
+    return adj, counts
+
+
+# --------------------------------------------------------------------------
+# Fused RCLL search + A5 gradient (kernel wrapper)
+# --------------------------------------------------------------------------
+def rcll_gradient_particles(
+    domain: Domain,
+    binning: cells_lib.CellBinning,
+    rel: Array,  # (N, d)
+    f: Array,  # (N,) f32
+    *,
+    nnps_dtype=jnp.float16,
+    interpret: bool | None = None,
+    eps: float = 1e-12,
+) -> Array:
+    """Per-particle A5 gradient (N, d) via the fused Pallas kernel."""
+    interpret = default_interpret() if interpret is None else interpret
+    rel_t, occ, (f_t,) = pack_cells(binning, rel, f)
+    nb = jnp.asarray(cell_neighbor_ids(domain))
+    nb = jnp.concatenate(
+        [nb, jnp.full((1, nb.shape[1]), nb.shape[0], nb.dtype)], axis=0
+    )
+    offs = tuple(map(tuple, cells_lib.neighbor_cell_offsets(domain.dim)))
+    hc_phys = tuple(domain.cell_sizes)
+    num, den = sph_gradient.rcll_gradient(
+        rel_t,
+        f_t,
+        occ,
+        nb,
+        offs=offs,
+        weights=tuple(domain.cell_weights),
+        r_cell=nnps_lib.rcll_radius_cell_units(domain),
+        hc_phys=hc_phys,
+        h=domain.h,
+        dim=domain.dim,
+        nnps_dtype=nnps_dtype,
+        interpret=interpret,
+    )
+    den = jnp.where(jnp.abs(den) > eps, den, jnp.where(den >= 0, eps, -eps))
+    grad_t = (num / den).transpose(0, 2, 1)  # (C+1, cap, d)
+    return unpack_per_particle(grad_t, binning)

@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: decode attention over a block-anchored quantized
+KV cache ("RCLL-KV").
+
+This is the paper's decomposition applied to the memory-bound tensor of
+LM inference. RCLL stores position = cell_center(exact) + fp16 residual
+normalized to [-1,1]; RCLL-KV stores, per 128-token cache block,
+
+    kv = anchor(fp32, per-block mean) + scale(fp32) * residual(fp16/int8)
+
+Decode attention is bandwidth-bound exactly like the paper's O(N) NNPS
+(Table 6: 8% compute, 51% bandwidth): the KV cache is the stream. int8
+residuals + per-block fp32 anchors cut streamed bytes ~4x vs bf16 at a
+quantization error bounded per block (core.anchored.quantization_error_
+bound) - the same accuracy argument as Table 2's RCLL column.
+
+Kernel: grid (B*Hkv, nblk). Each step dequantizes one (blk, dh) K and V
+tile in VMEM, runs the `rep` grouped query heads against it on the MXU
+((rep, dh) x (dh, blk)), and carries online-softmax stats in scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30
+
+
+def _dequant(resid, anchor, scale):
+    if resid.dtype == jnp.int8:
+        r = resid.astype(jnp.float32) * (1.0 / 127.0)
+    else:
+        r = resid.astype(jnp.float32)
+    return anchor + scale * r
+
+
+def _decode_kernel(
+    len_ref,  # scalar prefetch: (B,) int32 valid lengths
+    q_ref,  # (1, rep, dh)
+    kr_ref,  # (1, 1, blk, dh) residuals
+    ka_ref,  # (1, 1, 1, dh) anchor
+    ks_ref,  # (1, 1, 1, dh) scale
+    vr_ref,
+    va_ref,
+    vs_ref,
+    o_ref,  # (1, rep, dh)
+    m_ref,  # (rep, 1)
+    l_ref,  # (rep, 1)
+    acc_ref,  # (rep, dh)
+    *,
+    scale: float,
+    blk: int,
+    nblk: int,
+    hkv: int,
+):
+    bh, ib = pl.program_id(0), pl.program_id(1)
+    b = bh // hkv
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (rep, dh)
+    k = _dequant(kr_ref[0, 0], ka_ref[0, 0], ks_ref[0, 0])  # (blk, dh)
+    v = _dequant(vr_ref[0, 0], va_ref[0, 0], vs_ref[0, 0])  # (blk, dh)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (rep, blk)
+    pos = ib * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)
+    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ib == nblk - 1)
+    def _finalize():
+        l = jnp.where(l_ref[...] > 0, l_ref[...], 1.0)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def rcll_kv_decode(
+    q: Array,  # (B, H, Dh)
+    k_resid: Array,  # (B, Hkv, nblk, blk, Dh) fp16/bf16/int8
+    k_anchor: Array,  # (B, Hkv, nblk, 1, Dh) f32
+    k_scale: Array,  # (B, Hkv, nblk, 1, Dh) f32
+    v_resid: Array,
+    v_anchor: Array,
+    v_scale: Array,
+    length: Array,  # (B,) int32
+    *,
+    scale: float | None = None,
+    interpret: bool = True,
+) -> Array:
+    B, H, Dh = q.shape
+    _, Hkv, nblk, blk, _ = k_resid.shape
+    rep = H // Hkv
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(Dh))
+
+    # (B, H, Dh) -> (B*Hkv, rep, Dh): group query heads by kv head
+    qr = q.reshape(B, Hkv, rep, Dh).reshape(B * Hkv, rep, Dh)
+
+    def flat5(x):
+        return x.reshape(B * Hkv, nblk, x.shape[3], Dh)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, blk=blk, nblk=nblk, hkv=Hkv
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hkv, nblk),
+        in_specs=[
+            pl.BlockSpec((1, rep, Dh), lambda bh, ib, ln: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, blk, Dh), lambda bh, ib, ln: (bh, ib, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Dh), lambda bh, ib, ln: (bh, ib, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Dh), lambda bh, ib, ln: (bh, ib, 0, 0)),
+            pl.BlockSpec((1, 1, blk, Dh), lambda bh, ib, ln: (bh, ib, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Dh), lambda bh, ib, ln: (bh, ib, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Dh), lambda bh, ib, ln: (bh, ib, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rep, Dh), lambda bh, ib, ln: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, 1), jnp.float32),
+            pltpu.VMEM((rep, Dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, rep, Dh), jnp.float32),
+        interpret=interpret,
+    )(
+        length,
+        qr,
+        flat5(k_resid),
+        flat5(k_anchor),
+        flat5(k_scale),
+        flat5(v_resid),
+        flat5(v_anchor),
+        flat5(v_scale),
+    )
+    return out.reshape(B, H, Dh)

@@ -1,0 +1,181 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` function is the semantic ground truth the kernel sweeps in
+tests/test_kernels.py assert against. They are written for clarity, not
+speed, and share the exact dtype contracts of the kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+# --------------------------------------------------------------------------
+# RCLL NNPS adjacency (kernels/nnps_pairwise.py)
+# --------------------------------------------------------------------------
+def ref_rcll_adjacency(
+    rel: Array,  # (C, d, cap) relative coords, storage dtype
+    occ: Array,  # (C, cap) {0,1} occupancy
+    nb_ids: Array,  # (C, M) int32 neighbor-cell ids
+    offs: np.ndarray,  # (M, d) int32 neighborhood offsets (j_cell - i_cell)
+    weights: np.ndarray,  # (d,) anisotropy weights
+    r_cell: float,  # search radius in reference-cell units
+    compute_dtype=jnp.float32,
+) -> tuple[Array, Array]:
+    """Adjacency per (cell, neighborhood slot): (C, M, cap, cap) {0,1} f32,
+    plus per-particle neighbor counts (C, cap) f32.
+
+    adjacency[c, k, a, b] = 1 iff particle (c, a) and particle
+    (nb_ids[c,k], b) are neighbors (distance <= r_cell in reference-cell
+    units, both slots occupied, not the self-pair).
+    """
+    C, d, cap = rel.shape
+    M = nb_ids.shape[1]
+    rel_c = rel.astype(compute_dtype)
+    w = jnp.asarray(weights, compute_dtype)
+    rel_j = rel_c[nb_ids]  # (C, M, d, cap)
+    # du[c,k,a,b,ax] = (rel_i[c,ax,a] - rel_j[c,k,ax,b]) / 2 - offs[k,ax]
+    du = (
+        rel_c[:, None, :, :, None] - rel_j[:, :, :, None, :]
+    ) * 0.5 - jnp.asarray(offs, compute_dtype)[None, :, :, None, None]
+    du = du * w[None, None, :, None, None]
+    d2 = jnp.sum(du * du, axis=2)  # (C, M, cap, cap)
+    ok = d2 <= jnp.asarray(r_cell, compute_dtype) ** 2
+    occb = occ.astype(bool)
+    ok = ok & occb[:, None, :, None] & occb[nb_ids][:, :, None, :]
+    # self-pair: same cell id and same slot index
+    same_cell = nb_ids == jnp.arange(C, dtype=nb_ids.dtype)[:, None]
+    eye = jnp.eye(cap, dtype=bool)
+    ok = ok & ~(same_cell[:, :, None, None] & eye[None, None])
+    adj = ok.astype(jnp.float32)
+    counts = adj.sum(axis=(1, 3))  # (C, cap)
+    return adj, counts
+
+
+# --------------------------------------------------------------------------
+# Fused RCLL NNPS + A5 gradient (kernels/sph_gradient.py)
+# --------------------------------------------------------------------------
+def _bspline_dw_dr(r: Array, h: float, dim: int) -> Array:
+    import math
+
+    if dim == 2:
+        a = 15.0 / (7.0 * math.pi * h * h)
+    elif dim == 3:
+        a = 3.0 / (2.0 * math.pi * h**3)
+    else:
+        a = 1.0 / h
+    R = r / h
+    d1 = -2.0 * R + 1.5 * R * R
+    d2 = -0.5 * (2.0 - R) ** 2
+    return (a / h) * jnp.where(R < 1.0, d1, jnp.where(R < 2.0, d2, 0.0))
+
+
+def ref_rcll_gradient(
+    rel: Array,  # (C, d, cap)
+    f: Array,  # (C, cap) f32 field values
+    occ: Array,  # (C, cap)
+    nb_ids: Array,  # (C, M)
+    offs: np.ndarray,  # (M, d)
+    weights: np.ndarray,  # (d,)
+    r_cell: float,
+    hc_phys: np.ndarray,  # (d,) physical cell sizes
+    h: float,
+    dim: int,
+    compute_dtype=jnp.float32,
+) -> tuple[Array, Array]:
+    """Fused neighbor-search + normalized (A5) gradient accumulators.
+
+    Returns (num (C, d, cap), den (C, d, cap)): per-particle numerator
+    Σ_j (f_j - f_i) ∂W/∂x_a and denominator Σ_j (x_j - x_i)_a ∂W/∂x_a,
+    both in fp32. Gradient = num/den (computed by the caller).
+    """
+    adj, _ = ref_rcll_adjacency(
+        rel, occ, nb_ids, offs, weights, r_cell, compute_dtype
+    )
+    C, d, cap = rel.shape
+    rel32 = rel.astype(jnp.float32)
+    rel_j = rel32[nb_ids]  # (C, M, d, cap)
+    du = (
+        rel32[:, None, :, :, None] - rel_j[:, :, :, None, :]
+    ) * 0.5 - jnp.asarray(offs, jnp.float32)[None, :, :, None, None]
+    # physical displacement x_i - x_j, per axis: (C, M, d, cap_i, cap_j)
+    disp = du * jnp.asarray(hc_phys, jnp.float32)[None, None, :, None, None]
+    r = jnp.sqrt(jnp.sum(disp * disp, axis=2))  # (C, M, cap, cap)
+    dw = _bspline_dw_dr(r, h, dim)
+    rsafe = jnp.where(r > 1e-12, r, 1.0)
+    gw = (dw / rsafe)[:, :, None] * disp  # (C, M, d, cap_i, cap_j)
+    gw = gw * adj[:, :, None]
+    fj = f[nb_ids]  # (C, M, cap_j)
+    df = fj[:, :, None, :] - f[:, None, :, None]  # (C, M, cap_i, cap_j)
+    num = jnp.sum(df[:, :, None] * gw, axis=(1, 4))  # (C, d, cap)
+    den = jnp.sum((-disp) * gw, axis=(1, 4))  # (C, d, cap)
+    return num, den
+
+
+# --------------------------------------------------------------------------
+# Flash attention (kernels/flash_attention.py)
+# --------------------------------------------------------------------------
+def ref_attention(
+    q: Array,  # (B, H, Lq, Dh)
+    k: Array,  # (B, Hkv, Lk, Dh)
+    v: Array,  # (B, Hkv, Lk, Dh)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> Array:
+    B, H, Lq, Dh = q.shape
+    Hkv = k.shape[1]
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(Dh)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Lk = k.shape[2]
+        mask = jnp.tril(jnp.ones((Lq, Lk), bool), k=Lk - Lq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# RCLL-KV decode attention (kernels/rcll_kv_attention.py)
+# --------------------------------------------------------------------------
+def dequant(resid: Array, anchor: Array, scale: Array) -> Array:
+    """anchor + scale * residual (int8 residuals span [-127, 127])."""
+    if resid.dtype == jnp.int8:
+        r = resid.astype(jnp.float32) / 127.0
+    else:
+        r = resid.astype(jnp.float32)
+    return anchor + scale * r
+
+
+def ref_rcll_kv_decode(
+    q: Array,  # (B, H, Dh)
+    k_resid: Array,  # (B, Hkv, nblk, blk, Dh) lo dtype
+    k_anchor: Array,  # (B, Hkv, nblk, 1, Dh) f32
+    k_scale: Array,  # (B, Hkv, nblk, 1, Dh) f32
+    v_resid: Array,
+    v_anchor: Array,
+    v_scale: Array,
+    length: Array,  # (B,) int32 valid KV length
+    *,
+    scale: float | None = None,
+) -> Array:
+    B, H, Dh = q.shape
+    _, Hkv, nblk, blk, _ = k_resid.shape
+    kk = dequant(k_resid, k_anchor, k_scale).reshape(B, Hkv, nblk * blk, Dh)
+    vv = dequant(v_resid, v_anchor, v_scale).reshape(B, Hkv, nblk * blk, Dh)
+    rep = H // Hkv
+    kk = jnp.repeat(kk, rep, axis=1)
+    vv = jnp.repeat(vv, rep, axis=1)
+    sc = scale if scale is not None else 1.0 / np.sqrt(Dh)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kk) * sc
+    pos = jnp.arange(nblk * blk)[None, None, :]
+    s = jnp.where(pos < length[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p, vv)

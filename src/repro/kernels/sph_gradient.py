@@ -1,0 +1,169 @@
+"""Pallas TPU kernel: fused RCLL neighbor-search + SPH A5 gradient.
+
+This fuses the paper's two profiled kernels ('NNPS' + 'gradient
+approximation', Table 6) into one pass: the (cap_i x cap_j) distance tile
+is immediately consumed by the B-spline weight and the normalized-gradient
+accumulators, so the adjacency never round-trips through HBM. The paper
+identifies the O(N) NNPS as memory-bound (8% compute / 51% bandwidth) -
+the fusion removes the intermediate neighbor-list write+read entirely,
+the same "optimize memory, not FLOPs" lever as their sorted layout, taken
+one step further (see EXPERIMENTS.md Perf-SPH).
+
+Layout and blocking are identical to nnps_pairwise.py. Distance math runs
+in the NNPS precision (fp16 faithful / fp32 TPU-native); kernel weights
+and accumulators are fp32 (the paper's high-precision tier).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jnp.ndarray
+
+
+def _gradient_kernel(
+    nb_ref,
+    off_ref,  # (1, d)
+    rel_i_ref,  # (1, d, cap)
+    rel_j_ref,  # (1, d, cap)
+    f_i_ref,  # (1, cap)
+    f_j_ref,  # (1, cap)
+    occ_i_ref,  # (1, cap)
+    occ_j_ref,  # (1, cap)
+    num_ref,  # (1, d, cap) accumulated over k
+    den_ref,  # (1, d, cap)
+    *,
+    weights: tuple,
+    r2_cell: float,
+    hc_phys: tuple,
+    h: float,
+    dim: int,
+    nnps_dtype,
+):
+    c, k = pl.program_id(0), pl.program_id(1)
+    d, cap = rel_i_ref.shape[1], rel_i_ref.shape[2]
+
+    @pl.when(k == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    off_k = off_ref[0]  # (d,) f32
+
+    # ---- NNPS tier (low precision): Eq. 7 distance + radius test --------
+    rel_i_lo = rel_i_ref[0].astype(nnps_dtype)
+    rel_j_lo = rel_j_ref[0].astype(nnps_dtype)
+    d2_lo = jnp.zeros((cap, cap), nnps_dtype)
+    for a in range(d):
+        du = (rel_i_lo[a][:, None] - rel_j_lo[a][None, :]) * nnps_dtype(0.5)
+        du = (du - off_k[a].astype(nnps_dtype)) * nnps_dtype(weights[a])
+        d2_lo = d2_lo + du * du
+    ok = d2_lo <= nnps_dtype(r2_cell)
+    occ = (occ_i_ref[0][:, None] > 0) & (occ_j_ref[0][None, :] > 0)
+    ok = ok & occ
+    is_self_cell = nb_ref[c, k] == c
+    eye = jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 0) == \
+        jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 1)
+    ok = ok & ~(is_self_cell & eye)
+    adj = ok.astype(jnp.float32)
+
+    # ---- physics tier (fp32): B-spline dW/dr and A5 accumulators --------
+    rel_i = rel_i_ref[0].astype(jnp.float32)
+    rel_j = rel_j_ref[0].astype(jnp.float32)
+    disp = []
+    r2 = jnp.zeros((cap, cap), jnp.float32)
+    for a in range(d):
+        du = (rel_i[a][:, None] - rel_j[a][None, :]) * 0.5 - off_k[a]
+        dx = du * hc_phys[a]  # physical x_i - x_j along axis a
+        disp.append(dx)
+        r2 = r2 + dx * dx
+    r = jnp.sqrt(r2)
+
+    if dim == 2:
+        alpha = 15.0 / (7.0 * math.pi * h * h)
+    elif dim == 3:
+        alpha = 3.0 / (2.0 * math.pi * h**3)
+    else:
+        alpha = 1.0 / h
+    R = r * (1.0 / h)
+    dw = (alpha / h) * jnp.where(
+        R < 1.0, -2.0 * R + 1.5 * R * R,
+        jnp.where(R < 2.0, -0.5 * (2.0 - R) ** 2, 0.0),
+    )
+    rsafe = jnp.where(r > 1e-12, r, 1.0)
+    coef = adj * dw / rsafe  # (cap_i, cap_j)
+
+    df = f_j_ref[0][None, :] - f_i_ref[0][:, None]  # f_j - f_i
+    for a in range(d):
+        gw_a = coef * disp[a]  # ∂W/∂x_a tile
+        num_ref[0, a] += jnp.sum(df * gw_a, axis=1)
+        den_ref[0, a] += jnp.sum(-disp[a] * gw_a, axis=1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "offs", "weights", "r_cell", "hc_phys", "h", "dim",
+        "nnps_dtype", "interpret",
+    ),
+)
+def rcll_gradient(
+    rel: Array,  # (C, d, cap)
+    f: Array,  # (C, cap) f32
+    occ: Array,  # (C, cap) f32
+    nb_ids: Array,  # (C, M) int32
+    *,
+    offs: tuple,
+    weights: tuple,
+    r_cell: float,
+    hc_phys: tuple,
+    h: float,
+    dim: int,
+    nnps_dtype=jnp.float16,
+    interpret: bool = True,
+) -> tuple[Array, Array]:
+    """Fused search+gradient: returns (num, den), each (C, d, cap) f32."""
+    C, d, cap = rel.shape
+    M = nb_ids.shape[1]
+    offs_arr = jnp.asarray(np.asarray(offs, np.float32).reshape(M, d))
+    kernel = functools.partial(
+        _gradient_kernel,
+        weights=tuple(float(w) for w in weights),
+        r2_cell=float(r_cell) ** 2,
+        hc_phys=tuple(float(x) for x in hc_phys),
+        h=float(h),
+        dim=int(dim),
+        nnps_dtype=jnp.dtype(nnps_dtype).type,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C, M),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda c, k, nb: (k, 0)),
+            pl.BlockSpec((1, d, cap), lambda c, k, nb: (c, 0, 0)),
+            pl.BlockSpec((1, d, cap), lambda c, k, nb: (nb[c, k], 0, 0)),
+            pl.BlockSpec((1, cap), lambda c, k, nb: (c, 0)),
+            pl.BlockSpec((1, cap), lambda c, k, nb: (nb[c, k], 0)),
+            pl.BlockSpec((1, cap), lambda c, k, nb: (c, 0)),
+            pl.BlockSpec((1, cap), lambda c, k, nb: (nb[c, k], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d, cap), lambda c, k, nb: (c, 0, 0)),
+            pl.BlockSpec((1, d, cap), lambda c, k, nb: (c, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((C, d, cap), jnp.float32),
+            jax.ShapeDtypeStruct((C, d, cap), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nb_ids, offs_arr, rel, rel, f, f, occ, occ)

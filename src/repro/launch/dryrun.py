@@ -1,0 +1,420 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+
+"""Multi-pod dry-run: AOT .lower().compile() for every assigned
+(architecture x input-shape) cell on the production meshes, plus the
+memory / cost / collective analysis the roofline reads.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod|--both] [--smoke]
+  python -m repro.launch.dryrun --all --out experiments/dryrun
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>.json with:
+  flops / bytes from compiled.cost_analysis()
+  per-device memory from compiled.memory_analysis()
+  collective bytes by op type, parsed from the partitioned HLO
+  the three roofline terms (TPU v5e constants; see EXPERIMENTS.md).
+
+(note: no `from __future__ import annotations` here - the XLA_FLAGS
+lines above must stay the first statements in the file.)
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import SHAPES
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.optim import adamw
+
+# ---- TPU v5e hardware constants (roofline) --------------------------------
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (aggregate per-chip figure used as-is)
+
+FSDP_THRESHOLD = 1_000_000_000  # params >= 1B: shard params over "data"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of one 'dtype[d0,d1,...]' HLO type string."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in partitioned HLO.
+
+    Convention (documented in EXPERIMENTS.md): the cost of a collective
+    is its RESULT size - a uniform, parseable proxy for wire bytes
+    (exact wire cost differs by algorithm; ratios between configs are
+    what the perf loop optimizes).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    # result type(s) appear between '=' and the op name
+    pat = re.compile(
+        r"=\s+((?:\([^)]*\))|(?:\w+\[[^\]]*\]\S*))\s+(%?)("
+        + "|".join(_COLLECTIVES) + r")(-start)?\(")
+    for m in pat.finditer(hlo_text):
+        types, _, op, _ = m.groups()
+        b = 0
+        for t in re.findall(r"\w+\[[\d,]*\]", types):
+            b += _shape_bytes(t)
+        out[op] += b
+        counts[op] += 1
+    out_total = sum(out.values())
+    return {"by_op": out, "counts": counts, "total": out_total}
+
+
+def _flatten_cost(ca) -> dict:
+    if ca is None:
+        return {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float)) and not k.startswith("utilization")}
+
+
+def _memory(ma) -> dict:
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def model_flops(cfg, n_params: int, shape) -> float:
+    """MODEL_FLOPS = 6ND train / 2ND per generated token (active params)."""
+    if cfg.n_routed:
+        emb = cfg.vocab * cfg.d_model * (1 if cfg.tied_embeddings else 2)
+        expert_p = 3 * cfg.d_model * cfg.d_expert * cfg.n_layers
+        inactive = (cfg.n_routed - cfg.top_k) * expert_p
+        n_active = n_params - inactive
+    else:
+        n_active = n_params
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1)
+    return (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+
+
+def logits_sharding(mesh, cfg, batch: int):
+    """(B, L, V) sharding honoring divisibility on both axes."""
+    dp = sh.dp_axes(mesh)
+    b_ax = dp if batch % sh.dp_size(mesh) == 0 else None
+    v_ax = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+    return NamedSharding(mesh, P(b_ax, None, v_ax))
+
+
+# Perf variants (EXPERIMENTS.md section Perf). Each entry: (config
+# overrides, step options). "opt" is the beyond-paper combination.
+VARIANTS = {
+    "baseline": ({}, {}),
+    "A1": ({"attn_kv_hoist": True}, {}),
+    "A2": ({}, {"cast_bf16": True}),
+    "A3": ({"moe_cap_shard": True}, {}),
+    "A12": ({"attn_kv_hoist": True}, {"cast_bf16": True}),
+    "A123": ({"attn_kv_hoist": True, "moe_cap_shard": True},
+             {"cast_bf16": True}),
+    "B1": ({"kv_mode": "anchored"}, {}),
+    "B2": ({"kv_mode": "anchored"}, {"serve_bf16": True}),
+    "C1": ({"ssd_compute": "bf16"}, {}),
+    "opt": ({"attn_kv_hoist": True, "moe_cap_shard": True,
+             "ssd_compute": "bf16"}, {"cast_bf16": True}),
+}
+
+
+def build_cell(arch: str, shape_name: str, *, smoke: bool, mesh,
+               variant: str = "baseline"):
+    """Returns (fn, in_args, in_shardings, out_shardings)."""
+    import dataclasses
+    cfg = registry.get_config(arch, smoke=smoke)
+    overrides, step_opts = VARIANTS[variant]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mod = registry.get_module(cfg)
+    specs = registry.input_specs(cfg, shape)
+    params_abs = registry.abstract_params(cfg)
+    if step_opts.get("serve_bf16") and shape.kind != "train":
+        # Perf B2: serving params live in bf16 with TP-only sharding -
+        # no FSDP gathers on the decode critical path (a serving system
+        # never holds fp32 masters).
+        params_abs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, jnp.bfloat16 if x.dtype == jnp.float32
+                else x.dtype),
+            params_abs)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_abs))
+    fsdp = (n_params >= FSDP_THRESHOLD
+            and not (step_opts.get("serve_bf16") and shape.kind != "train"))
+    p_sh = sh.param_shardings(mesh, params_abs, fsdp=fsdp)
+    repl = sh.replicated(mesh)
+    dp = sh.dp_axes(mesh)
+
+    if shape.kind == "train":
+        batch_abs = specs["batch"]
+        opt_abs = jax.eval_shape(adamw.init, params_abs)
+        o_sh = sh.opt_shardings(mesh, opt_abs, p_sh)
+        b_sh = sh.batch_shardings(mesh, batch_abs)
+        ocfg = adamw.OptConfig()
+
+        cast_bf16 = step_opts.get("cast_bf16", False)
+
+        def train_step(params, opt_state, batch):
+            if cast_bf16:
+                # Perf A2: cast the fp32 master to bf16 BEFORE use so the
+                # FSDP all-gathers move 2-byte words; grads come back
+                # bf16 and are accumulated fp32 in the optimizer.
+                def fwd(p):
+                    pb = jax.tree.map(
+                        lambda x: x.astype(jnp.bfloat16)
+                        if x.dtype == jnp.float32 and x.ndim >= 2 else x,
+                        p)
+                    return mod.loss_fn(pb, batch, cfg)
+            else:
+                def fwd(p):
+                    return mod.loss_fn(p, batch, cfg)
+            (loss, _), grads = jax.value_and_grad(
+                fwd, has_aux=True)(params)
+            new_p, new_o, metrics = adamw.apply_updates(
+                ocfg, params, grads, opt_state)
+            return new_p, new_o, loss
+
+        fn = train_step
+        in_args = (params_abs, opt_abs, batch_abs)
+        in_sh = (p_sh, o_sh, b_sh)
+        out_sh = (p_sh, o_sh, repl)
+    elif shape.kind == "prefill":
+        tok = specs["tokens"]
+        extra = {k: v for k, v in specs.items() if k != "tokens"}
+        e_sh = sh.batch_shardings(mesh, extra)
+        cache_abs = jax.eval_shape(
+            lambda p, t, **kw: mod.prefill(p, t, cfg, shape.seq_len, **kw),
+            params_abs, tok, **extra)[1]
+        c_sh = sh.cache_shardings(mesh, cache_abs, shape.global_batch,
+                                  shape.seq_len)
+
+        def prefill_step(params, tokens, **kw):
+            return mod.prefill(params, tokens, cfg, shape.seq_len, **kw)
+
+        fn = prefill_step
+        in_args = (params_abs, tok)
+        logits_sh = logits_sharding(mesh, cfg, shape.global_batch)
+        in_sh = (p_sh, sh.batch_shardings(mesh, tok))
+        if extra:
+            fn2 = fn
+
+            def fn(params, tokens, extra_in):
+                return fn2(params, tokens, **extra_in)
+
+            in_args = (params_abs, tok, extra)
+            in_sh = (p_sh, sh.batch_shardings(mesh, tok), e_sh)
+        out_sh = (logits_sh, c_sh)
+    else:  # decode
+        tok = specs["tokens"]
+        cache_abs = specs["cache"]
+        c_sh = sh.cache_shardings(mesh, cache_abs, shape.global_batch,
+                                  shape.seq_len)
+        tok_sh = sh.batch_shardings(mesh, tok)
+        logits_sh = logits_sharding(mesh, cfg, shape.global_batch)
+
+        def serve_step(params, tokens, cache):
+            return mod.decode_step(params, tokens, cache, cfg)
+
+        fn = serve_step
+        in_args = (params_abs, tok, cache_abs)
+        in_sh = (p_sh, tok_sh, c_sh)
+        out_sh = (logits_sh, c_sh)
+    return cfg, fn, in_args, in_sh, out_sh, n_params
+
+
+def _analyze(compiled, mesh):
+    cost = _flatten_cost(compiled.cost_analysis())
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    del hlo
+    return cost.get("flops", 0.0), cost.get("bytes accessed", 0.0), coll
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, smoke: bool,
+             out_dir: str | None, probe: str = "unrolled",
+             variant: str = "baseline") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "variant": variant, "ok": False}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        jax.set_mesh(mesh)
+        cfg, fn, in_args, in_sh, out_sh, n_params = build_cell(
+            arch, shape_name, smoke=smoke, mesh=mesh, variant=variant)
+        rec["n_params"] = n_params
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*in_args)
+            rec["t_lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["t_compile_s"] = round(time.time() - t1, 2)
+        mem = _memory(compiled.memory_analysis())
+        print(f"[{arch} {shape_name} {mesh_name}] "
+              f"mem={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB tmp "
+              f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB")
+        flops, byts, coll = _analyze(compiled, mesh)
+        rec.update({"raw_flops_per_device": flops,
+                    "raw_bytes_per_device": byts,
+                    "raw_collectives": coll})
+
+        # cost probe: XLA counts while-loop bodies once (verified 1/L on
+        # a scanned matmul); the fully-unrolled probe compile reports the
+        # true per-step flops/bytes/collective totals. Memory analysis
+        # stays with the loop form (the artifact that would run).
+        # probe: "unrolled" | "analytic" | "none"
+        if probe == "unrolled":
+            from repro.models import scan_config
+            t2 = time.time()
+            try:
+                with scan_config.full_unroll(), mesh:
+                    cfg2, fn2, in2, ish2, osh2, _ = build_cell(
+                        arch, shape_name, smoke=smoke, mesh=mesh,
+                        variant=variant)
+                    probe_c = jax.jit(
+                        fn2, in_shardings=ish2,
+                        out_shardings=osh2).lower(*in2).compile()
+                flops, byts, coll = _analyze(probe_c, mesh)
+                rec["probe"] = "unrolled"
+                del probe_c
+            except Exception as e:
+                probe = "analytic"
+                rec["probe_error"] = type(e).__name__
+            rec["t_probe_s"] = round(time.time() - t2, 2)
+        if probe == "analytic":
+            # layer-count scaling of the loop-form costs: exact for the
+            # layer-dominated portion, ignores the (small) outside-scan
+            # part; used where the unrolled compile is intractable.
+            rec["probe"] = "analytic"
+            scale = cfg.n_layers + getattr(cfg, "n_enc_layers", 0)
+            flops, byts = flops * scale, byts * scale
+            coll = {"by_op": {k: v * scale
+                              for k, v in coll["by_op"].items()},
+                    "counts": coll["counts"],
+                    "total": coll["total"] * scale}
+        elif probe == "none":
+            rec["probe"] = "none"
+
+        n_chips = mesh.devices.size
+        mf = model_flops(cfg, n_params, shape)
+        rec.update({
+            "ok": True,
+            "memory": mem,
+            "flops_per_device": flops,
+            "bytes_per_device": byts,
+            "collectives": coll,
+            "n_chips": n_chips,
+            "model_flops_global": mf,
+            # terms in seconds (cost_analysis is per-device for SPMD =>
+            # no /chips on flops/bytes; collective result-bytes likewise)
+            "t_compute": flops / PEAK_FLOPS,
+            "t_memory": byts / HBM_BW,
+            "t_collective": coll["total"] / ICI_BW,
+            "useful_flops_frac": (mf / n_chips) / flops if flops else None,
+        })
+        terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+                 "collective": rec["t_collective"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+        print(f"  flops/dev={flops:.3e} bytes/dev={byts:.3e} "
+              f"coll={coll['total']:.3e}B -> {rec['bottleneck']}-bound "
+              f"(c={rec['t_compute']*1e3:.1f}ms m={rec['t_memory']*1e3:.1f}ms "
+              f"x={rec['t_collective']*1e3:.1f}ms) "
+              f"probe={rec.get('probe')}")
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()
+        print(f"[{arch} {shape_name} {mesh_name}] FAIL {rec['error']}")
+    rec["t_total_s"] = round(time.time() - t0, 2)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "" if variant == "baseline" else f"__{variant}"
+        safe = f"{arch}__{shape_name}__{mesh_name}{suffix}".replace(
+            "/", "_")
+        with open(os.path.join(out_dir, safe + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run single-pod AND multi-pod meshes")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--probe-mode", default="unrolled",
+                    choices=["unrolled", "analytic", "none"])
+    ap.add_argument("--variant", default="baseline",
+                    choices=list(VARIANTS))
+    args = ap.parse_args()
+
+    cells = (registry.runnable_cells(smoke=args.smoke) if args.all
+             else [(args.arch, args.shape)])
+    meshes = [False, True] if args.both else [args.multi_pod]
+    n_ok = n_fail = 0
+    for arch, shape_name in cells:
+        for mp in meshes:
+            if args.skip_done and args.out:
+                mesh_name = "2x16x16" if mp else "16x16"
+                p = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_name}.json")
+                if os.path.exists(p):
+                    with open(p) as f:
+                        if json.load(f).get("ok"):
+                            n_ok += 1
+                            continue
+            rec = run_cell(arch, shape_name, multi_pod=mp,
+                           smoke=args.smoke, out_dir=args.out,
+                           probe=args.probe_mode,
+                           variant=args.variant)
+            n_ok += rec["ok"]
+            n_fail += not rec["ok"]
+    print(f"\ndry-run: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh definition (factory function - importing this module
+never touches jax device state).
+
+Target: TPU v5e, 256 chips/pod. Single pod = (16, 16) ("data", "model");
+two pods = (2, 16, 16) ("pod", "data", "model") - the "pod" axis carries
+pure data parallelism (gradient all-reduce crosses DCN, everything else
+stays on-pod ICI).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (elastic restarts, tests)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(AxisType.Auto,) * len(axes))
+
+
+def host_device_counts():
+    return {
+        "n_devices": jax.device_count(),
+        "n_local": jax.local_device_count(),
+        "process_index": jax.process_index(),
+        "process_count": jax.process_count(),
+    }

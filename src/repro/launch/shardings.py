@@ -1,0 +1,90 @@
+"""Sharding assignment for step-function inputs/outputs.
+
+Parameters go through models/partitioning.py rules (TP on "model", FSDP
+on "data" for large models). Batches shard their leading axis over the
+DP axes. Caches use a shape heuristic (works uniformly across the five
+cache types): batch axis over DP if divisible, else the longest
+sequence-like axis over "data"; a heads-like axis over "model" when it
+divides.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import partitioning as pt
+
+
+def dp_axes(mesh):
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def batch_shardings(mesh, batch_abs):
+    """Leading axis of every batch leaf -> DP axes (must divide)."""
+    dp = dp_axes(mesh)
+
+    def per_leaf(x):
+        if x.ndim >= 1 and x.shape[0] % dp_size(mesh) == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1))))
+        return replicated(mesh)
+
+    return jax.tree.map(per_leaf, batch_abs)
+
+
+def cache_shardings(mesh, cache_abs, batch: int, seq_len: int):
+    """Heuristic per-leaf cache sharding (see module docstring).
+
+    Cache leaves are (n_layers, B, ...) stacked. Axis 1 is batch.
+    """
+    dp = dp_axes(mesh)
+    dpn = dp_size(mesh)
+    model_n = mesh.shape["model"]
+
+    def per_leaf(x):
+        spec = [None] * x.ndim
+        used_model = False
+        if x.ndim >= 2 and x.shape[1] == batch and batch % dpn == 0:
+            spec[1] = dp
+        elif x.ndim >= 3:
+            # batch too small: shard the sequence-like axis over data
+            for ax in range(2, x.ndim):
+                if x.shape[ax] >= seq_len // 2 and x.shape[ax] % dpn == 0:
+                    spec[ax] = dp
+                    break
+        # heads-like axis on model (first remaining axis that divides and
+        # looks like heads: small-ish, divisible)
+        for ax in range(2, x.ndim):
+            if spec[ax] is None and 1 < x.shape[ax] <= 4096 \
+                    and x.shape[ax] % model_n == 0:
+                spec[ax] = "model"
+                used_model = True
+                break
+        del used_model
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(per_leaf, cache_abs)
+
+
+def param_shardings(mesh, params_abs, *, fsdp: bool):
+    return pt.tree_shardings(params_abs, mesh, fsdp=fsdp)
+
+
+def opt_shardings(mesh, opt_abs, p_shardings):
+    """Optimizer moments shard exactly like their parameters."""
+    from repro.optim.adamw import OptState
+
+    return OptState(
+        step=replicated(mesh),
+        mu=jax.tree.map(lambda _, s: s, opt_abs.mu, p_shardings),
+        nu=jax.tree.map(lambda _, s: s, opt_abs.nu, p_shardings),
+    )

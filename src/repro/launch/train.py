@@ -1,0 +1,154 @@
+"""Training driver: data pipeline -> jit train_step -> checkpoint/
+restart -> heartbeat + straggler watchdog -> (optional) elastic resize.
+
+Runs end-to-end on CPU with reduced configs (examples/train_lm.py) and
+unchanged on a pod: the mesh is the only thing that grows.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager, reshard
+from repro.data.pipeline import DataConfig, make_batch
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_mesh
+from repro.models import registry
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import (
+    HeartbeatMonitor, HeartbeatWriter, StragglerWatchdog, TrainGuard,
+    plan_elastic_mesh)
+
+
+@dataclasses.dataclass
+class TrainRun:
+    """Reusable programmatic entry (examples + tests drive this)."""
+
+    arch: str
+    smoke: bool = True
+    steps: int = 50
+    batch: int = 8
+    seq: int = 128
+    ckpt_dir: str | None = None
+    ckpt_every: int = 20
+    ckpt_async: bool = True
+    mesh_shape: tuple = ()  # () -> single device
+    seed: int = 0
+    lr: float = 1e-3
+    log_every: int = 10
+    heartbeat_dir: str | None = None
+
+    def build(self):
+        cfg = registry.get_config(self.arch, smoke=self.smoke)
+        mod = registry.get_module(cfg)
+        mesh = None
+        if self.mesh_shape:
+            mesh = make_mesh(self.mesh_shape, ("data", "model"))
+            jax.set_mesh(mesh)
+        params = mod.init_params(jax.random.key(self.seed), cfg)
+        opt_state = adamw.init(params)
+        ocfg = adamw.OptConfig(lr=self.lr, warmup_steps=20,
+                               total_steps=self.steps)
+        dcfg = DataConfig(vocab=cfg.vocab, seq_len=self.seq,
+                          global_batch=self.batch, seed=self.seed)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: mod.loss_fn(p, self._with_stubs(batch, cfg), cfg),
+                has_aux=True)(params)
+            new_p, new_o, om = adamw.apply_updates(
+                ocfg, params, grads, opt_state)
+            return new_p, new_o, {"loss": loss, **om}
+
+        return cfg, mod, mesh, params, opt_state, dcfg, jax.jit(train_step)
+
+    @staticmethod
+    def _with_stubs(batch, cfg):
+        """Synthesize deterministic modality-stub inputs from tokens."""
+        out = dict(batch)
+        B = batch["tokens"].shape[0]
+        if cfg.family == "encdec" and "frames" not in out:
+            key = jax.random.key(0)
+            out["frames"] = jax.random.normal(
+                key, (B, cfg.src_len, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm" and "patch_embeds" not in out:
+            key = jax.random.key(1)
+            out["patch_embeds"] = jax.random.normal(
+                key, (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        return out
+
+    def run(self, on_step=None) -> dict:
+        cfg, mod, mesh, params, opt_state, dcfg, train_step = self.build()
+        start_step = 0
+        ckpt = CheckpointManager(self.ckpt_dir) if self.ckpt_dir else None
+        if ckpt is not None:
+            restored, at = ckpt.restore((params, opt_state))
+            if restored is not None:
+                params, opt_state = restored
+                params = jax.tree.map(jnp.asarray, params)
+                opt_state = jax.tree.map(jnp.asarray, opt_state)
+                start_step = at
+                print(f"[train] resumed from step {at}")
+
+        guard = None
+        if self.heartbeat_dir:
+            guard = TrainGuard(
+                heartbeat=HeartbeatWriter(self.heartbeat_dir, 0),
+                watchdog=StragglerWatchdog(),
+                monitor=HeartbeatMonitor(self.heartbeat_dir),
+                expected_hosts=1)
+
+        losses = []
+        for step in range(start_step, self.steps):
+            t0 = time.time()
+            batch = make_batch(dcfg, step)
+            params, opt_state, m = train_step(params, opt_state, batch)
+            loss = float(m["loss"])
+            losses.append(loss)
+            dt = time.time() - t0
+            if guard:
+                guard.on_step(step, dt)
+            if on_step:
+                on_step(step, loss)
+            if step % self.log_every == 0:
+                print(f"[train] step {step:5d} loss {loss:.4f} "
+                      f"({dt*1e3:.0f} ms)")
+            if ckpt and (step + 1) % self.ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt_state),
+                          blocking=not self.ckpt_async)
+        if ckpt:
+            ckpt.save(self.steps, (params, opt_state), blocking=True)
+        return {"losses": losses, "params": params,
+                "final_loss": losses[-1] if losses else None}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m",
+                    choices=registry.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--heartbeat-dir")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+    run = TrainRun(arch=args.arch, smoke=args.smoke, steps=args.steps,
+                   batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
+                   heartbeat_dir=args.heartbeat_dir, lr=args.lr)
+    out = run.run()
+    print(f"[train] done; final loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

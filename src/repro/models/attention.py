@@ -1,0 +1,369 @@
+"""GQA attention: train/prefill (full-sequence causal) and single-token
+decode against a KV cache.
+
+Two cache representations:
+  * ``DenseKVCache``   - plain bf16 (B, Hkv, L, Dh) ring buffer (baseline).
+  * ``AnchoredKVCache``- the paper's technique (RCLL-KV): closed 128-token
+    blocks live as anchor(fp32) + scale(fp32) + residual(int8/fp16); the
+    open block is an fp32 tail buffer. Block closure is a pure function of
+    ``length % block`` so the decode step stays shape-static.
+
+The XLA attention path is the default (dry-run / CPU); kernels/
+flash_attention.py and kernels/rcll_kv_attention.py are the TPU hot-spot
+implementations validated against the same math.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import anchored
+from repro.models import scan_config
+from repro.models import layers
+from repro.models import partitioning as pt
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model, n_heads, n_kv, d_head, out_dim=None):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    out_dim = out_dim or d_model
+    return {
+        "wq": layers.dense_init(kq, d_model, n_heads * d_head),
+        "wk": layers.dense_init(kk, d_model, n_kv * d_head),
+        "wv": layers.dense_init(kv, d_model, n_kv * d_head),
+        "wo": layers.dense_init(ko, n_heads * d_head, out_dim),
+    }
+
+
+def _qkv(p, x, n_heads, n_kv, d_head, compute_dtype):
+    B, L, _ = x.shape
+    xc = x.astype(compute_dtype)
+    q = (xc @ p["wq"].astype(compute_dtype)).reshape(B, L, n_heads, d_head)
+    k = (xc @ p["wk"].astype(compute_dtype)).reshape(B, L, n_kv, d_head)
+    v = (xc @ p["wv"].astype(compute_dtype)).reshape(B, L, n_kv, d_head)
+    q = pt.act(q, "batch", None, "model", None)
+    return q, k, v
+
+
+def sdpa(q, k, v, *, causal: bool, length: Array | None = None,
+         q_offset: Array | int = 0):
+    """Scaled dot-product attention, fp32 accumulation, GQA via reshape.
+
+    q: (B, Lq, H, Dh); k/v: (B, Lk, Hkv, Dh).
+    length: optional (B,) valid KV length (decode masking).
+    q_offset: position of q[0] within the KV timeline (causal masking).
+    """
+    B, Lq, H, Dh = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Lq, Hkv, rep, Dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    # s: (B, Hkv, rep, Lq, Lk)
+    s = jnp.einsum("blgrd,bmgd->bgrlm", qg, kf) / np.sqrt(Dh)
+    rows = (jnp.asarray(q_offset) + jnp.arange(Lq))[:, None]
+    cols = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask = mask & (rows >= cols)
+    if length is not None:
+        mask = mask[None] & (cols[None] < length[:, None, None])
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+    else:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p_ = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrlm,bmgd->blgrd", p_, v.astype(jnp.float32))
+    return out.reshape(B, Lq, H, Dh)
+
+
+ATTN_CHUNK = 512  # q-block size for memory-linear (flash-style) attention
+
+
+def sdpa_chunked(q, k, v, *, causal: bool, chunk: int = ATTN_CHUNK,
+                 length=None, kv_hoist: bool = False):
+    """Query-blocked attention: materializes (B,H,chunk,Lk) scores instead
+    of (B,H,Lq,Lk) - the XLA-level equivalent of the flash tiling in
+    kernels/flash_attention.py (O(L) activation memory, exact math).
+
+    kv_hoist: force K/V to the attention-ready sharding ONCE before the
+    chunk loop. Without it GSPMD re-gathers the sequence-sharded K/V on
+    every chunk iteration (measured: 3507 all-gathers / 565 GB per step
+    on llama3-3b train_4k - EXPERIMENTS.md Perf iteration A1)."""
+    B, Lq, H, Dh = q.shape
+    if kv_hoist:
+        # batch-sharded, sequence gathered: the layout every chunk reads
+        k = pt.act(k, "batch", None, None, None)
+        v = pt.act(v, "batch", None, None, None)
+    if Lq <= chunk or Lq % chunk != 0:
+        return sdpa(q, k, v, causal=causal, length=length)
+    nc = Lq // chunk
+    qc = q.reshape(B, nc, chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+
+    def one(_, args):
+        i, qi = args
+        return None, sdpa(qi, k, v, causal=causal, length=length,
+                          q_offset=i * chunk)
+
+    _, out = jax.lax.scan(one, None, (jnp.arange(nc), qc),
+                          unroll=scan_config.unroll())
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Lq, H, Dh)
+
+
+def attention_full(p, x, positions, *, n_heads, n_kv, d_head,
+                   rope_theta=10000.0, causal=True,
+                   compute_dtype=layers.DEFAULT_COMPUTE, use_rope=True,
+                   kv_hoist: bool = False):
+    """Train/prefill self-attention. Returns (out, (k, v) for caching)."""
+    B, L, _ = x.shape
+    q, k, v = _qkv(p, x, n_heads, n_kv, d_head, compute_dtype)
+    if use_rope:
+        q = layers.apply_rope(q, positions, rope_theta)
+        k = layers.apply_rope(k, positions, rope_theta)
+    out = sdpa_chunked(q, k, v, causal=causal, kv_hoist=kv_hoist)
+    out = out.astype(compute_dtype).reshape(B, L, n_heads * d_head)
+    return out @ p["wo"].astype(compute_dtype), (k, v)
+
+
+def cross_attention(p, x, kv_src, *, n_heads, n_kv, d_head,
+                    compute_dtype=layers.DEFAULT_COMPUTE):
+    """Encoder-decoder cross attention (no RoPE, non-causal)."""
+    B, L, _ = x.shape
+    S = kv_src.shape[1]
+    xc = x.astype(compute_dtype)
+    sc = kv_src.astype(compute_dtype)
+    q = (xc @ p["wq"].astype(compute_dtype)).reshape(B, L, n_heads, d_head)
+    k = (sc @ p["wk"].astype(compute_dtype)).reshape(B, S, n_kv, d_head)
+    v = (sc @ p["wv"].astype(compute_dtype)).reshape(B, S, n_kv, d_head)
+    out = sdpa_chunked(q, k, v, causal=False)
+    out = out.astype(compute_dtype).reshape(B, L, n_heads * d_head)
+    return out @ p["wo"].astype(compute_dtype)
+
+
+# --------------------------------------------------------------------------
+# KV caches
+# --------------------------------------------------------------------------
+class DenseKVCache(NamedTuple):
+    k: Array  # (B, L, Hkv, Dh) cache dtype
+    v: Array
+    length: Array  # (B,) int32
+
+    @classmethod
+    def init(cls, batch, max_len, n_kv, d_head, dtype=jnp.bfloat16):
+        shape = (batch, max_len, n_kv, d_head)
+        return cls(
+            k=jnp.zeros(shape, dtype),
+            v=jnp.zeros(shape, dtype),
+            length=jnp.zeros((batch,), jnp.int32),
+        )
+
+
+class AnchoredKVCache(NamedTuple):
+    """RCLL-KV: closed blocks anchored+quantized, open block fp32 tail.
+
+    k_resid/v_resid: (B, nblk, blk, Hkv, Dh) residual dtype
+    k_anchor/k_scale/...: (B, nblk, 1, Hkv, Dh) fp32
+    tail_k/tail_v: (B, blk, Hkv, Dh) fp32 - the open (unquantized) block
+    length: (B,) int32 total tokens
+    """
+
+    k_resid: Array
+    k_anchor: Array
+    k_scale: Array
+    v_resid: Array
+    v_anchor: Array
+    v_scale: Array
+    tail_k: Array
+    tail_v: Array
+    length: Array
+
+    @classmethod
+    def init(cls, batch, max_len, n_kv, d_head, block=128,
+             resid_dtype=jnp.int8):
+        nblk = max_len // block
+        rs = (batch, nblk, block, n_kv, d_head)
+        an = (batch, nblk, 1, n_kv, d_head)
+        tl = (batch, block, n_kv, d_head)
+        z = jnp.zeros
+        return cls(
+            k_resid=z(rs, resid_dtype), k_anchor=z(an, jnp.float32),
+            k_scale=z(an, jnp.float32), v_resid=z(rs, resid_dtype),
+            v_anchor=z(an, jnp.float32), v_scale=z(an, jnp.float32),
+            tail_k=z(tl, jnp.float32), tail_v=z(tl, jnp.float32),
+            length=z((batch,), jnp.int32),
+        )
+
+    @property
+    def block(self) -> int:
+        return self.tail_k.shape[1]
+
+
+def dense_cache_update(cache: DenseKVCache, k_new, v_new):
+    """Insert one token's k/v at position `length` (per batch row)."""
+    B = k_new.shape[0]
+    idx = cache.length  # (B,)
+    k = jax.vmap(
+        lambda c, kn, i: jax.lax.dynamic_update_slice_in_dim(c, kn, i, 0)
+    )(cache.k, k_new.astype(cache.k.dtype), idx)
+    v = jax.vmap(
+        lambda c, vn, i: jax.lax.dynamic_update_slice_in_dim(c, vn, i, 0)
+    )(cache.v, v_new.astype(cache.v.dtype), idx)
+    return DenseKVCache(k=k, v=v, length=cache.length + 1)
+
+
+def decode_attention_dense(p, x, cache: DenseKVCache, *, n_heads, n_kv,
+                           d_head, rope_theta=10000.0,
+                           compute_dtype=layers.DEFAULT_COMPUTE,
+                           use_rope=True):
+    """One-token decode with a dense cache. x: (B, 1, d_model)."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(p, x, n_heads, n_kv, d_head, compute_dtype)
+    pos = cache.length[:, None]  # (B, 1)
+    if use_rope:
+        q = layers.apply_rope(q, pos, rope_theta)
+        k_new = layers.apply_rope(k_new, pos, rope_theta)
+    cache = dense_cache_update(cache, k_new, v_new)
+    out = sdpa(q, cache.k, cache.v, causal=False, length=cache.length)
+    out = out.astype(compute_dtype).reshape(B, 1, n_heads * d_head)
+    return out @ p["wo"].astype(compute_dtype), cache
+
+
+def _quantize_block(tail, resid_dtype):
+    """anchor/scale/residual for one (B, blk, Hkv, Dh) block.
+
+    Returns anchor/scale (B, 1, Hkv, Dh) and residual (B, blk, Hkv, Dh) -
+    the same math as core.anchored.encode, specialized to this layout.
+    """
+    a, s, r = _quant_blocks(tail[:, None], resid_dtype)
+    return a[:, 0], s[:, 0], r[:, 0]
+
+
+def anchored_cache_update(cache: AnchoredKVCache, k_new, v_new):
+    """Append one token. When the tail fills, quantize it into its block
+    slot (branch-free: the conditional is a jnp.where on `full`)."""
+    B, blk = cache.tail_k.shape[0], cache.block
+    pos_in_blk = cache.length % blk  # (B,)
+    blk_idx = cache.length // blk
+
+    def upd_tail(tail, new):
+        return jax.vmap(
+            lambda t, n, i: jax.lax.dynamic_update_slice_in_dim(
+                t, n.astype(t.dtype), i, 0)
+        )(tail, new, pos_in_blk)
+
+    tail_k = upd_tail(cache.tail_k, k_new)
+    tail_v = upd_tail(cache.tail_v, v_new)
+
+    full = (pos_in_blk == blk - 1)  # (B,) tail just completed a block
+    ka, ks, kr = _quantize_block(tail_k, cache.k_resid.dtype)
+    va, vs, vr = _quantize_block(tail_v, cache.v_resid.dtype)
+
+    def put(dst, src, flag):
+        cur = jax.vmap(lambda d, i: jax.lax.dynamic_index_in_dim(
+            d, i, 0, keepdims=True))(dst, blk_idx)
+        new = jnp.where(flag[:, None, None, None, None],
+                        src[:, None], cur)
+        return jax.vmap(lambda d, n, i: jax.lax.dynamic_update_slice_in_dim(
+            d, n, i, 0))(dst, new.astype(dst.dtype), blk_idx)
+
+    out = AnchoredKVCache(
+        k_resid=put(cache.k_resid, kr, full),
+        k_anchor=put(cache.k_anchor, ka, full),
+        k_scale=put(cache.k_scale, ks, full),
+        v_resid=put(cache.v_resid, vr, full),
+        v_anchor=put(cache.v_anchor, va, full),
+        v_scale=put(cache.v_scale, vs, full),
+        tail_k=tail_k, tail_v=tail_v,
+        length=cache.length + 1,
+    )
+    return out
+
+
+def anchored_cache_from_prefill(k, v, length, block=128,
+                                resid_dtype=jnp.int8):
+    """Quantize prefill K/V (B, L, Hkv, Dh) into an AnchoredKVCache."""
+    B, L, Hkv, Dh = k.shape
+    nblk = L // block
+    kb = k.astype(jnp.float32).reshape(B, nblk, block, Hkv, Dh)
+    vb = v.astype(jnp.float32).reshape(B, nblk, block, Hkv, Dh)
+    ka, ks, kr = _quant_blocks(kb, resid_dtype)
+    va, vs, vr = _quant_blocks(vb, resid_dtype)
+    tail = jnp.zeros((B, block, Hkv, Dh), jnp.float32)
+    return AnchoredKVCache(
+        k_resid=kr, k_anchor=ka, k_scale=ks,
+        v_resid=vr, v_anchor=va, v_scale=vs,
+        tail_k=tail, tail_v=tail, length=length,
+    )
+
+
+def _quant_blocks(xb, resid_dtype):
+    """xb: (B, nblk, blk, Hkv, Dh) -> anchors (B,nblk,1,...), residuals."""
+    anchor = jnp.mean(xb, axis=2, keepdims=True)
+    dev = xb - anchor
+    scale = jnp.maximum(jnp.max(jnp.abs(dev), axis=2, keepdims=True), 1e-30)
+    resid = dev / scale
+    if jnp.dtype(resid_dtype) == jnp.int8:
+        resid = jnp.clip(jnp.round(resid * 127.0), -127, 127).astype(jnp.int8)
+    else:
+        resid = resid.astype(resid_dtype)
+    return anchor, scale, resid
+
+
+def _dequant(resid, anchor, scale):
+    if resid.dtype == jnp.int8:
+        r = resid.astype(jnp.float32) * (1.0 / 127.0)
+    else:
+        r = resid.astype(jnp.float32)
+    return anchor + scale * r
+
+
+def decode_attention_anchored(p, x, cache: AnchoredKVCache, *, n_heads,
+                              n_kv, d_head, rope_theta=10000.0,
+                              compute_dtype=layers.DEFAULT_COMPUTE,
+                              use_rope=True):
+    """One-token decode over the RCLL-KV cache (XLA path; the Pallas
+    kernel kernels/rcll_kv_attention.py implements the same math)."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(p, x, n_heads, n_kv, d_head, compute_dtype)
+    pos = cache.length[:, None]
+    if use_rope:
+        q = layers.apply_rope(q, pos, rope_theta)
+        k_new = layers.apply_rope(k_new, pos, rope_theta)
+    cache = anchored_cache_update(cache, k_new.astype(jnp.float32),
+                                  v_new.astype(jnp.float32))
+    B_, nblk, blk, Hkv, Dh = cache.k_resid.shape
+    k_closed = _dequant(cache.k_resid, cache.k_anchor, cache.k_scale)
+    v_closed = _dequant(cache.v_resid, cache.v_anchor, cache.v_scale)
+    k_closed = k_closed.reshape(B, nblk * blk, Hkv, Dh)
+    v_closed = v_closed.reshape(B, nblk * blk, Hkv, Dh)
+    # closed blocks cover [0, length - length%blk); tail covers the rest
+    closed_len = (cache.length // blk) * blk
+    kk = jnp.concatenate([k_closed, cache.tail_k], axis=1)
+    vv = jnp.concatenate([v_closed, cache.tail_v], axis=1)
+    # mask: closed region < closed_len, tail region < length%blk
+    Lk = kk.shape[1]
+    cols = jnp.arange(Lk)[None, :]
+    in_closed = (cols < closed_len[:, None])
+    in_tail = (cols >= nblk * blk) & (
+        (cols - nblk * blk) < (cache.length - closed_len)[:, None])
+    valid = in_closed | in_tail
+    out = _sdpa_masked(q, kk, vv, valid)
+    out = out.astype(compute_dtype).reshape(B, 1, n_heads * d_head)
+    return out @ p["wo"].astype(compute_dtype), cache
+
+
+def _sdpa_masked(q, k, v, valid):
+    B, Lq, H, Dh = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, Lq, Hkv, rep, Dh).astype(jnp.float32)
+    s = jnp.einsum("blgrd,bmgd->bgrlm", qg, k.astype(jnp.float32))
+    s = s / np.sqrt(Dh)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p_ = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrlm,bmgd->blgrd", p_, v.astype(jnp.float32))
+    return out.reshape(B, Lq, H, Dh)

@@ -1,0 +1,220 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every ``attn_every`` layers (arXiv:2411.15242).
+
+The shared block's weights are reused at every application site (Zamba2's
+parameter-sharing trick; per-site LoRA deltas are omitted - noted in
+DESIGN.md). Its input is concat(hidden, original embedding) in 2*d_model,
+attention + MLP run in 2*d_model, and a down projection brings the result
+back to d_model as a residual add.
+
+Structure for scan-friendliness: the first ``n_sites * attn_every``
+mamba layers are scanned as (n_sites, attn_every) groups - shared
+attention fires after each group - and the remaining tail layers are
+scanned without attention. All caches come out stacked.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers, mamba2
+from repro.models import partitioning as pt
+from repro.models import scan_config
+from repro.models import transformer as tf
+
+Array = jnp.ndarray
+
+
+def n_sites(cfg) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def tail_layers(cfg) -> int:
+    return cfg.n_layers - n_sites(cfg) * cfg.attn_every
+
+
+def shared_d(cfg) -> int:
+    return 2 * cfg.d_model
+
+
+def init_shared_block(key, cfg):
+    d2 = shared_d(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layers.init_rmsnorm(d2),
+        "attn": attn_lib.init_attention(
+            k1, d2, cfg.n_heads, cfg.n_kv, d2 // cfg.n_heads, out_dim=d2),
+        "ln2": layers.init_rmsnorm(d2),
+        "mlp": layers.init_swiglu(k2, d2, cfg.d_ff),
+        "w_down": layers.dense_init(k3, d2, cfg.d_model),
+    }
+
+
+def init_params(key, cfg):
+    ke, kl, ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed_tokens": layers.init_embed(
+            ke, cfg.vocab, cfg.d_model, tied=cfg.tied_embeddings),
+        "layers": jax.vmap(lambda k: tf.init_layer(k, cfg))(layer_keys),
+        "shared_attn": init_shared_block(ks, cfg),
+        "final_norm": layers.init_rmsnorm(cfg.d_model),
+    }
+
+
+def _shared_forward(p, h, emb0, positions, cfg):
+    """Full-seq shared block. Returns (residual for h, (k, v) cache)."""
+    x = jnp.concatenate([h, emb0], axis=-1)
+    xn = layers.rms_norm(p["ln1"], x)
+    out, (k, v) = attn_lib.attention_full(
+        p["attn"], xn, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        d_head=shared_d(cfg) // cfg.n_heads, rope_theta=cfg.rope_theta)
+    x = x + out
+    x = x + layers.swiglu(p["mlp"], layers.rms_norm(p["ln2"], x))
+    dtype = h.dtype
+    return (x.astype(dtype) @ p["w_down"].astype(dtype)), (k, v)
+
+
+def _shared_decode(p, h, emb0, cache_s, cfg):
+    x = jnp.concatenate([h, emb0], axis=-1)
+    xn = layers.rms_norm(p["ln1"], x)
+    out, new_cache = attn_lib.decode_attention_dense(
+        p["attn"], xn, cache_s, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        d_head=shared_d(cfg) // cfg.n_heads, rope_theta=cfg.rope_theta)
+    x = x + out
+    x = x + layers.swiglu(p["mlp"], layers.rms_norm(p["ln2"], x))
+    dtype = h.dtype
+    return (x.astype(dtype) @ p["w_down"].astype(dtype)), new_cache
+
+
+class HybridCache(NamedTuple):
+    mamba: mamba2.Mamba2Cache  # stacked (n_layers, ...)
+    shared: attn_lib.DenseKVCache  # stacked (n_sites, ...)
+
+
+def _split_stack(params_layers, cfg):
+    ns, ae = n_sites(cfg), cfg.attn_every
+    head = jax.tree.map(
+        lambda x: x[: ns * ae].reshape((ns, ae) + x.shape[1:]),
+        params_layers)
+    tail = jax.tree.map(lambda x: x[ns * ae:], params_layers)
+    return head, tail
+
+
+def forward(params, tokens, cfg, *, patch_embeds=None, return_cache=False):
+    B, L = tokens.shape
+    h = layers.embed(params["embed_tokens"], tokens)
+    emb0 = h
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    head, tail = _split_stack(params["layers"], cfg)
+
+    def mamba_body(hh, p_l):
+        out, cache = mamba2.mamba2_forward(
+            p_l["mixer"], layers.rms_norm(p_l["ln1"], hh), cfg.ssm_dims,
+            chunk=cfg.ssd_chunk)
+        return pt.act_seq(hh + out), cache
+
+    if cfg.remat == "full":
+        mamba_body = jax.checkpoint(mamba_body)
+
+    def group_body(hh, p_group):
+        hh, caches = jax.lax.scan(mamba_body, hh, p_group,
+                                  unroll=scan_config.unroll())
+        res, kv = _shared_forward(params["shared_attn"], hh, emb0,
+                                  positions, cfg)
+        return hh + res, (caches, kv)
+
+    h, (m_caches, s_caches) = jax.lax.scan(
+        group_body, h, head, unroll=scan_config.unroll())
+    # tail layers without shared attention
+    h, t_caches = jax.lax.scan(mamba_body, h, tail,
+                               unroll=scan_config.unroll())
+    h = layers.rms_norm(params["final_norm"], h)
+    lg = layers.logits(params["embed_tokens"], h)
+    if not return_cache:
+        return lg, None, jnp.zeros((), jnp.float32)
+    flat = jax.tree.map(
+        lambda a, b: jnp.concatenate(
+            [a.reshape((-1,) + a.shape[2:]), b], axis=0),
+        m_caches, t_caches)
+    return lg, (flat, s_caches), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg):
+    lg, _, aux = forward(params, batch["tokens"], cfg)
+    loss = layers.cross_entropy(lg[:, :-1], batch["labels"][:, 1:])
+    return loss, {"ce": loss, "aux": aux}
+
+
+def init_cache(cfg, batch: int, max_len: int) -> HybridCache:
+    ns = n_sites(cfg)
+
+    def stack(x, n):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), x)
+
+    return HybridCache(
+        mamba=stack(mamba2.Mamba2Cache.init(batch, cfg.ssm_dims),
+                    cfg.n_layers),
+        shared=stack(attn_lib.DenseKVCache.init(
+            batch, max_len, cfg.n_kv, shared_d(cfg) // cfg.n_heads),
+            ns),
+    )
+
+
+def prefill(params, tokens, cfg, max_len: int, *, patch_embeds=None):
+    B, L = tokens.shape
+    lg, (m_cache, s_kv), _ = forward(params, tokens, cfg, return_cache=True)
+    k, v = s_kv  # (n_sites, B, L, Hkv, Dh2)
+    pad = max_len - L
+    k = jnp.pad(k.astype(jnp.bfloat16),
+                ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v.astype(jnp.bfloat16),
+                ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    length = jnp.full((n_sites(cfg), B), L, jnp.int32)
+    return lg, HybridCache(
+        mamba=m_cache,
+        shared=attn_lib.DenseKVCache(k=k, v=v, length=length))
+
+
+def decode_step(params, tokens, cache: HybridCache, cfg):
+    B = tokens.shape[0]
+    h = layers.embed(params["embed_tokens"], tokens)
+    emb0 = h
+    ns, ae = n_sites(cfg), cfg.attn_every
+    head, tail = _split_stack(params["layers"], cfg)
+    m_head = jax.tree.map(
+        lambda x: x[: ns * ae].reshape((ns, ae) + x.shape[1:]), cache.mamba)
+    m_tail = jax.tree.map(lambda x: x[ns * ae:], cache.mamba)
+
+    def mamba_step(hh, xs):
+        p_l, c_l = xs
+        out, nc = mamba2.mamba2_decode(
+            p_l["mixer"], layers.rms_norm(p_l["ln1"], hh), c_l,
+            cfg.ssm_dims)
+        return hh + out, nc
+
+    def group_step(carry, xs):
+        hh = carry
+        p_group, c_group, c_shared = xs
+        hh, new_m = jax.lax.scan(mamba_step, hh, (p_group, c_group),
+                                 unroll=scan_config.unroll())
+        res, new_s = _shared_decode(params["shared_attn"], hh, emb0,
+                                    c_shared, cfg)
+        return hh + res, (new_m, new_s)
+
+    h, (new_m_head, new_shared) = jax.lax.scan(
+        group_step, h, (head, m_head, cache.shared),
+        unroll=scan_config.unroll())
+    h, new_m_tail = jax.lax.scan(mamba_step, h, (tail, m_tail),
+                                 unroll=scan_config.unroll())
+    new_mamba = jax.tree.map(
+        lambda a, b: jnp.concatenate(
+            [a.reshape((-1,) + a.shape[2:]), b], axis=0),
+        new_m_head, new_m_tail)
+    h = layers.rms_norm(params["final_norm"], h)
+    lg = layers.logits(params["embed_tokens"], h)
+    return lg, HybridCache(mamba=new_mamba, shared=new_shared)

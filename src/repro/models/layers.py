@@ -1,0 +1,169 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings, losses.
+
+Functional style throughout: ``init_*(key, ...) -> params dict`` and pure
+apply functions. Explicit dtypes: params are stored fp32 (master) and cast
+to the compute dtype at use; normalization/softmax/loss accumulate fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import partitioning as pt
+
+Array = jnp.ndarray
+
+DEFAULT_COMPUTE = jnp.bfloat16
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -3.0, 3.0, shape, dtype)
+
+
+def dense_init(key, d_in, d_out, dtype=jnp.float32):
+    return truncated_normal(key, (d_in, d_out), 1.0 / np.sqrt(d_in), dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def init_rmsnorm(d):
+    return {"norm_w": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["norm_w"]
+    return out.astype(x.dtype)
+
+
+def init_layernorm(d):
+    return {"norm_w": jnp.ones((d,), jnp.float32),
+            "norm_bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["norm_w"] + p["norm_bias"]
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., L, H, Dh) or (..., L, Dh); positions: (..., L)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, dh/2)
+    if x.ndim == ang.ndim + 1:  # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int) -> Array:
+    pos = np.arange(length)[:, None]
+    div = np.exp(np.arange(0, d, 2) * (-np.log(10000.0) / d))
+    pe = np.zeros((length, d), np.float32)
+    pe[:, 0::2] = np.sin(pos * div)
+    pe[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(pe)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def init_swiglu(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff),
+        "w_up": dense_init(k2, d_model, d_ff),
+        "w_down": dense_init(k3, d_ff, d_model),
+    }
+
+
+def _act_hidden(h):
+    """Constrain an MLP hidden activation of any rank: leading axis on
+    the DP axes, trailing (ffn) axis on "model"."""
+    return pt.act(h, "batch", *([None] * (h.ndim - 2)), "model")
+
+
+def swiglu(p, x, compute_dtype=DEFAULT_COMPUTE):
+    xc = x.astype(compute_dtype)
+    g = xc @ p["w_gate"].astype(compute_dtype)
+    u = xc @ p["w_up"].astype(compute_dtype)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    h = _act_hidden(h)
+    return h @ p["w_down"].astype(compute_dtype)
+
+
+def init_gelu_mlp(key, d_model, d_ff):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, d_model, d_ff),
+        "w_down": dense_init(k2, d_ff, d_model),
+    }
+
+
+def gelu_mlp(p, x, compute_dtype=DEFAULT_COMPUTE):
+    xc = x.astype(compute_dtype)
+    h = xc @ p["w_up"].astype(compute_dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(compute_dtype)
+    h = _act_hidden(h)
+    return h @ p["w_down"].astype(compute_dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding / logits
+# --------------------------------------------------------------------------
+def init_embed(key, vocab, d_model, tied: bool = True):
+    # 1/sqrt(d) scale keeps tied-unembedding logits O(1) at init.
+    p = {"embed": truncated_normal(key, (vocab, d_model),
+                                   1.0 / np.sqrt(d_model))}
+    if not tied:
+        p["unembed"] = truncated_normal(
+            jax.random.fold_in(key, 1), (vocab, d_model), 1.0 / np.sqrt(d_model)
+        )
+    return p
+
+
+def embed(p, tokens, compute_dtype=DEFAULT_COMPUTE):
+    out = jnp.take(p["embed"].astype(compute_dtype), tokens, axis=0)
+    return pt.act(out, "batch", None, None)
+
+
+def logits(p, x, compute_dtype=DEFAULT_COMPUTE):
+    w = p.get("unembed", p["embed"]).astype(compute_dtype)
+    out = x.astype(compute_dtype) @ w.T
+    out = pt.act_vocab(out)
+    return out.astype(jnp.float32)
+
+
+def cross_entropy(lg: Array, labels: Array, z_loss: float = 1e-4):
+    """Mean token cross-entropy with optional z-loss, fp32 accumulation.
+
+    The label pick is an iota-compare reduction, not take_along_axis: a
+    gather along the vocab axis would force GSPMD to all-gather the
+    vocab-sharded logits (measured: +30GiB/device on llama3-3b train);
+    the masked sum partitions cleanly (each vocab shard sums its slice).
+    """
+    lg = lg.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+    ll = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], lg, 0.0), axis=-1)
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse**2
+    return jnp.mean(loss)

@@ -1,0 +1,241 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060).
+
+Chunked SSD for training/prefill (the "quadratic-in-chunk, linear-across-
+chunks" algorithm of Listing 1 in the paper), and the O(1)-per-token
+recurrent form for decode. State is fp32 (an accumulator - the SPH
+paper's own rule: integrators stay high precision; see DESIGN.md
+section 4 on why RCLL-style quantization is *not* applied here).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models import partitioning as pt
+from repro.models import scan_config
+
+Array = jnp.ndarray
+
+
+class SSMDims(NamedTuple):
+    d_model: int
+    d_inner: int  # expand * d_model
+    n_heads: int  # d_inner / head_dim
+    head_dim: int
+    d_state: int
+    n_groups: int
+    d_conv: int
+
+
+def make_dims(d_model, d_state, *, expand=2, head_dim=64, n_groups=1,
+              d_conv=4) -> SSMDims:
+    d_inner = expand * d_model
+    return SSMDims(d_model, d_inner, d_inner // head_dim, head_dim,
+                   d_state, n_groups, d_conv)
+
+
+def init_mamba2(key, dims: SSMDims):
+    ks = jax.random.split(key, 4)
+    d_in_proj = (2 * dims.d_inner + 2 * dims.n_groups * dims.d_state
+                 + dims.n_heads)
+    conv_dim = dims.d_inner + 2 * dims.n_groups * dims.d_state
+    return {
+        "in_proj": layers.dense_init(ks[0], dims.d_model, d_in_proj),
+        "conv_w": layers.truncated_normal(
+            ks[1], (dims.d_conv, conv_dim), 1.0 / np.sqrt(dims.d_conv)),
+        "conv_bias": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, dims.n_heads)),
+        "dt_bias": jnp.zeros((dims.n_heads,), jnp.float32),
+        "d_skip": jnp.ones((dims.n_heads,), jnp.float32),
+        "out_norm": layers.init_rmsnorm(dims.d_inner),
+        "out_proj": layers.dense_init(ks[3], dims.d_inner, dims.d_model),
+    }
+
+
+def _split_proj(z_xbc_dt, dims: SSMDims):
+    di, g, n, h = dims.d_inner, dims.n_groups, dims.d_state, dims.n_heads
+    z = z_xbc_dt[..., :di]
+    xbc = z_xbc_dt[..., di : 2 * di + 2 * g * n]
+    dt = z_xbc_dt[..., 2 * di + 2 * g * n :]
+    return z, xbc, dt
+
+
+def _segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum_{j < s <= i} a[..., s]."""
+    L = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, B, C, dims: SSMDims, chunk: int,
+                init_state=None, einsum_dtype=None):
+    """Chunked SSD scan.
+
+    x:  (b, L, h, p) head inputs
+    dt: (b, L, h) softplus'd timesteps
+    a:  (h,) negative decay rates (-exp(a_log))
+    B, C: (b, L, g, n)
+    Returns (y (b, L, h, p), final_state (b, h, p, n)).
+    """
+    b, L, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        # dt=0 padding is exact: decay exp(0)=1, contribution dt*x*B=0,
+        # so the final state is untouched and padded outputs are sliced.
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, dt, B, C = zpad(x), zpad(dt), zpad(B), zpad(C)
+        L = L + pad
+    nc = L // chunk
+    rep = h // g
+
+    xb = x.reshape(b, nc, chunk, h, p)
+    dtb = dt.reshape(b, nc, chunk, h)
+    Bb = B.reshape(b, nc, chunk, g, n)
+    Cb = C.reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bb, rep, axis=3)  # (b,nc,l,h,n)
+    Ch = jnp.repeat(Cb, rep, axis=3)
+
+    da = dtb * a[None, None, None, :]  # (b,nc,l,h)
+    da_t = da.transpose(0, 1, 3, 2)  # (b,nc,h,l)
+    Lmat = jnp.exp(_segsum(da_t))  # (b,nc,h,l,l)
+
+    # intra-chunk (quadratic within chunk). Perf C1: the two big
+    # einsums optionally run in bf16 (decay/cumsum math stays fp32 -
+    # the paper's accumulator rule); fp32 is the faithful default.
+    ed = einsum_dtype or jnp.float32
+    s = jnp.einsum("bclhn,bcmhn->bchlm", Ch.astype(ed), Bh.astype(ed))
+    y_diag = jnp.einsum(
+        "bchlm,bchlm,bcmh,bcmhp->bclhp",
+        s.astype(ed), Lmat.astype(ed), dtb.astype(ed), xb.astype(ed)
+    ).astype(jnp.float32)
+
+    # chunk-final states
+    cums = jnp.cumsum(da_t, axis=-1)
+    decay_to_end = jnp.exp(cums[..., -1:] - cums)  # (b,nc,h,l)
+    states = jnp.einsum("bclhn,bchl,bclh,bclhp->bchpn",
+                        Bh.astype(ed), decay_to_end.astype(ed),
+                        dtb.astype(ed), xb.astype(ed)).astype(jnp.float32)
+
+    # inter-chunk recurrence (sequential scan over nc chunks)
+    chunk_decay = jnp.exp(cums[..., -1])  # (b,nc,h) total decay per chunk
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # st (b,h,p,n), dec (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* this chunk
+
+    final, entering = jax.lax.scan(
+        scan_fn, init_state,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=scan_config.unroll(),
+    )
+    entering = entering.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+    # contribution of the entering state to each position
+    decay_from_start = jnp.exp(cums)  # (b,nc,h,l)
+    y_off = jnp.einsum("bclhn,bchl,bchpn->bclhp",
+                       Ch.astype(ed), decay_from_start.astype(ed),
+                       entering.astype(ed)).astype(jnp.float32)
+    y = (y_diag + y_off).reshape(b, L, h, p)
+    if pad:
+        y = y[:, : L - pad]
+    return y, final
+
+
+def mamba2_forward(p, x, dims: SSMDims, *, chunk=128,
+                   compute_dtype=layers.DEFAULT_COMPUTE,
+                   ssd_compute: str = "fp32"):
+    """Full-sequence Mamba2 block. x: (B, L, d_model).
+
+    Returns (out, Mamba2Cache) - the cache is decode-ready (final SSM
+    state + the last d_conv-1 raw conv inputs)."""
+    Bsz, L, _ = x.shape
+    proj = x.astype(compute_dtype) @ p["in_proj"].astype(compute_dtype)
+    proj = pt.act(proj, "batch", None, "model")
+    z, xbc, dt = _split_proj(proj, dims)
+    # causal depthwise conv over xbc
+    w = p["conv_w"].astype(jnp.float32)  # (d_conv, conv_dim)
+    xbc_f = xbc.astype(jnp.float32)
+    conv_tail = xbc_f[:, L - (dims.d_conv - 1):, :]  # decode conv history
+    pad = jnp.pad(xbc_f, ((0, 0), (dims.d_conv - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + L] * w[i][None, None, :]
+        for i in range(dims.d_conv)
+    ) + p["conv_bias"]
+    xbc = jax.nn.silu(conv)
+    xs = xbc[..., : dims.d_inner]
+    Bc = xbc[..., dims.d_inner : dims.d_inner + dims.n_groups * dims.d_state]
+    Cc = xbc[..., dims.d_inner + dims.n_groups * dims.d_state :]
+    xh = xs.reshape(Bsz, L, dims.n_heads, dims.head_dim)
+    Bm = Bc.reshape(Bsz, L, dims.n_groups, dims.d_state)
+    Cm = Cc.reshape(Bsz, L, dims.n_groups, dims.d_state)
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, state = ssd_chunked(xh.astype(jnp.float32), dt_, a, Bm, Cm, dims,
+                           chunk, einsum_dtype=(
+                               jnp.bfloat16 if ssd_compute == "bf16"
+                               else jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(Bsz, L, dims.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))  # gated
+    y = layers.rms_norm(p["out_norm"], y.astype(compute_dtype))
+    out = y @ p["out_proj"].astype(compute_dtype)
+    return out, Mamba2Cache(state=state, conv_buf=conv_tail)
+
+
+class Mamba2Cache(NamedTuple):
+    state: Array  # (B, h, p, n) fp32 SSM state
+    conv_buf: Array  # (B, d_conv-1, conv_dim) fp32 conv history
+
+    @classmethod
+    def init(cls, batch, dims: SSMDims):
+        conv_dim = dims.d_inner + 2 * dims.n_groups * dims.d_state
+        return cls(
+            state=jnp.zeros(
+                (batch, dims.n_heads, dims.head_dim, dims.d_state),
+                jnp.float32),
+            conv_buf=jnp.zeros((batch, dims.d_conv - 1, conv_dim),
+                               jnp.float32),
+        )
+
+
+def mamba2_decode(p, x, cache: Mamba2Cache, dims: SSMDims,
+                  compute_dtype=layers.DEFAULT_COMPUTE):
+    """Single-token recurrent step. x: (B, 1, d_model)."""
+    Bsz = x.shape[0]
+    proj = x.astype(compute_dtype) @ p["in_proj"].astype(compute_dtype)
+    z, xbc, dt = _split_proj(proj[:, 0], dims)  # (B, *)
+    w = p["conv_w"].astype(jnp.float32)
+    hist = jnp.concatenate(
+        [cache.conv_buf, xbc.astype(jnp.float32)[:, None]], axis=1)
+    conv = jnp.einsum("btc,tc->bc", hist, w) + p["conv_bias"]
+    conv_buf = hist[:, 1:]
+    xbc_a = jax.nn.silu(conv)
+    xs = xbc_a[..., : dims.d_inner]
+    Bc = xbc_a[..., dims.d_inner : dims.d_inner + dims.n_groups * dims.d_state]
+    Cc = xbc_a[..., dims.d_inner + dims.n_groups * dims.d_state :]
+    xh = xs.reshape(Bsz, dims.n_heads, dims.head_dim)
+    rep = dims.n_heads // dims.n_groups
+    Bm = jnp.repeat(Bc.reshape(Bsz, dims.n_groups, dims.d_state), rep, 1)
+    Cm = jnp.repeat(Cc.reshape(Bsz, dims.n_groups, dims.d_state), rep, 1)
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,h)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt_ * a[None, :])  # (B,h)
+    state = (cache.state * decay[..., None, None]
+             + jnp.einsum("bh,bhp,bhn->bhpn", dt_, xh, Bm))
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cm)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(Bsz, dims.d_inner) * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.rms_norm(p["out_norm"], y.astype(compute_dtype))
+    out = (y @ p["out_proj"].astype(compute_dtype))[:, None]
+    return out, Mamba2Cache(state=state, conv_buf=conv_buf)

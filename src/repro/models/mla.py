@@ -1,0 +1,178 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV compression: the cache holds only the latent c_kv (kv_lora_rank dims)
+plus a shared decoupled RoPE key (qk_rope dims) per token - 576 floats
+per token for the 236B config, independent of the 128 heads. Decode uses
+the absorbed form: W_uk is folded into the query so attention runs in the
+latent space directly; W_uv is applied after the value aggregation.
+
+The latent cache is itself a natural RCLL-KV target: block-anchored int8
+latents cut decode bytes a further ~4x (see AnchoredKVCache; wired in
+transformer.py when kv_mode='anchored').
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models import partitioning as pt
+from repro.models import scan_config
+
+Array = jnp.ndarray
+
+
+def init_mla(key, d_model, n_heads, *, q_lora, kv_lora, qk_nope, qk_rope,
+             v_head):
+    ks = jax.random.split(key, 7)
+    dqk = qk_nope + qk_rope
+    return {
+        # query path: d -> q_lora -> heads*(qk_nope + qk_rope)
+        "wq_a": layers.dense_init(ks[0], d_model, q_lora),
+        "q_norm": layers.init_rmsnorm(q_lora),
+        "wq_b": layers.dense_init(ks[1], q_lora, n_heads * dqk),
+        # kv path: d -> kv_lora (cached) + shared rope key (cached)
+        "wkv_a": layers.dense_init(ks[2], d_model, kv_lora + qk_rope),
+        "kv_norm": layers.init_rmsnorm(kv_lora),
+        # up-projections from the latent
+        "wkv_b": layers.dense_init(
+            ks[3], kv_lora, n_heads * (qk_nope + v_head)),
+        "wo": layers.dense_init(ks[4], n_heads * v_head, d_model),
+    }
+
+
+class MLADims(NamedTuple):
+    n_heads: int
+    q_lora: int
+    kv_lora: int
+    qk_nope: int
+    qk_rope: int
+    v_head: int
+
+
+class MLACache(NamedTuple):
+    c_kv: Array  # (B, L, kv_lora) latent cache
+    k_rope: Array  # (B, L, qk_rope) shared rope key
+    length: Array  # (B,) int32
+
+    @classmethod
+    def init(cls, batch, max_len, kv_lora, qk_rope, dtype=jnp.bfloat16):
+        return cls(
+            c_kv=jnp.zeros((batch, max_len, kv_lora), dtype),
+            k_rope=jnp.zeros((batch, max_len, qk_rope), dtype),
+            length=jnp.zeros((batch,), jnp.int32),
+        )
+
+
+def _project_q(p, x, dims: MLADims, compute_dtype):
+    B, L, _ = x.shape
+    xc = x.astype(compute_dtype)
+    cq = xc @ p["wq_a"].astype(compute_dtype)
+    cq = layers.rms_norm(p["q_norm"], cq)
+    q = (cq @ p["wq_b"].astype(compute_dtype)).reshape(
+        B, L, dims.n_heads, dims.qk_nope + dims.qk_rope)
+    return q[..., : dims.qk_nope], q[..., dims.qk_nope:]
+
+
+def _project_kv_latent(p, x, dims: MLADims, compute_dtype):
+    xc = x.astype(compute_dtype)
+    ckv = xc @ p["wkv_a"].astype(compute_dtype)
+    c_kv, k_rope = ckv[..., : dims.kv_lora], ckv[..., dims.kv_lora:]
+    c_kv = layers.rms_norm(p["kv_norm"], c_kv)
+    return c_kv, k_rope
+
+
+def mla_full(p, x, positions, dims: MLADims, *, rope_theta=10000.0,
+             compute_dtype=layers.DEFAULT_COMPUTE, kv_hoist: bool = False):
+    """Train/prefill MLA (naive materialized form). Returns (out, cache
+    tensors (c_kv, k_rope))."""
+    B, L, _ = x.shape
+    H, dn, dr, dv = dims.n_heads, dims.qk_nope, dims.qk_rope, dims.v_head
+    q_nope, q_rope = _project_q(p, x, dims, compute_dtype)
+    q_rope = layers.apply_rope(q_rope, positions, rope_theta)
+    c_kv, k_rope = _project_kv_latent(p, x, dims, compute_dtype)
+    k_rope = layers.apply_rope(k_rope[..., None, :], positions, rope_theta)[
+        ..., 0, :]
+    kv = (c_kv @ p["wkv_b"].astype(compute_dtype)).reshape(
+        B, L, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q_nope = pt.act(q_nope, "batch", None, "model", None)
+    if kv_hoist:  # gather once before the q-chunk loop (Perf A1)
+        k_nope = pt.act(k_nope, "batch", None, "model", None)
+        v = pt.act(v, "batch", None, "model", None)
+        k_rope = pt.act(k_rope, "batch", None, None)
+    scale = 1.0 / np.sqrt(dn + dr)
+
+    # query-blocked (memory-linear) attention; scores never materialize
+    # beyond (B, H, chunk, L). Exact math, same tiling as attention.py.
+    chunk = 256 if (L % 256 == 0 and L > 256) else L
+    nc = L // chunk
+
+    def one(args):
+        i, qn, qr = args  # qn (B, chunk, H, dn), qr (B, chunk, H, dr)
+        s = (
+            jnp.einsum("blhd,bmhd->bhlm", qn.astype(jnp.float32),
+                       k_nope.astype(jnp.float32))
+            + jnp.einsum("blhd,bmd->bhlm", qr.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+        ) * scale
+        rows = i * chunk + jnp.arange(chunk)[:, None]
+        cols = jnp.arange(L)[None, :]
+        s = jnp.where((rows >= cols)[None, None], s, -1e30)
+        attn = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhlm,bmhd->blhd", attn,
+                          v.astype(jnp.float32))
+
+    qn_c = q_nope.reshape(B, nc, chunk, H, dn).transpose(1, 0, 2, 3, 4)
+    qr_c = q_rope.reshape(B, nc, chunk, H, dr).transpose(1, 0, 2, 3, 4)
+    _, out = jax.lax.scan(lambda c, a: (None, one(a)), None,
+                          (jnp.arange(nc), qn_c, qr_c),
+                          unroll=scan_config.unroll())
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, L, H, dv)
+    out = out.astype(compute_dtype).reshape(B, L, H * dv)
+    return out @ p["wo"].astype(compute_dtype), (c_kv, k_rope)
+
+
+def mla_decode(p, x, cache: MLACache, dims: MLADims, *, rope_theta=10000.0,
+               compute_dtype=layers.DEFAULT_COMPUTE):
+    """Absorbed-form single-token decode: attention in the latent space.
+
+    score_h(t) = q_nope_h . (W_uk_h c_t) + q_rope_h . k_rope_t
+               = (W_uk_h^T q_nope_h) . c_t + q_rope_h . k_rope_t
+    out_h      = W_uv_h (sum_t a_t c_t)
+    """
+    B = x.shape[0]
+    H, dn, dr, dv = dims.n_heads, dims.qk_nope, dims.qk_rope, dims.v_head
+    kvl = dims.kv_lora
+    q_nope, q_rope = _project_q(p, x, dims, compute_dtype)  # (B,1,H,*)
+    pos = cache.length[:, None]
+    q_rope = layers.apply_rope(q_rope, pos, rope_theta)
+    c_new, kr_new = _project_kv_latent(p, x, dims, compute_dtype)
+    kr_new = layers.apply_rope(kr_new[..., None, :], pos, rope_theta)[..., 0, :]
+
+    upd = lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+        c, n.astype(c.dtype), i, 0)
+    c_kv = jax.vmap(upd)(cache.c_kv, c_new, cache.length)
+    k_rope = jax.vmap(upd)(cache.k_rope, kr_new, cache.length)
+    cache = MLACache(c_kv=c_kv, k_rope=k_rope, length=cache.length + 1)
+
+    wkv_b = p["wkv_b"].astype(compute_dtype).reshape(kvl, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]  # (kvl, H, dn/dv)
+    # absorb: q_lat (B, H, kvl)
+    q_lat = jnp.einsum("bhd,chd->bhc", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    s = (
+        jnp.einsum("bhc,btc->bht", q_lat, c_kv.astype(jnp.float32))
+        + jnp.einsum("bhd,btd->bht", q_rope[:, 0].astype(jnp.float32),
+                     k_rope.astype(jnp.float32))
+    ) / np.sqrt(dn + dr)
+    t = jnp.arange(c_kv.shape[1])[None, None, :]
+    s = jnp.where(t < cache.length[:, None, None], s, -1e30)
+    attn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bht,btc->bhc", attn, c_kv.astype(jnp.float32))
+    out = jnp.einsum("bhc,chd->bhd", ctx, w_uv.astype(jnp.float32))
+    out = out.astype(compute_dtype).reshape(B, 1, H * dv)
+    return out @ p["wo"].astype(compute_dtype), cache

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts: shared + routed experts, top-k, sort-based
+static-capacity dispatch (DeepSeek-MoE / DeepSeek-V2 style).
+
+Dispatch is the XLA-friendly sort formulation: flatten (token, slot)
+assignments, argsort by expert id, take position-in-expert ranks, and
+scatter into an (E, capacity, d) buffer. All shapes static; tokens beyond
+an expert's capacity are dropped (standard GShard semantics) and the drop
+fraction is returned as a metric.
+
+EP sharding: the (E, cap, d) buffer and the expert weights carry the
+"model" axis on E - GSPMD turns the scatter/gather into all-to-alls
+(baseline path; the §Perf hillclimb measures and optimizes this).
+
+Router runs in fp32 (scores are compared within a block of experts - the
+paper's 'relative values are safe in low precision' argument applies to
+the *inputs*, bf16 hidden states, not to the comparison accumulator).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models import partitioning as pt
+
+Array = jnp.ndarray
+
+
+def init_moe(key, d_model, d_expert, n_routed, n_shared, d_shared=None):
+    """Routed experts stored stacked on a leading E axis."""
+    k_r, k_s, k_g = jax.random.split(key, 3)
+    ks = jax.random.split(k_r, 3)
+    d_shared = d_shared or d_expert * n_shared
+    p = {
+        "router": layers.truncated_normal(
+            k_g, (d_model, n_routed), 1.0 / np.sqrt(d_model)),
+        "experts": {
+            "w_gate": layers.truncated_normal(
+                ks[0], (n_routed, d_model, d_expert), 1.0 / np.sqrt(d_model)),
+            "w_up": layers.truncated_normal(
+                ks[1], (n_routed, d_model, d_expert), 1.0 / np.sqrt(d_model)),
+            "w_down": layers.truncated_normal(
+                ks[2], (n_routed, d_expert, d_model), 1.0 / np.sqrt(d_expert)),
+        },
+    }
+    if n_shared:
+        p["shared"] = layers.init_swiglu(k_s, d_model, d_shared)
+    return p
+
+
+def router_topk(p, x, top_k: int, *, bias=None):
+    """Softmax-then-topk router (DeepSeek style). x: (T, d). Returns
+    (weights (T, k) fp32, experts (T, k) int32, aux load-balance loss)."""
+    logits_ = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits_, axis=-1)  # (T, E)
+    score = probs if bias is None else probs + bias
+    w, idx = jax.lax.top_k(score, top_k)
+    if bias is not None:
+        w = jnp.take_along_axis(probs, idx, axis=1)
+    # aux loss (Switch): E * mean_e(frac_tokens_e * mean_prob_e)
+    E = probs.shape[-1]
+    hits = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    frac = hits / jnp.maximum(hits.sum(), 1.0)
+    aux = E * jnp.sum(frac * probs.mean(axis=0))
+    return w, idx.astype(jnp.int32), aux
+
+
+def dispatch_sort(x, expert_idx, weights, n_experts: int, capacity: int,
+                  cap_shard: bool = False):
+    """Sort-based dispatch. x: (T, d); expert_idx/weights: (T, k).
+
+    Returns (buf (E, cap, d), combine-info) where combine-info lets
+    ``combine_sort`` gather expert outputs back per (token, slot).
+    """
+    T, d = x.shape
+    k = expert_idx.shape[1]
+    flat_e = expert_idx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)  # stable: token order kept
+    sorted_e = flat_e[order]
+    # position of each sorted entry within its expert group
+    counts = jnp.bincount(flat_e, length=n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(T * k) - starts[sorted_e]
+    keep = pos < capacity
+    slot = jnp.where(keep, sorted_e * capacity + pos, n_experts * capacity)
+    token_of = order // k  # original token per sorted entry
+    buf = jnp.zeros((n_experts * capacity + 1, d), x.dtype)
+    buf = buf.at[slot].set(x[token_of], mode="drop")
+    buf = buf[:-1].reshape(n_experts, capacity, d)
+    # Perf A3: sharding capacity over the data axis keeps the dispatch
+    # scatter fully distributed (E on "model" alone makes GSPMD gather
+    # the token buffer to every expert shard).
+    buf = (pt.act(buf, "model", "batch", None) if cap_shard
+           else pt.act(buf, "model", None, None))
+    drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return buf, (order, slot, keep, token_of, drop_frac)
+
+
+def combine_sort(y_buf, info, weights, T: int):
+    """Gather expert outputs back and weight-combine. y_buf: (E, cap, d)."""
+    order, slot, keep, token_of, _ = info
+    E, cap, d = y_buf.shape
+    flat = jnp.concatenate(
+        [y_buf.reshape(E * cap, d), jnp.zeros((1, d), y_buf.dtype)], axis=0)
+    y_sorted = flat[jnp.minimum(slot, E * cap)]  # (T*k, d), dropped -> 0
+    y_sorted = jnp.where(keep[:, None], y_sorted, 0)
+    w_flat = weights.reshape(-1)[order].astype(y_buf.dtype)  # (T*k,)
+    out = jnp.zeros((T, d), y_buf.dtype)
+    out = out.at[token_of].add(y_sorted * w_flat[:, None])
+    return out
+
+
+def expert_ffn(p_experts, buf, compute_dtype=layers.DEFAULT_COMPUTE,
+               cap_shard: bool = False):
+    """Batched SwiGLU over the (E, cap, d) buffer."""
+    xc = buf.astype(compute_dtype)
+    wg = p_experts["w_gate"].astype(compute_dtype)
+    wu = p_experts["w_up"].astype(compute_dtype)
+    wd = p_experts["w_down"].astype(compute_dtype)
+    g = jnp.einsum("ecd,edf->ecf", xc, wg)
+    u = jnp.einsum("ecd,edf->ecf", xc, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    h = (pt.act(h, "model", "batch", None) if cap_shard
+         else pt.act(h, "model", None, None))
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def moe_block(p, x, *, top_k: int, n_routed: int,
+              capacity_factor: float = 1.25,
+              compute_dtype=layers.DEFAULT_COMPUTE,
+              cap_shard: bool = False):
+    """Full MoE block on (B, L, d). Returns (out, metrics dict)."""
+    B, L, d = x.shape
+    T = B * L
+    xf = x.reshape(T, d)
+    w, idx, aux = router_topk(p, xf, top_k)
+    capacity = int(np.ceil(T * top_k / n_routed * capacity_factor))
+    capacity = max(8, -(-capacity // 8) * 8)  # pad to 8 for tiling
+    buf, info = dispatch_sort(xf, idx, w, n_routed, capacity,
+                              cap_shard=cap_shard)
+    y_buf = expert_ffn(p["experts"], buf, compute_dtype,
+                       cap_shard=cap_shard)
+    out = combine_sort(y_buf, info, w, T)
+    if "shared" in p:
+        out = out + layers.swiglu(p["shared"], xf, compute_dtype)
+    return out.reshape(B, L, d), {"aux_loss": aux, "drop_frac": info[4]}

@@ -1,0 +1,200 @@
+"""Sharding rules: logical param/activation axes -> mesh PartitionSpecs.
+
+Parallelism mapping (DESIGN.md section 3):
+  * batch        -> ("pod", "data")   pure DP across pods and the data axis
+  * TP           -> "model"           heads / ffn-hidden / vocab / experts
+  * FSDP (ZeRO-3)-> "data"            parameter+optimizer sharding for big
+                                      models, on top of TP
+
+Everything here is *mesh-shape agnostic*: specs reference axis names; the
+same model code lowers on (16,16) "data","model", on (2,16,16)
+"pod","data","model", or on no mesh at all (CPU tests - ``constrain``
+no-ops when there is no ambient mesh).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Array = Any
+
+
+def current_mesh():
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or m.empty:
+        return None
+    return m
+
+
+def mesh_axis(name: str) -> bool:
+    m = current_mesh()
+    return m is not None and name in m.axis_names
+
+
+def batch_axes():
+    """The DP axes present on the current mesh ('pod' only if multi-pod)."""
+    if mesh_axis("pod"):
+        return ("pod", "data")
+    return "data"
+
+
+def constrain(x: Array, spec: P | None) -> Array:
+    """with_sharding_constraint that no-ops without an ambient mesh and
+    drops axis names the mesh doesn't have (e.g. 'pod' on single-pod)."""
+    m = current_mesh()
+    if m is None or spec is None:
+        return x
+
+    def fix(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, tuple):
+            kept = tuple(e for e in entry if e in m.axis_names)
+            return kept if kept else None
+        return entry if entry in m.axis_names else None
+
+    spec = P(*(fix(e) for e in spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def act(x: Array, *axes) -> Array:
+    """Constrain an activation; 'batch' expands to the DP axes."""
+    spec = tuple(batch_axes() if a == "batch" else a for a in axes)
+    return constrain(x, P(*spec))
+
+
+def act_vocab(x: Array) -> Array:
+    """Constrain logits (B, L, V): vocab on "model" only when divisible
+    (several assigned vocabs - 49155/50280/51866/92544 - are not)."""
+    m = current_mesh()
+    if m is None:
+        return x
+    if "model" in m.axis_names and x.shape[-1] % m.shape["model"] == 0:
+        return act(x, "batch", *([None] * (x.ndim - 2)), "model")
+    return act(x, "batch", *([None] * (x.ndim - 1)))
+
+
+def act_seq(x: Array, seq_axis: int = 1) -> Array:
+    """Sequence-parallel constraint for inter-layer activations
+    (B, L, d): batch over DP, sequence over "model". Cuts the per-layer
+    remat carry by the TP degree; attention re-gathers K/V internally.
+    No-ops when L doesn't divide the model axis."""
+    m = current_mesh()
+    if m is None or "model" not in m.axis_names:
+        return x
+    if x.shape[seq_axis] % m.shape["model"] != 0:
+        return act(x, "batch", *([None] * (x.ndim - 1)))
+    spec = ["batch"] + [None] * (x.ndim - 1)
+    spec[seq_axis] = "model"
+    return act(x, *spec)
+
+
+# --------------------------------------------------------------------------
+# Parameter sharding rules: regex on the param path.
+# --------------------------------------------------------------------------
+# Order matters: first match wins. Written for (pod?, data, model) meshes.
+# fsdp=True additionally shards the non-TP dim over "data" (ZeRO-3).
+_RULES: list[tuple[str, tuple]] = [
+    # embeddings / unembedding: vocab dim on model (TP), d_model on data (FSDP)
+    (r".*embed.*", ("model", "fsdp")),
+    (r".*unembed.*|.*lm_head.*", ("fsdp", "model")),
+    # attention: q/k/v column-parallel, o row-parallel
+    (r".*\.(wq|wk|wv|wkv_a|wq_a|wq_b|wkv_b|w_patch).*", ("fsdp", "model")),
+    (r".*\.wo.*", ("model", "fsdp")),
+    # mlp: up/gate column-parallel, down row-parallel
+    (r".*\.(w_up|w_gate).*", ("fsdp", "model")),
+    (r".*\.w_down.*", ("model", "fsdp")),
+    # MoE experts: expert axis over model (EP); expert mats unsharded inside
+    (r".*experts.*\.(w_up|w_gate)$", ("model", "fsdp", None)),
+    (r".*experts.*\.w_down$", ("model", None, "fsdp")),
+    (r".*router.*", ("fsdp", None)),
+    # mamba2 / ssm: big in/out projections column/row parallel
+    (r".*\.in_proj.*", ("fsdp", "model")),
+    (r".*\.out_proj.*", ("model", "fsdp")),
+    (r".*\.conv_w.*", (None, None, None)),
+    # norms, biases, scalars: replicated
+    (r".*(norm|bias|scale|a_log|dt_bias|d_skip).*", None),
+]
+
+
+def spec_for(path: str, shape: tuple[int, ...], *, fsdp: bool) -> P:
+    """PartitionSpec for a parameter path. Layer-stacked params (leading
+    scan dim) get a None prepended automatically by the caller."""
+    for pat, axes in _RULES:
+        if re.fullmatch(pat, path):
+            if axes is None:
+                return P()
+            out = []
+            for a in axes[: len(shape)]:
+                if a == "fsdp":
+                    out.append("data" if fsdp else None)
+                else:
+                    out.append(a)
+            out += [None] * (len(shape) - len(out))
+            return P(*out)
+    return P()  # default: replicated
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _flatten(v, f"{prefix}.{k}" if prefix else k)
+    else:
+        yield prefix, tree
+
+
+def tree_specs(params, *, fsdp: bool, stacked_prefixes=("layers",)):
+    """PartitionSpec pytree matching a params dict pytree.
+
+    Params under a ``layers`` subtree are scan-stacked: their leading dim
+    is the layer index -> prepend None to the spec.
+    """
+
+    def rec(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {
+                k: rec(v, f"{prefix}.{k}" if prefix else k)
+                for k, v in tree.items()
+            }
+        stacked = any(
+            prefix.startswith(p + ".") or ("." + p + ".") in prefix
+            for p in stacked_prefixes
+        )
+        shape = tree.shape
+        if stacked:
+            inner = spec_for(prefix, shape[1:], fsdp=fsdp)
+            return P(None, *inner)
+        return spec_for(prefix, shape, fsdp=fsdp)
+
+    return rec(params)
+
+
+def tree_shardings(params, mesh, *, fsdp: bool):
+    from jax.sharding import NamedSharding
+
+    specs = tree_specs(params, fsdp=fsdp)
+
+    def fix_spec(leaf_spec, leaf):
+        # drop axes that don't divide the dim (GSPMD would pad; we prefer
+        # clean replication for e.g. kv heads < model axis)
+        out = []
+        for dim, entry in zip(leaf.shape, tuple(leaf_spec) + (None,) * 99):
+            if entry is None:
+                out.append(None)
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            names = tuple(n for n in names if n in mesh.axis_names)
+            size = 1
+            for n in names:
+                size *= mesh.shape[n]
+            if size and dim % size == 0 and names:
+                out.append(names if len(names) > 1 else names[0])
+            else:
+                out.append(None)
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree.map(fix_spec, specs, params,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,106 @@
+"""Architecture registry: --arch <id> -> configs, module entry points,
+and ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeSpec, runnable
+from repro.models import encdec, hybrid, transformer
+
+ARCH_MODULES = {
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "llama3.2-3b": "repro.configs.llama3_2_3b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+}
+
+ARCH_IDS = list(ARCH_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> transformer.ArchConfig:
+    mod = importlib.import_module(ARCH_MODULES[arch])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def get_module(cfg: transformer.ArchConfig):
+    """The model module implementing this family's entry points."""
+    if cfg.family == "hybrid":
+        return hybrid
+    if cfg.family == "encdec":
+        return encdec
+    return transformer
+
+
+def abstract_params(cfg: transformer.ArchConfig):
+    """ShapeDtypeStruct params pytree (no allocation - jax.eval_shape)."""
+    mod = get_module(cfg)
+    return jax.eval_shape(
+        lambda k: mod.init_params(k, cfg), jax.random.key(0))
+
+
+def init_params(key, cfg):
+    return get_module(cfg).init_params(key, cfg)
+
+
+# --------------------------------------------------------------------------
+# Input specs per (arch, shape): ShapeDtypeStructs only.
+# --------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: transformer.ArchConfig, shape: ShapeSpec) -> dict:
+    """Abstract inputs for the step function selected by shape.kind.
+
+    train:   {"tokens","labels"} (+frames/patch_embeds stubs)
+    prefill: {"tokens"} (+stubs)
+    decode:  {"tokens" (B,1), "cache": pytree}
+    """
+    B, L = shape.global_batch, shape.seq_len
+    mod = get_module(cfg)
+    if shape.kind == "train":
+        batch = {
+            "tokens": _sds((B, L), jnp.int32),
+            "labels": _sds((B, L), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, cfg.src_len, cfg.d_model),
+                                   jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                         jnp.bfloat16)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out: dict[str, Any] = {"tokens": _sds((B, L), jnp.int32)}
+        if cfg.family == "encdec":
+            out["frames"] = _sds((B, cfg.src_len, cfg.d_model),
+                                 jnp.bfloat16)
+        if cfg.family == "vlm":
+            out["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                       jnp.bfloat16)
+        return out
+    # decode: abstract cache of size L
+    cache = jax.eval_shape(lambda: mod.init_cache(cfg, B, L))
+    return {"tokens": _sds((B, 1), jnp.int32), "cache": cache}
+
+
+def runnable_cells(smoke: bool = False):
+    """All (arch, shape) pairs that must lower+compile (the 32 cells)."""
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch, smoke=smoke)
+        for sname, sp in SHAPES.items():
+            if runnable(cfg.family, sname):
+                cells.append((arch, sname))
+    return cells

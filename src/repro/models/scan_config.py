@@ -1,0 +1,34 @@
+"""Global scan-unroll switch for cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE,
+regardless of trip count (verified: a 10-iteration scanned matmul
+reports exactly 1/10 of the true flops). The dry-run therefore compiles
+each cell twice: the production loop form (true memory analysis, the
+artifact that would run) and a fully-unrolled "cost probe" (true flops /
+bytes / collective counts). This module is the switch the model code
+reads at trace time.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_FULL_UNROLL = False
+
+
+def set_full_unroll(v: bool):
+    global _FULL_UNROLL
+    _FULL_UNROLL = bool(v)
+
+
+def unroll():
+    """Value for lax.scan's ``unroll=`` parameter."""
+    return True if _FULL_UNROLL else 1
+
+
+@contextlib.contextmanager
+def full_unroll():
+    set_full_unroll(True)
+    try:
+        yield
+    finally:
+        set_full_unroll(False)

@@ -1,0 +1,342 @@
+"""Decoder-only LM assembly: dense / MoE / MLA-MoE / SSM / hybrid
+families behind one config + three entry points (forward, prefill,
+decode_step), all scan-over-layers (one compiled layer body).
+
+Caches are NamedTuples of stacked (n_layers, ...) arrays so the decode
+step scans over layers with the cache as carry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_lib
+from repro.models import layers, mamba2, mla, moe
+from repro.models import partitioning as pt
+from repro.models import scan_config
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | mla_moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    rope_theta: float = 500000.0
+    tied_embeddings: bool = True
+    norm: str = "rms"
+    mlp: str = "swiglu"
+    # moe
+    n_routed: int = 0
+    n_shared: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    first_k_dense: int = 0
+    dense_ff: int = 0  # d_ff of the first_k_dense layers
+    capacity_factor: float = 1.25
+    # mla
+    q_lora: int = 0
+    kv_lora: int = 0
+    qk_nope: int = 0
+    qk_rope: int = 0
+    v_head: int = 0
+    # ssm / hybrid
+    d_state: int = 0
+    expand: int = 2
+    ssm_head_dim: int = 64
+    n_groups: int = 1
+    d_conv: int = 4
+    attn_every: int = 6  # hybrid: shared attn block period
+    # encdec
+    n_enc_layers: int = 0
+    src_len: int = 1500
+    # vlm
+    n_patches: int = 0
+    # execution
+    remat: str = "none"  # none | full
+    kv_mode: str = "dense"  # dense | anchored (RCLL-KV)
+    kv_block: int = 128
+    ssd_chunk: int = 128
+    # perf variants (EXPERIMENTS.md section Perf; default = baseline)
+    attn_kv_hoist: bool = False  # gather K/V once, not per q-chunk
+    ssd_compute: str = "fp32"  # fp32 | bf16 intra-chunk SSD einsums
+    moe_cap_shard: bool = False  # shard MoE buffers (E on model, cap on data)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def ssm_dims(self) -> mamba2.SSMDims:
+        return mamba2.make_dims(
+            self.d_model, self.d_state, expand=self.expand,
+            head_dim=self.ssm_head_dim, n_groups=self.n_groups,
+            d_conv=self.d_conv)
+
+    @property
+    def mla_dims(self) -> mla.MLADims:
+        return mla.MLADims(self.n_heads, self.q_lora, self.kv_lora,
+                           self.qk_nope, self.qk_rope, self.v_head)
+
+    def param_count(self, params) -> int:
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def _init_norm(cfg):
+    return (layers.init_rmsnorm(cfg.d_model) if cfg.norm == "rms"
+            else layers.init_layernorm(cfg.d_model))
+
+
+def _norm(cfg, p, x):
+    return (layers.rms_norm(p, x) if cfg.norm == "rms"
+            else layers.layer_norm(p, x))
+
+
+def _init_mlp(key, cfg, d_ff):
+    return (layers.init_swiglu(key, cfg.d_model, d_ff)
+            if cfg.mlp == "swiglu"
+            else layers.init_gelu_mlp(key, cfg.d_model, d_ff))
+
+
+def _mlp(cfg, p, x):
+    return (layers.swiglu(p, x) if cfg.mlp == "swiglu"
+            else layers.gelu_mlp(p, x))
+
+
+# --------------------------------------------------------------------------
+# Layer bodies (full-sequence + decode variants per family)
+# --------------------------------------------------------------------------
+def init_layer(key, cfg: ArchConfig):
+    """One layer's params (to be vmapped into a (n_layers, ...) stack)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict[str, Any] = {"ln1": _init_norm(cfg)}
+    if cfg.family in ("dense", "vlm", "moe"):
+        p["attn"] = attn_lib.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim)
+    elif cfg.family == "mla_moe":
+        p["attn"] = mla.init_mla(
+            k1, cfg.d_model, cfg.n_heads, q_lora=cfg.q_lora,
+            kv_lora=cfg.kv_lora, qk_nope=cfg.qk_nope,
+            qk_rope=cfg.qk_rope, v_head=cfg.v_head)
+    elif cfg.family in ("ssm", "hybrid"):
+        p["mixer"] = mamba2.init_mamba2(k1, cfg.ssm_dims)
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family in ("dense", "vlm", "mla_moe", "moe"):
+        p["ln2"] = _init_norm(cfg)
+        if cfg.family in ("moe", "mla_moe"):
+            p["moe"] = moe.init_moe(
+                k2, cfg.d_model, cfg.d_expert, cfg.n_routed,
+                cfg.n_shared, d_shared=cfg.n_shared * cfg.d_expert)
+        else:
+            p["mlp"] = _init_mlp(k2, cfg, cfg.d_ff)
+    return p
+
+
+def layer_forward(cfg: ArchConfig, p, h, positions):
+    """Full-sequence layer. Returns (h, cache_tensors, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        out, cache = mamba2.mamba2_forward(
+            p["mixer"], _norm(cfg, p["ln1"], h), cfg.ssm_dims,
+            chunk=cfg.ssd_chunk, ssd_compute=cfg.ssd_compute)
+        return h + out, cache, aux
+    if cfg.family == "mla_moe":
+        out, (c_kv, k_rope) = mla.mla_full(
+            p["attn"], _norm(cfg, p["ln1"], h), positions, cfg.mla_dims,
+            rope_theta=cfg.rope_theta, kv_hoist=cfg.attn_kv_hoist)
+        h = h + out
+        mo, metrics = moe.moe_block(
+            p["moe"], _norm(cfg, p["ln2"], h), top_k=cfg.top_k,
+            n_routed=cfg.n_routed, capacity_factor=cfg.capacity_factor,
+            cap_shard=cfg.moe_cap_shard)
+        return h + mo, (c_kv, k_rope), metrics["aux_loss"]
+    # dense / vlm / moe: GQA attention
+    out, (k, v) = attn_lib.attention_full(
+        p["attn"], _norm(cfg, p["ln1"], h), positions,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
+        rope_theta=cfg.rope_theta, kv_hoist=cfg.attn_kv_hoist)
+    h = h + out
+    if cfg.family == "moe":
+        mo, metrics = moe.moe_block(
+            p["moe"], _norm(cfg, p["ln2"], h), top_k=cfg.top_k,
+            n_routed=cfg.n_routed, capacity_factor=cfg.capacity_factor,
+            cap_shard=cfg.moe_cap_shard)
+        return h + mo, (k, v), metrics["aux_loss"]
+    return h + _mlp(cfg, p["mlp"], _norm(cfg, p["ln2"], h)), (k, v), aux
+
+
+def layer_decode(cfg: ArchConfig, p, h, cache_l):
+    """Single-token decode layer. cache_l: this layer's cache slice."""
+    if cfg.family in ("ssm", "hybrid"):
+        out, new_cache = mamba2.mamba2_decode(
+            p["mixer"], _norm(cfg, p["ln1"], h), cache_l, cfg.ssm_dims)
+        return h + out, new_cache
+    if cfg.family == "mla_moe":
+        out, new_cache = mla.mla_decode(
+            p["attn"], _norm(cfg, p["ln1"], h), cache_l, cfg.mla_dims,
+            rope_theta=cfg.rope_theta)
+        h = h + out
+        mo, _ = moe.moe_block(
+            p["moe"], _norm(cfg, p["ln2"], h), top_k=cfg.top_k,
+            n_routed=cfg.n_routed, capacity_factor=cfg.capacity_factor)
+        return h + mo, new_cache
+    dec = (attn_lib.decode_attention_anchored
+           if cfg.kv_mode == "anchored"
+           else attn_lib.decode_attention_dense)
+    out, new_cache = dec(
+        p["attn"], _norm(cfg, p["ln1"], h), cache_l,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
+        rope_theta=cfg.rope_theta)
+    h = h + out
+    if cfg.family == "moe":
+        mo, _ = moe.moe_block(
+            p["moe"], _norm(cfg, p["ln2"], h), top_k=cfg.top_k,
+            n_routed=cfg.n_routed, capacity_factor=cfg.capacity_factor)
+        return h + mo, new_cache
+    return h + _mlp(cfg, p["mlp"], _norm(cfg, p["ln2"], h)), new_cache
+
+
+# --------------------------------------------------------------------------
+# Model init / forward / decode
+# --------------------------------------------------------------------------
+def init_params(key, cfg: ArchConfig):
+    ke, kl, kp = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    p = {
+        "embed_tokens": layers.init_embed(
+            ke, cfg.vocab, cfg.d_model, tied=cfg.tied_embeddings),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "final_norm": _init_norm(cfg),
+    }
+    if cfg.family == "vlm":
+        p["w_patch"] = layers.dense_init(kp, cfg.d_model, cfg.d_model)
+    return p
+
+
+def _scan_layers(cfg, params_stacked, h, body):
+    wrapped = jax.checkpoint(body) if cfg.remat == "full" else body
+
+    def f(carry, p_l):
+        h, aux = carry
+        h2, cache_l, aux_l = wrapped(p_l, h)
+        h2 = pt.act_seq(h2)  # sequence-parallel inter-layer carry
+        return (h2, aux + aux_l), cache_l
+
+    (h, aux), caches = jax.lax.scan(f, (h, jnp.zeros((), jnp.float32)),
+                                    params_stacked,
+                                    unroll=scan_config.unroll())
+    return h, caches, aux
+
+
+def forward(params, tokens, cfg: ArchConfig, *, patch_embeds=None,
+            return_cache=False):
+    """Full-sequence forward. tokens: (B, L). Returns (logits, caches, aux).
+
+    vlm: patch_embeds (B, n_patches, d_model) replace the first n_patches
+    positions (the modality-frontend stub per the assignment)."""
+    B, L = tokens.shape
+    h = layers.embed(params["embed_tokens"], tokens)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        pe = patch_embeds.astype(h.dtype) @ params["w_patch"].astype(h.dtype)
+        h = jnp.concatenate([pe, h[:, cfg.n_patches:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+
+    def body(p_l, hh):
+        h2, cache_l, aux = layer_forward(cfg, p_l, hh, positions)
+        return h2, cache_l, aux
+
+    h, caches, aux = _scan_layers(cfg, params["layers"], h, body)
+    h = _norm(cfg, params["final_norm"], h)
+    lg = layers.logits(params["embed_tokens"], h)
+    return lg, (caches if return_cache else None), aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    lg, _, aux = forward(params, batch["tokens"], cfg,
+                         patch_embeds=batch.get("patch_embeds"))
+    loss = layers.cross_entropy(lg[:, :-1], batch["labels"][:, 1:])
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+# ---- decode ---------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Stacked (n_layers leading axis) cache pytree."""
+    L = cfg.n_layers
+
+    def stack(x):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(), x)
+
+    if cfg.family in ("ssm", "hybrid"):
+        return stack(mamba2.Mamba2Cache.init(batch, cfg.ssm_dims))
+    if cfg.family == "mla_moe":
+        return stack(mla.MLACache.init(batch, max_len, cfg.kv_lora,
+                                       cfg.qk_rope))
+    if cfg.kv_mode == "anchored":
+        return stack(attn_lib.AnchoredKVCache.init(
+            batch, max_len, cfg.n_kv, cfg.head_dim, block=cfg.kv_block))
+    return stack(attn_lib.DenseKVCache.init(
+        batch, max_len, cfg.n_kv, cfg.head_dim))
+
+
+def decode_step(params, tokens, cache, cfg: ArchConfig):
+    """One-token decode. tokens: (B, 1). Returns (logits, new cache)."""
+    h = layers.embed(params["embed_tokens"], tokens)
+
+    def f(h, xs):
+        p_l, cache_l = xs
+        h2, new_cache = layer_decode(cfg, p_l, h, cache_l)
+        return h2, new_cache
+
+    h, new_cache = jax.lax.scan(f, h, (params["layers"], cache),
+                                unroll=scan_config.unroll())
+    h = _norm(cfg, params["final_norm"], h)
+    return layers.logits(params["embed_tokens"], h), new_cache
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_len: int, *,
+            patch_embeds=None):
+    """Prefill: forward + build a decode-ready cache of size max_len."""
+    B, L = tokens.shape
+    lg, caches, _ = forward(params, tokens, cfg, patch_embeds=patch_embeds,
+                            return_cache=True)
+    length = jnp.full((B,), L, jnp.int32)
+    if cfg.family in ("ssm", "hybrid"):
+        return lg, caches  # stacked Mamba2Cache (state + conv tail)
+    if cfg.family == "mla_moe":
+        c_kv, k_rope = caches  # (n_layers, B, L, *)
+        pad = max_len - L
+        c_kv = jnp.pad(c_kv.astype(jnp.bfloat16),
+                       ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope.astype(jnp.bfloat16),
+                         ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return lg, mla.MLACache(
+            c_kv=c_kv, k_rope=k_rope,
+            length=jnp.broadcast_to(length, (cfg.n_layers, B)))
+    k, v = caches  # (n_layers, B, L, Hkv, Dh)
+    pad = max_len - L
+    k = jnp.pad(k.astype(jnp.bfloat16),
+                ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v.astype(jnp.bfloat16),
+                ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    if cfg.kv_mode == "anchored":
+        cache = jax.vmap(
+            lambda kk, vv: attn_lib.anchored_cache_from_prefill(
+                kk, vv, length, block=cfg.kv_block)
+        )(k, v)
+        return lg, cache
+    return lg, attn_lib.DenseKVCache(
+        k=k, v=v, length=jnp.broadcast_to(length, (cfg.n_layers, B)))

@@ -1,0 +1,71 @@
+"""Background-cell binning (the static 'link list')."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cells, domain as D
+
+
+def _brute_cells(dom, x):
+    xn = dom.normalize(jnp.asarray(x))
+    return np.asarray(dom.flat_cell_id(dom.cell_coords_of(xn)))
+
+
+def test_binning_matches_bruteforce(rng):
+    dom = D.unit_square(h=0.05)
+    x = rng.uniform(0, 1, (300, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    b = cells.bin_particles(dom, xn, capacity=32)
+    want = _brute_cells(dom, x)
+    np.testing.assert_array_equal(np.asarray(b.cell_id), want)
+    # every particle appears exactly once in the table
+    tbl = np.asarray(b.table)
+    ids = tbl[tbl >= 0]
+    assert sorted(ids.tolist()) == list(range(300))
+    assert int(b.overflow) == 0
+    # table row matches cell id
+    for cid in range(tbl.shape[0]):
+        for p in tbl[cid][tbl[cid] >= 0]:
+            assert want[p] == cid
+
+
+def test_binning_overflow_detected(rng):
+    dom = D.unit_square(h=0.4)  # few cells
+    x = rng.uniform(0, 1, (100, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    b = cells.bin_particles(dom, xn, capacity=2)
+    assert int(b.overflow) > 0
+
+
+def test_spatial_sort_property(rng):
+    """binning order sorts particles by flat cell id (the paper's
+    locality optimization)."""
+    dom = D.unit_square(h=0.06)
+    x = rng.uniform(0, 1, (500, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    b = cells.bin_particles(dom, xn, capacity=16)
+    sorted_ids = np.asarray(b.cell_id)[np.asarray(b.order)]
+    assert np.all(np.diff(sorted_ids) >= 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(10, 400), seed=st.integers(0, 2**31 - 1))
+def test_property_candidates_superset_of_neighbors(n, seed):
+    """Every true neighbor (r <= 2h) appears in the 3x3 cell candidates."""
+    rng = np.random.default_rng(seed)
+    ds = (1.0 / n) ** 0.5
+    dom = D.unit_square(h=1.2 * ds)
+    x = rng.uniform(0, 1, (n, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    b = cells.bin_particles(dom, xn, capacity=cells.default_capacity(dom, n))
+    if int(b.overflow):
+        return  # capacity heuristic failed for this draw; not the property
+    cand, mask = cells.gather_candidates(dom, b)
+    cand = np.asarray(cand)
+    mask = np.asarray(mask)
+    d = np.linalg.norm(np.asarray(xn)[:, None] - np.asarray(xn)[None], axis=-1)
+    radius = dom.radius_norm
+    for i in range(n):
+        true_nb = set(np.nonzero(d[i] <= radius)[0].tolist())
+        got = set(cand[i][mask[i]].tolist())
+        assert true_nb <= got | {i}

@@ -1,0 +1,40 @@
+"""Deterministic synthetic data pipeline."""
+import numpy as np
+
+from repro.data.pipeline import (DataConfig, DataIterator, global_batch_np,
+                                 host_shard)
+
+
+def test_determinism():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=8, seed=3)
+    a = global_batch_np(cfg, 7)
+    b = global_batch_np(cfg, 7)
+    np.testing.assert_array_equal(a, b)
+    c = global_batch_np(cfg, 8)
+    assert not np.array_equal(a, c)
+    assert a.min() >= 0 and a.max() < 1000
+
+
+def test_host_shards_partition():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=8)
+    full = global_batch_np(cfg, 0)
+    parts = [host_shard(cfg, 0, h, 4) for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts, 0), full)
+
+
+def test_iterator_skip_ahead():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4)
+    it1 = DataIterator(cfg)
+    for _ in range(5):
+        last = next(it1)
+    it2 = DataIterator(cfg, start_step=4)
+    np.testing.assert_array_equal(np.asarray(last["tokens"]),
+                                  np.asarray(next(it2)["tokens"]))
+
+
+def test_structure_learnable():
+    """repeat-block structure: copying the previous token beats chance."""
+    cfg = DataConfig(vocab=50, seq_len=64, global_batch=32, repeat=4)
+    toks = global_batch_np(cfg, 0)
+    agree = (toks[:, 1:] == toks[:, :-1]).mean()
+    assert agree > 0.6

@@ -1,0 +1,88 @@
+"""Domain geometry + Eq. 5/6 coordinate transforms."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import domain as D
+
+
+def test_normalize_roundtrip(rng):
+    dom = D.Domain(lo=(-2.0, 1.0), hi=(3.0, 4.0), h=0.05)
+    x = rng.uniform([-2, 1], [3, 4], (100, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    assert float(jnp.max(jnp.abs(xn))) <= 1.0 + 1e-6
+    back = dom.denormalize(xn)
+    np.testing.assert_allclose(back, x, atol=1e-5)
+
+
+def test_relative_roundtrip(rng):
+    dom = D.unit_square(h=0.03)
+    x = rng.uniform(0, 1, (500, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    c = dom.cell_coords_of(xn)
+    rel = dom.to_relative(xn, c, dtype=jnp.float32)
+    assert float(jnp.max(jnp.abs(rel))) <= 1.0 + 1e-4
+    back = dom.from_relative(rel, c)
+    np.testing.assert_allclose(back, xn, atol=1e-6)
+
+
+def test_relative_fp16_error_bound(rng):
+    dom = D.unit_square(h=0.01)
+    x = rng.uniform(0, 1, (1000, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    c = dom.cell_coords_of(xn)
+    rel16 = dom.to_relative(xn, c, dtype=jnp.float16)
+    back = dom.from_relative(rel16, c)
+    # error bounded by fp16 eps * half cell
+    bound = max(dom.hc_norm_axes) / 2 * 2 ** -10
+    assert float(jnp.max(jnp.abs(back - xn))) <= bound
+
+
+def test_periodic_grid_tiles_exactly():
+    dom = D.Domain(lo=(0.0, 0.0), hi=(1.0, 1.0), h=0.013,
+                   periodic=(True, True))
+    for n, cs, span in zip(dom.ncells, dom.cell_sizes, dom.spans):
+        assert abs(n * cs - span) < 1e-12
+        assert cs >= dom.radius - 1e-12
+
+
+def test_wall_grid_covers():
+    dom = D.Domain(lo=(0.0, 0.0), hi=(1.0, 1.0), h=0.013)
+    for n, cs, span in zip(dom.ncells, dom.cell_sizes, dom.spans):
+        assert n * cs >= span - 1e-12
+
+
+def test_periodic_needs_three_cells():
+    with pytest.raises(AssertionError):
+        D.Domain(lo=(0.0,), hi=(0.1,), h=0.02, periodic=(True,))
+
+
+def test_wrap_cell_delta():
+    dom = D.Domain(lo=(0.0, 0.0), hi=(1.0, 1.0), h=0.02,
+                   periodic=(True, False))
+    n = dom.ncells[0]
+    delta = jnp.asarray([[n - 1, n - 1], [-(n - 1), 3]])
+    wrapped = dom.wrap_cell_delta(delta)
+    assert int(wrapped[0, 0]) == -1  # periodic axis wraps
+    assert int(wrapped[0, 1]) == n - 1  # wall axis untouched
+    assert int(wrapped[1, 0]) == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.floats(0.01, 0.2),
+    span=st.floats(0.5, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_cell_assignment_consistent(h, span, seed):
+    """cell_coords_of o from_relative o to_relative is stable."""
+    dom = D.Domain(lo=(0.0, 0.0), hi=(span, span), h=h)
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, span, (64, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    c = dom.cell_coords_of(xn)
+    assert np.all(np.asarray(c) >= 0)
+    assert np.all(np.asarray(c) < np.asarray(dom.ncells))
+    rel = dom.to_relative(xn, c, dtype=jnp.float32)
+    assert float(jnp.max(jnp.abs(rel))) <= 1.0 + 1e-3

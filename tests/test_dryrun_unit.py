@@ -1,0 +1,55 @@
+"""Dry-run machinery unit tests (parser + sharding heuristics); the full
+512-device dry-run runs via `python -m repro.launch.dryrun`."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch import shardings as sh
+
+
+def test_collective_bytes_parser():
+    from repro.launch import dryrun
+    hlo = """
+  %ag = f32[16,256]{1,0} all-gather(f32[16,16]{1,0} %p), dimensions={1}
+  %ar.1 = bf16[1024]{0} all-reduce(bf16[1024]{0} %x), to_apply=%sum
+  %rs = f32[8]{0} reduce-scatter(f32[64]{0} %y), dimensions={0}
+  %tup = (f32[4]{0}, f32[8]{0}) all-reduce(f32[4] %a, f32[8] %b)
+  %cp = u8[128]{0} collective-permute-start(u8[128]{0} %z)
+  %notacoll = f32[9]{0} add(f32[9] %q, f32[9] %r)
+"""
+    out = dryrun.collective_bytes(hlo)
+    assert out["by_op"]["all-gather"] == 16 * 256 * 4
+    assert out["by_op"]["all-reduce"] == 1024 * 2 + (4 + 8) * 4
+    assert out["by_op"]["reduce-scatter"] == 8 * 4
+    assert out["by_op"]["collective-permute"] == 128
+    assert out["counts"]["all-reduce"] == 2
+    assert out["total"] == sum(out["by_op"].values())
+
+
+def test_cache_sharding_heuristic():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cache = {
+        "k": jax.ShapeDtypeStruct((4, 8, 1024, 16, 64), jnp.bfloat16),
+        "length": jax.ShapeDtypeStruct((4, 8), jnp.int32),
+    }
+    out = sh.cache_shardings(mesh, cache, batch=8, seq_len=1024)
+    spec_k = out["k"].spec
+    assert spec_k[1] is not None  # batch axis sharded over dp
+    # length (layers, B): batch axis may shard over dp, never over model
+    lspec = tuple(out["length"].spec)
+    assert "model" not in [e for e in lspec if isinstance(e, str)]
+
+
+def test_model_flops_moe_vs_dense():
+    from repro.launch.dryrun import model_flops
+    from repro.configs.shapes import SHAPES
+    from repro.models import registry
+    dense_cfg = registry.get_config("llama3.2-3b")
+    moe_cfg = registry.get_config("deepseek-moe-16b")
+    sp = SHAPES["train_4k"]
+    f_dense = model_flops(dense_cfg, 3_200_000_000, sp)
+    assert abs(f_dense - 6 * 3.2e9 * 256 * 4096) / f_dense < 1e-6
+    # MoE active < total
+    n_total = 16_000_000_000
+    f_moe = model_flops(moe_cfg, n_total, sp)
+    assert f_moe < 6 * n_total * 256 * 4096

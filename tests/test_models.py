@@ -1,0 +1,129 @@
+"""Per-arch smoke tests (reduced configs, assignment requirement) +
+decode-vs-forward consistency."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+
+
+def _batch(cfg, B, L, rng):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, L)),
+                                   jnp.int32)}
+    batch["labels"] = batch["tokens"]
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.src_len, cfg.d_model)), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch, rng):
+    """Assignment: reduced config, one forward/train step on CPU,
+    correct shapes, no NaNs."""
+    cfg = registry.get_config(arch, smoke=True)
+    mod = registry.get_module(cfg)
+    params = mod.init_params(jax.random.key(0), cfg)
+    B, L = 2, 32
+    batch = _batch(cfg, B, L, rng)
+    lg, _, _ = jax.jit(
+        lambda p, b: mod.forward(p, b["tokens"], cfg, **{
+            k: v for k, v in b.items()
+            if k in ("frames", "patch_embeds")}))(params, batch)
+    assert lg.shape == (B, L, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(lg)))
+    loss, _ = jax.jit(lambda p, b: mod.loss_fn(p, b, cfg))(params, batch)
+    grads = jax.jit(jax.grad(lambda p, b: mod.loss_fn(p, b, cfg)[0]))(
+        params, batch)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_arch_smoke_prefill_decode(arch, rng):
+    cfg = registry.get_config(arch, smoke=True)
+    mod = registry.get_module(cfg)
+    params = mod.init_params(jax.random.key(0), cfg)
+    B, L, max_len = 2, 32, 64
+    batch = _batch(cfg, B, L, rng)
+    kw = {k: v for k, v in batch.items() if k in ("frames", "patch_embeds")}
+    lg, cache = jax.jit(
+        lambda p, t: mod.prefill(p, t, cfg, max_len, **kw))(
+            params, batch["tokens"])
+    assert lg.shape == (B, L, cfg.vocab)
+    tok = jnp.argmax(lg[:, -1:], axis=-1).astype(jnp.int32)
+    for _ in range(3):
+        lg2, cache = jax.jit(
+            lambda p, t, c: mod.decode_step(p, t, c, cfg))(
+                params, tok, cache)
+        assert lg2.shape == (B, 1, cfg.vocab)
+        assert not bool(jnp.any(jnp.isnan(lg2)))
+        tok = jnp.argmax(lg2, axis=-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-130m",
+                                  "deepseek-v2-236b", "whisper-large-v3",
+                                  "zamba2-1.2b"])
+def test_decode_consistent_with_forward(arch, rng):
+    """logits(prefill(t[:L]) then decode(t[L])) == logits(forward(t[:L+1]))
+    at the last position - cache correctness across all cache types.
+
+    MoE archs need ample expert capacity: GShard capacity drops are a
+    batch-composition effect, so forward(B*L tokens) and decode(B tokens)
+    legitimately diverge when tokens are dropped - not a cache bug."""
+    import dataclasses
+    cfg = registry.get_config(arch, smoke=True)
+    if cfg.n_routed:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    mod = registry.get_module(cfg)
+    params = mod.init_params(jax.random.key(0), cfg)
+    B, L = 2, 31
+    batch = _batch(cfg, B, L + 1, rng)
+    kw = {k: v for k, v in batch.items() if k in ("frames", "patch_embeds")}
+    full_lg, _, _ = mod.forward(params, batch["tokens"], cfg, **kw)
+    lg_p, cache = mod.prefill(params, batch["tokens"][:, :L], cfg, L + 8,
+                              **kw)
+    lg_d, _ = mod.decode_step(params, batch["tokens"][:, L:], cache, cfg)
+    a = np.asarray(full_lg[:, -1])
+    b = np.asarray(lg_d[:, 0])
+    # bf16 compute: compare top-1 and close logits
+    np.testing.assert_allclose(a, b, rtol=0.1, atol=0.15)
+    assert np.all(np.argmax(a, -1) == np.argmax(b, -1))
+
+
+def test_anchored_kv_close_to_dense(rng):
+    """RCLL-KV decode tracks the dense-cache decode (paper Table 5
+    analogue on the LM side)."""
+    import dataclasses
+    cfg = registry.get_config("llama3.2-3b", smoke=True)
+    mod = registry.get_module(cfg)
+    params = mod.init_params(jax.random.key(0), cfg)
+    B, L = 2, 32
+    batch = _batch(cfg, B, L, rng)
+    cfg_a = dataclasses.replace(cfg, kv_mode="anchored", kv_block=16)
+    lg_d, cache_d = mod.prefill(params, batch["tokens"], cfg, 64)
+    lg_a, cache_a = mod.prefill(params, batch["tokens"], cfg_a, 64)
+    np.testing.assert_allclose(np.asarray(lg_d), np.asarray(lg_a),
+                               rtol=1e-3, atol=1e-3)
+    tok = jnp.argmax(lg_d[:, -1:], -1).astype(jnp.int32)
+    out_d, _ = mod.decode_step(params, tok, cache_d, cfg)
+    out_a, _ = mod.decode_step(params, tok, cache_a, cfg_a)
+    assert np.all(np.argmax(np.asarray(out_d), -1)
+                  == np.argmax(np.asarray(out_a), -1))
+
+
+def test_registry_cells():
+    cells = registry.runnable_cells()
+    assert len(cells) == 32  # 10 archs x 4 shapes - 8 long_500k skips
+    for arch, shape in cells:
+        cfg = registry.get_config(arch, smoke=True)
+        specs = registry.input_specs(
+            cfg, __import__("repro.configs.shapes",
+                            fromlist=["SHAPES"]).SHAPES[shape])
+        assert specs

@@ -1,0 +1,136 @@
+"""NNPS equivalence + precision properties (paper Tables 1-2)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import domain as D, nnps, rcll
+
+
+def _setup(n, seed=0, periodic=False):
+    rng = np.random.default_rng(seed)
+    ds = (1.0 / n) ** 0.5
+    per = (True, True) if periodic else (False, False)
+    dom = D.Domain(lo=(0., 0.), hi=(1., 1.), h=1.2 * ds, periodic=per)
+    x = rng.uniform(0, 1, (n, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    return dom, xn
+
+
+def test_all_cell_rcll_agree_fp32(rng):
+    dom, xn = _setup(1500)
+    k = 64
+    a = nnps.all_list_neighbors(xn, dom.radius_norm, dtype=jnp.float32, k=k)
+    c = nnps.cell_list_neighbors(dom, xn, dtype=jnp.float32, k=k)
+    st_ = rcll.init_state(dom, xn, dtype=jnp.float32)
+    r = nnps.rcll_neighbors(dom, st_.rel, st_.cell_xy, dtype=jnp.float32,
+                            k=k)
+    assert int(nnps.count_wrong_determinations(a, c)) == 0
+    assert int(nnps.count_wrong_determinations(a, r)) == 0
+    assert bool(jnp.all(nnps.neighbor_sets_equal(a, c)))
+
+
+def test_periodic_equivalence(rng):
+    dom, xn = _setup(1500, periodic=True)
+    k = 64
+    a = nnps.all_list_neighbors(xn, dom.radius_norm, dtype=jnp.float32,
+                                k=k, domain=dom)
+    c = nnps.cell_list_neighbors(dom, xn, dtype=jnp.float32, k=k)
+    st_ = rcll.init_state(dom, xn, dtype=jnp.float32)
+    r = nnps.rcll_neighbors(dom, st_.rel, st_.cell_xy, dtype=jnp.float32,
+                            k=k)
+    assert int(nnps.count_wrong_determinations(a, c)) == 0
+    assert int(nnps.count_wrong_determinations(a, r)) == 0
+
+
+def test_fp16_absolute_breaks_rcll_survives():
+    """Paper Table 2's central claim, reproduced on an elongated domain
+    (normalized spacing ~1e-4 < 1e-3 threshold -> absolute fp16 fails)."""
+    rng = np.random.default_rng(3)
+    n = 4000
+    ds = 0.02
+    dom = D.Domain(lo=(0.0, 0.0), hi=(160.0, 1.0), h=1.2 * ds)
+    x = np.stack([rng.uniform(0, 160, n), rng.uniform(0, 1, n)], -1)
+    xn = dom.normalize(jnp.asarray(x))
+    k = 48
+    truth = nnps.cell_list_neighbors(dom, xn, dtype=jnp.float32, k=k)
+    bad16 = nnps.cell_list_neighbors(dom, xn, dtype=jnp.float16, k=k)
+    st_ = rcll.init_state(dom, xn, dtype=jnp.float16)
+    good16 = nnps.rcll_neighbors(dom, st_.rel, st_.cell_xy,
+                                 dtype=jnp.float16,
+                                 compute_dtype=jnp.float32, k=k)
+    wrong_abs = int(nnps.count_wrong_determinations(truth, bad16))
+    wrong_rcll = int(nnps.count_wrong_determinations(truth, good16))
+    total = int(jnp.sum(truth.count))
+    assert wrong_abs / total > 0.05, (wrong_abs, total)
+    assert wrong_rcll / max(total, 1) < 1e-3, (wrong_rcll, total)
+
+
+def test_rcll_fp16_exact_on_stored_coords():
+    """Protocol (b): with storage fp16 + fp32 arithmetic (the TPU-native
+    mode) RCLL reproduces the fp32 determinations on the stored
+    coordinates exactly - the paper's '0 incorrect' column."""
+    rng = np.random.default_rng(5)
+    n = 3000
+    ds = (1.0 / n) ** 0.5
+    dom = D.unit_square(h=1.2 * ds)
+    x = rng.uniform(0, 1, (n, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    st_ = rcll.init_state(dom, xn, dtype=jnp.float16)
+    xq = rcll.to_normalized(dom, st_)  # stored (quantized) positions
+    k = 64
+    truth_q = nnps.all_list_neighbors(xq, dom.radius_norm,
+                                      dtype=jnp.float32, k=k)
+    got = nnps.rcll_neighbors(dom, st_.rel, st_.cell_xy, dtype=jnp.float16,
+                              compute_dtype=jnp.float32, k=k)
+    assert int(nnps.count_wrong_determinations(truth_q, got)) == 0
+
+
+def test_circle_disturbance_table1():
+    """Paper Table 1: particles at radius 1 +- dR around a center; fp16
+    distance misclassifies once dR drops below its precision."""
+    rng = np.random.default_rng(7)
+    n = 100
+    theta = rng.uniform(0, 2 * np.pi, n)
+    sign = np.where(rng.uniform(size=n) < 0.5, 1.0, -1.0)
+
+    def wrong_count(dr, dtype):
+        r_true = 1.0 + sign * dr
+        x = np.stack([r_true * np.cos(theta), r_true * np.sin(theta)], -1)
+        xl = jnp.asarray(x, dtype)
+        d = jnp.sqrt(jnp.sum(xl * xl, axis=-1))
+        inside = d <= jnp.asarray(1.0, dtype)
+        return int(jnp.sum(inside != (sign < 0)))
+
+    assert wrong_count(1e-1, jnp.float16) == 0
+    assert wrong_count(1e-2, jnp.float16) == 0
+    assert wrong_count(1e-4, jnp.float16) > 10  # fp16 has ~3 digits
+    assert wrong_count(1e-4, jnp.float32) == 0
+
+
+def test_select_k_deterministic():
+    cand = jnp.asarray([[5, 9, 2, 7], [1, 1, 3, 4]], jnp.int32)
+    ok = jnp.asarray([[True, False, True, True], [False, True, False, True]])
+    idx, mask = nnps.select_k(cand, ok, 2)
+    assert idx.tolist() == [[5, 2], [1, 4]]
+    assert bool(jnp.all(mask))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(64, 600), seed=st.integers(0, 2**31 - 1),
+       periodic=st.booleans())
+def test_property_rcll_equals_alllist(n, seed, periodic):
+    rng = np.random.default_rng(seed)
+    ds = (1.0 / n) ** 0.5
+    per = (periodic, periodic)
+    dom = D.Domain(lo=(0., 0.), hi=(1., 1.), h=1.2 * ds, periodic=per)
+    x = rng.uniform(0, 1, (n, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    k = 80
+    a = nnps.all_list_neighbors(xn, dom.radius_norm, dtype=jnp.float32,
+                                k=k, domain=dom if periodic else None)
+    st_ = rcll.init_state(dom, xn, dtype=jnp.float32)
+    r = nnps.rcll_neighbors(dom, st_.rel, st_.cell_xy, dtype=jnp.float32,
+                            k=k)
+    if int(jnp.max(a.count)) >= k:
+        return  # k overflow: determinations truncated, not comparable
+    assert int(nnps.count_wrong_determinations(a, r)) == 0

@@ -1,0 +1,98 @@
+"""Persistent RCLL state: Eq. 8 updates + migration."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import domain as D, rcll
+
+
+def test_advance_matches_direct_periodic(rng):
+    dom = D.Domain(lo=(0., 0.), hi=(1., 1.), h=0.02, periodic=(True, True))
+    n = 2000
+    x = rng.uniform(0, 1, (n, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    st = rcll.init_state(dom, xn, dtype=jnp.float16)
+    hc = max(dom.hc_norm_axes)
+    direct = np.asarray(xn, np.float64)
+    for step in range(5):
+        dxn = rng.uniform(-1.5, 1.5, (n, 2)) * hc  # multi-cell moves
+        st = rcll.advance(dom, st, jnp.asarray(dxn, jnp.float32))
+        direct = direct + dxn
+    dec = np.asarray(rcll.to_normalized(dom, st))
+    org = np.asarray(dom.origin_norm)
+    want = org + np.mod(direct - org, 2.0)
+    err = np.abs(dec - want)
+    err = np.minimum(err, 2.0 - err)
+    # error accumulates ~1 ulp of rel per step
+    assert err.max() < 6 * (hc / 2) * 2**-10
+
+
+def test_migration_keeps_rel_in_range(rng):
+    dom = D.Domain(lo=(0., 0.), hi=(1., 1.), h=0.02, periodic=(True, True))
+    x = rng.uniform(0, 1, (500, 2))
+    st = rcll.init_state(dom, dom.normalize(jnp.asarray(x)))
+    for _ in range(10):
+        dxn = jnp.asarray(
+            rng.uniform(-2, 2, (500, 2)) * max(dom.hc_norm_axes),
+            jnp.float32)
+        st = rcll.advance(dom, st, dxn)
+        assert float(jnp.max(jnp.abs(st.rel.astype(jnp.float32)))) <= 1.001
+        assert np.all(np.asarray(st.cell_xy) >= 0)
+        assert np.all(np.asarray(st.cell_xy) < np.asarray(dom.ncells))
+
+
+def test_pair_displacements_match_absolute(rng):
+    n = 1000
+    ds = (1.0 / n) ** 0.5
+    dom = D.unit_square(h=1.2 * ds)
+    x = rng.uniform(0, 1, (n, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    st = rcll.init_state(dom, xn, dtype=jnp.float16)
+    nl, _ = rcll.neighbors(dom, st, dtype=jnp.float16, k=48)
+    disp, r = rcll.pair_displacements(dom, st, nl)
+    # against absolute positions (quantization-bounded error)
+    xp = np.asarray(dom.denormalize(xn))
+    want = xp[:, None, :] - xp[np.asarray(nl.idx)]
+    err = np.abs(np.asarray(disp) - want) * np.asarray(nl.mask)[..., None]
+    bound = 4 * max(dom.cell_sizes) / 2 * 2**-10
+    assert err.max() < bound
+    r_want = np.linalg.norm(want, axis=-1) * np.asarray(nl.mask)
+    assert np.abs(np.asarray(r) * np.asarray(nl.mask) - r_want).max() < bound
+
+
+def test_error_feedback_removes_quantization_drift(rng):
+    """advance_ef tracks the exact trajectory even when per-step moves
+    are below the fp16 ulp (where plain advance stalls/drifts)."""
+    import jax.numpy as jnp
+    dom = D.Domain(lo=(0., 0.), hi=(1., 1.), h=0.02, periodic=(True, True))
+    n = 200
+    x = rng.uniform(0, 1, (n, 2))
+    xn = dom.normalize(jnp.asarray(x))
+    st_plain = rcll.init_state(dom, xn, dtype=jnp.float16)
+    st_ef = st_plain
+    carry = jnp.zeros((n, 2), jnp.float32)
+    # displacement ~1e-5 cells/step: far below fp16 ulp of rel (~5e-4)
+    v = rng.uniform(-1, 1, (n, 2))
+    dxn = jnp.asarray(v * 1e-5 * max(dom.hc_norm_axes), jnp.float32)
+    nsteps = 400
+    for _ in range(nsteps):
+        st_plain = rcll.advance(dom, st_plain, dxn)
+        st_ef, carry = rcll.advance_ef(dom, st_ef, dxn, carry)
+    exact = np.asarray(xn, np.float64) + nsteps * np.asarray(dxn)
+    org = np.asarray(dom.origin_norm)
+    exact = org + np.mod(exact - org, 2.0)
+
+    def err(st, extra=0.0):
+        dec = np.asarray(rcll.to_normalized(dom, st), np.float64) + extra
+        e = np.abs(dec - exact)
+        return np.minimum(e, 2.0 - e).max()
+
+    quantum = max(dom.hc_norm_axes) / 2 * 2**-10
+    # plain: each step's sub-ulp move is rounded away -> stall error of
+    # the full accumulated displacement (>> 1 quantum)
+    assert err(st_plain) > 1.5 * quantum
+    # error feedback: decoded + carry tracks the exact trajectory to
+    # fp32-accumulation accuracy (~400 steps of fp32 rounding)
+    carry_norm = np.asarray(carry) * np.asarray(dom.hc_norm_axes) / 2
+    assert err(st_ef, extra=carry_norm) < 3e-5
+    # even the stored (quantized) EF position is within one quantum
+    assert err(st_ef) < 1.1 * quantum

@@ -1,0 +1,47 @@
+"""Fault-tolerance runtime logic."""
+import time
+
+from repro.runtime.fault_tolerance import (
+    HeartbeatMonitor, HeartbeatWriter, StragglerWatchdog,
+    plan_elastic_mesh)
+
+
+def test_heartbeat_roundtrip(tmp_path):
+    w0 = HeartbeatWriter(str(tmp_path), 0)
+    w1 = HeartbeatWriter(str(tmp_path), 1)
+    w0.beat(5)
+    w1.beat(5)
+    mon = HeartbeatMonitor(str(tmp_path), timeout_s=60)
+    assert sorted(mon.alive_hosts()) == [0, 1]
+    assert mon.dead_hosts(expected=3) == [2]
+
+
+def test_heartbeat_timeout(tmp_path):
+    w = HeartbeatWriter(str(tmp_path), 0)
+    w.beat(1)
+    mon = HeartbeatMonitor(str(tmp_path), timeout_s=0.05)
+    time.sleep(0.1)
+    assert mon.dead_hosts(expected=1) == [0]
+
+
+def test_straggler_watchdog():
+    wd = StragglerWatchdog(threshold=2.0, patience=2)
+    for _ in range(10):
+        assert not wd.observe(1.0)
+    assert wd.observe(5.0)  # straggler event
+    assert not wd.flagged  # needs `patience` consecutive
+    assert wd.observe(5.0)
+    assert wd.flagged
+    # baseline not poisoned by slow steps
+    assert wd.ema < 1.5
+
+
+def test_plan_elastic_mesh():
+    full = plan_elastic_mesh(256, model_parallel=16, global_batch=256)
+    assert full["mesh_shape"] == (16, 16)
+    assert full["drop_devices"] == 0
+    # lose a host (8 chips): 248 available -> data axis shrinks
+    sm = plan_elastic_mesh(248, model_parallel=16, global_batch=256)
+    data = sm["mesh_shape"][0]
+    assert data * 16 <= 248
+    assert 256 % data == 0

@@ -1,0 +1,86 @@
+"""SPH discretization: kernel, gradient operators, governing equations."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import cases, domain as D, nnps, rcll, sph
+
+
+def test_kernel_normalization_2d():
+    """integral of W over the plane = 1."""
+    h = 0.1
+    g = np.linspace(-2 * h, 2 * h, 201)
+    X, Y = np.meshgrid(g, g)
+    r = jnp.asarray(np.sqrt(X**2 + Y**2))
+    w = sph.bspline_w(r, h, 2)
+    integral = float(jnp.sum(w)) * (g[1] - g[0]) ** 2
+    assert abs(integral - 1.0) < 1e-3
+
+
+def test_kernel_compact_support_and_derivative():
+    h = 0.1
+    r = jnp.asarray([0.0, 0.5 * h, h, 1.9 * h, 2 * h, 3 * h])
+    w = np.asarray(sph.bspline_w(r, h, 2))
+    dw = np.asarray(sph.bspline_dw_dr(r, h, 2))
+    assert w[-1] == 0 and w[-2] == 0
+    assert dw[0] == 0  # extremum at r=0
+    assert np.all(dw[1:4] < 0)  # monotone decreasing inside support
+
+
+def _grad_setup(ds, jitter=0.2, dtype=jnp.float16):
+    dom, x = cases.gradient_test_particles(ds, jitter=jitter)
+    xn = dom.normalize(jnp.asarray(x))
+    st = rcll.init_state(dom, xn, dtype=dtype)
+    nl, _ = rcll.neighbors(dom, st, dtype=dtype,
+                           k=64)
+    disp, r = rcll.pair_displacements(dom, st, nl)
+    return dom, x, nl, disp, r
+
+
+def test_gradient_exact_on_linear_field():
+    """The A5 normalized operator is exact for linear f by construction."""
+    dom, x, nl, disp, r = _grad_setup(0.05)
+    f = jnp.asarray(2.5 * x[:, 0] - 1.0, jnp.float32)
+    g = sph.gradient_normalized_pairs(f, disp, r, nl.idx, nl.mask,
+                                      dom.h, 2)
+    interior = (np.abs(x - 0.5) < 0.4).all(axis=1)
+    np.testing.assert_allclose(np.asarray(g)[interior, 0], 2.5, atol=2e-3)
+
+
+def test_gradient_first_order_convergence_table3():
+    """RMSE of d(x^3)/dx halves with ds (paper Table 3 trend), and the
+    fp16-RCLL neighbor list gives the same RMSE as fp32 (Table 3's
+    claim that FP16 NNPS does not degrade the gradient)."""
+    errs = {}
+    for ds in (0.04, 0.02, 0.01):
+        for dtype in (jnp.float32, jnp.float16):
+            dom, x, nl, disp, r = _grad_setup(ds, dtype=dtype)
+            f = jnp.asarray(cases.cubic_field(jnp.asarray(x)), jnp.float32)
+            g = sph.gradient_normalized_pairs(
+                f, disp, r, nl.idx, nl.mask, dom.h, 2)[:, 0]
+            want = np.asarray(cases.cubic_gradient_x(jnp.asarray(x)))
+            interior = (np.abs(x - 0.5) < 0.5 - 2.5 * dom.h).all(axis=1)
+            rmse = float(np.sqrt(np.mean(
+                (np.asarray(g)[interior] - want[interior]) ** 2)))
+            errs[(ds, dtype.__name__)] = rmse
+    # 1st order: error ratio ~2 per halving (allow slack)
+    assert errs[(0.02, 'float32')] < 0.75 * errs[(0.04, 'float32')]
+    assert errs[(0.01, 'float32')] < 0.75 * errs[(0.02, 'float32')]
+    for ds in (0.04, 0.02, 0.01):
+        a, b = errs[(ds, 'float32')], errs[(ds, 'float16')]
+        assert abs(a - b) / a < 0.05, (ds, a, b)
+
+
+def test_density_summation_near_rho0(rng):
+    ds = 0.025
+    dom, x = cases.gradient_test_particles(ds, jitter=0.0)
+    xn = dom.normalize(jnp.asarray(x))
+    st = rcll.init_state(dom, xn, dtype=jnp.float32)
+    nl, _ = rcll.neighbors(dom, st, dtype=jnp.float32, k=64)
+    disp, r = rcll.pair_displacements(dom, st, nl)
+    n = x.shape[0]
+    fl = sph.FluidState(v=jnp.zeros((n, 2)),
+                        rho=jnp.ones((n,)),
+                        m=jnp.full((n,), ds * ds))
+    rho = sph.density_summation(fl, nl.idx, nl.mask, r, dom.h, 2)
+    interior = (np.abs(x - 0.5) < 0.5 - 2.5 * dom.h).all(axis=1)
+    np.testing.assert_allclose(np.asarray(rho)[interior], 1.0, rtol=2e-2)
