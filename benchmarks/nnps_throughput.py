@@ -1,0 +1,107 @@
+"""Persistent-pipeline NNPS throughput: Verlet-skin reuse vs per-step
+rebuild (the paper's third speedup round, made stateful).
+
+Runs the Poiseuille channel with the production RCLL solver at
+N in {8k, 64k} under two neighbor policies:
+
+  * skin = 0       : the seed behavior - re-bin + re-search every step
+                     (cell_factor 1, tight candidate matrix);
+  * skin = 0.5 h_c : Verlet-skin reuse - search radius inflated to
+                     r + skin (cells sized to cover it: cell_factor 2),
+                     list rebuilt only when max displacement > skin/2.
+
+Emits ``BENCH_nnps.json`` with steps/sec and the rebuild frequency so the
+perf trajectory is tracked from this PR onward. CPU wall times are a
+proxy (see _util); the *ratio* and the rebuild counts are the signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+
+import jax
+import numpy as np
+
+from benchmarks._util import emit, time_fn
+from repro.core import cases, solver
+
+
+def run_case(n_target: int, skin_frac_hc: float, nsteps: int) -> dict:
+    ds = float((1.0 / n_target) ** 0.5)
+    # skin is skin_frac_hc x the BASELINE cell size h_c = r (cell_factor 1);
+    # the skinned run sizes its cells to cover r + skin exactly
+    # (cell_factor = 1 + skin/r), keeping the candidate set as tight as
+    # the coverage guarantee allows.
+    cell_factor = 1.0 + skin_frac_hc
+    max_neighbors = 64 if skin_frac_hc > 0 else 40
+    case = cases.PoiseuilleCase(
+        ds=ds,
+        L=1.0,
+        Lx=1.0,
+        algo="rcll",
+        cell_factor=cell_factor,
+        max_neighbors=max_neighbors,
+    )
+    cfg, st = case.build()
+    if skin_frac_hc > 0:
+        skin = skin_frac_hc * cfg.domain.radius
+        cfg = dataclasses.replace(cfg, skin=skin)
+    n = int(st.xn.shape[0])
+
+    t = time_fn(
+        lambda: solver.simulate_stats(cfg, st, nsteps), warmup=1, repeats=2
+    )
+    _, stats = jax.block_until_ready(solver.simulate_stats(cfg, st, nsteps))
+    rebuilds = int(stats.rebuilds)
+    row = {
+        "n_target": n_target,
+        "n_particles": n,
+        "skin_frac_hc": skin_frac_hc,
+        "skin": float(getattr(cfg, "skin", 0.0)),
+        "cell_factor": cell_factor,
+        "max_neighbors": max_neighbors,
+        "nsteps": nsteps,
+        "time_s": round(t, 4),
+        "steps_per_sec": round(nsteps / t, 3),
+        "rebuilds": rebuilds,
+        "rebuild_frequency": round(rebuilds / nsteps, 4),
+        "overflow": bool(stats.overflow),
+    }
+    emit("nnps_throughput", row)
+    return row
+
+
+def main(full: bool = True):
+    sizes = [(8000, 40), (64000, 16)] if full else [(8000, 40)]
+    rows = []
+    for n_target, nsteps in sizes:
+        for skin_frac in (0.0, 0.5):
+            rows.append(run_case(n_target, skin_frac, nsteps))
+
+    speedups = {}
+    for n_target, _ in sizes:
+        base = next(
+            r for r in rows
+            if r["n_target"] == n_target and r["skin_frac_hc"] == 0.0
+        )
+        skinned = next(
+            r for r in rows
+            if r["n_target"] == n_target and r["skin_frac_hc"] > 0.0
+        )
+        speedups[str(n_target)] = round(
+            skinned["steps_per_sec"] / base["steps_per_sec"], 3
+        )
+    out = {
+        "backend": jax.default_backend(),
+        "cases": rows,
+        "steps_per_sec_speedup_skin_vs_none": speedups,
+    }
+    with open("BENCH_nnps.json", "w") as f:
+        json.dump(out, f, indent=2)
+    emit("nnps_throughput_summary", speedups)
+    return out
+
+
+if __name__ == "__main__":
+    main(full="--quick" not in sys.argv)

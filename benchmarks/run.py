@@ -10,9 +10,9 @@ import time
 import traceback
 
 from benchmarks import (fig7_scaling, fig13_precision, lm_roofline,
-                        table1_circle, table2_neighbor_accuracy,
-                        table3_gradient, table5_poiseuille,
-                        table6_sort_locality)
+                        nnps_throughput, table1_circle,
+                        table2_neighbor_accuracy, table3_gradient,
+                        table5_poiseuille, table6_sort_locality)
 
 MODULES = {
     "table1": table1_circle,
@@ -23,6 +23,7 @@ MODULES = {
     "table6": table6_sort_locality,
     "fig7": fig7_scaling,
     "table5": table5_poiseuille,
+    "nnps": nnps_throughput,
 }
 
 

@@ -37,6 +37,12 @@ class PoiseuilleCase:
     policy: PrecisionPolicy = PrecisionPolicy()
     max_neighbors: int = 40
     cfl: float = 0.125
+    # Persistent-pipeline knobs: a Verlet skin needs cells that cover the
+    # inflated radius, so cell_factor must be >= (r + skin) / r.
+    skin: float = 0.0
+    cell_factor: float = 1.0
+    rebuild_every: int | None = None
+    backend: str | None = None
 
     @property
     def F(self) -> float:
@@ -63,6 +69,7 @@ class PoiseuilleCase:
             lo=(0.0, -wall),
             hi=(self.Lx, self.L + wall),
             h=self.h,
+            cell_factor=self.cell_factor,
             periodic=(True, False),
         )
 
@@ -98,6 +105,9 @@ class PoiseuilleCase:
             max_neighbors=self.max_neighbors,
             algo=self.algo,
             policy=self.policy,
+            skin=self.skin,
+            rebuild_every=self.rebuild_every,
+            backend=self.backend,
         )
         state = solver_lib.init_state(
             cfg, pos, v, m, rho, fixed=jnp.asarray(fixed)

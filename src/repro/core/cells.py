@@ -54,6 +54,31 @@ def bin_particles(domain: Domain, xn: Array, capacity: int) -> CellBinning:
     return bin_by_cell_id(domain, cell_id, cell_xy, capacity)
 
 
+def _table_from_sorted(
+    n_total: int, sorted_cid: Array, values: Array, capacity: int
+) -> tuple[Array, Array, Array]:
+    """Scatter cell-sorted per-particle ``values`` into the (C, cap) table.
+
+    Shared core of ``bin_by_cell_id`` and ``pack_particles``: computes the
+    per-cell slot of each (sorted) particle, drops overflow past
+    ``capacity`` via a scratch row, and returns (table, counts, overflow).
+    """
+    npart = sorted_cid.shape[0]
+    counts = jnp.bincount(sorted_cid, length=n_total).astype(jnp.int32)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)[:-1]]
+    )
+    slot = jnp.arange(npart, dtype=jnp.int32) - starts[sorted_cid]
+    keep = slot < capacity
+    overflow = jnp.sum(~keep).astype(jnp.int32)
+    # Route dropped entries to a scratch row we slice off afterwards.
+    safe_cid = jnp.where(keep, sorted_cid, n_total)
+    safe_slot = jnp.where(keep, slot, 0)
+    table = jnp.full((n_total + 1, capacity), -1, dtype=jnp.int32)
+    table = table.at[safe_cid, safe_slot].set(values, mode="drop")
+    return table[:n_total], counts, overflow
+
+
 def bin_by_cell_id(
     domain: Domain, cell_id: Array, cell_xy: Array, capacity: int
 ) -> CellBinning:
@@ -63,28 +88,13 @@ def bin_by_cell_id(
     (paper Eq. 8); binning must respect that assignment rather than
     recomputing it from absolute positions (which RCLL never materializes).
     """
-    n_total = domain.ncells_total
-    npart = cell_id.shape[0]
-
     # Stable sort by cell id == spatial sort (paper's locality optimization).
     order = jnp.argsort(cell_id, stable=True).astype(jnp.int32)
-    sorted_cid = cell_id[order]
-
-    counts = jnp.bincount(cell_id, length=n_total).astype(jnp.int32)
-    starts = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)[:-1]]
+    table, counts, overflow = _table_from_sorted(
+        domain.ncells_total, cell_id[order], order, capacity
     )
-    slot = jnp.arange(npart, dtype=jnp.int32) - starts[sorted_cid]
-
-    keep = slot < capacity
-    overflow = jnp.sum(~keep).astype(jnp.int32)
-    # Route dropped entries to a scratch row we slice off afterwards.
-    safe_cid = jnp.where(keep, sorted_cid, n_total)
-    safe_slot = jnp.where(keep, slot, 0)
-    table = jnp.full((n_total + 1, capacity), -1, dtype=jnp.int32)
-    table = table.at[safe_cid, safe_slot].set(order, mode="drop")
     return CellBinning(
-        table=table[:n_total],
+        table=table,
         counts=counts,
         cell_id=cell_id,
         cell_xy=cell_xy,
@@ -133,6 +143,105 @@ def gather_candidates(
     npart = binning.cell_id.shape[0]
     cand = jnp.where(mask, cand, 0)
     return cand.reshape(npart, -1), mask.reshape(npart, -1)
+
+
+# --------------------------------------------------------------------------
+# Cell-packed ("spatially sorted") particle layout
+# --------------------------------------------------------------------------
+class CellPacking(NamedTuple):
+    """Spatial-sort permutation + binning of the *packed* particle arrays.
+
+    This is the persistent-pipeline layout (the paper's Thrust xy-sort
+    locality optimization made stateful): all per-particle arrays are
+    physically reordered by flat cell id, so particles sharing a cell are
+    contiguous in memory and the cell table's gathers are near-contiguous.
+
+    order:    (N,) int32, packed position -> original particle id.
+    inverse:  (N,) int32, original particle id -> packed position.
+    binning:  CellBinning over the PACKED arrays - ``binning.table`` holds
+              packed indices (its own ``order`` is the identity), so a
+              neighbor list built from it is in packed indexing.
+    """
+
+    order: Array
+    inverse: Array
+    binning: CellBinning
+
+    @property
+    def npart(self) -> int:
+        return self.order.shape[0]
+
+    def pack(self, x: Array) -> Array:
+        """Reorder a per-particle array (original -> packed indexing)."""
+        return x[self.order]
+
+    def unpack(self, x: Array) -> Array:
+        """Reorder a per-particle array (packed -> original indexing)."""
+        return x[self.inverse]
+
+
+def inverse_permutation(order: Array) -> Array:
+    """Inverse of a permutation given as an int32 index array."""
+    n = order.shape[0]
+    inv = jnp.zeros((n,), jnp.int32)
+    return inv.at[order].set(jnp.arange(n, dtype=jnp.int32))
+
+
+def pack_particles(
+    domain: Domain, cell_id: Array, cell_xy: Array, capacity: int
+) -> CellPacking:
+    """Spatially sort particles by flat cell id and bin the sorted set.
+
+    One stable argsort serves both purposes: it IS the paper's locality
+    sort, and because the sorted set is cell-contiguous the cell table is
+    filled with consecutive packed indices (table[c, s] = starts[c] + s)
+    without a second sort.
+    """
+    npart = cell_id.shape[0]
+    order = jnp.argsort(cell_id, stable=True).astype(jnp.int32)
+    inverse = inverse_permutation(order)
+    sorted_cid = cell_id[order]
+    packed_ids = jnp.arange(npart, dtype=jnp.int32)
+    table, counts, overflow = _table_from_sorted(
+        domain.ncells_total, sorted_cid, packed_ids, capacity
+    )
+    binning = CellBinning(
+        table=table,
+        counts=counts,
+        cell_id=sorted_cid,
+        cell_xy=cell_xy[order],
+        order=packed_ids,  # packed arrays are already cell-sorted
+        overflow=overflow,
+    )
+    return CellPacking(order=order, inverse=inverse, binning=binning)
+
+
+def to_cell_major(binning: CellBinning, x: Array, fill=0) -> Array:
+    """Scatter a per-particle array into the lane-padded (C, cap, ...) layout.
+
+    x: (N, ...) indexed the same way as ``binning.table``'s entries.
+    Empty slots are filled with ``fill``.
+    """
+    safe = jnp.maximum(binning.table, 0)
+    occ = binning.table >= 0
+    out = x[safe]
+    shape = occ.shape + (1,) * (out.ndim - 2)
+    return jnp.where(occ.reshape(shape), out, fill)
+
+
+def from_cell_major(binning: CellBinning, table_vals: Array) -> Array:
+    """Gather per-particle values back out of a (C, cap, ...) table.
+
+    Inverse of :func:`to_cell_major` for occupied slots. Requires no
+    overflow (dropped particles have no slot to gather from).
+    """
+    n = binning.cell_id.shape[0]
+    flat = table_vals.reshape((-1,) + table_vals.shape[2:])
+    ids = binning.table.reshape(-1)
+    tpos = jnp.arange(ids.shape[0], dtype=jnp.int32)
+    safe_ids = jnp.where(ids >= 0, ids, n)  # empty slots -> dropped
+    slot_of = jnp.zeros((n,), jnp.int32).at[safe_ids].set(tpos, mode="drop")
+    return flat[slot_of]
 
 
 def default_capacity(domain: Domain, n_particles: int, safety: float = 3.0) -> int:

@@ -83,22 +83,22 @@ def select_k(cand: Array, ok: Array, k: int) -> tuple[Array, Array]:
     return idx, mask
 
 
-def _pairwise_r2(a: Array, b: Array, wrap_span: Array | None) -> Array:
-    """Squared distances between row sets a (N,d) and b (M,d), in a.dtype.
+def min_image(diff: Array, wrap_span: Array | None) -> Array:
+    """Minimum-image wrap of coordinate differences (single source of truth).
 
-    wrap_span: optional (d,) same-dtype spans for minimum-image wrap on
-    periodic axes (0 -> no wrap on that axis).
+    diff: (..., d) coordinate differences in any float dtype.
+    wrap_span: optional (d,) per-axis spans; 0 disables the wrap on that
+        axis (non-periodic). None -> identity.
     """
-    diff = a[:, None, :] - b[None, :, :]
-    if wrap_span is not None:
-        span = wrap_span.astype(diff.dtype)
-        # minimum image: wrap only axes with span > 0
-        wrapped = diff - jnp.round(diff / jnp.where(span > 0, span, 1)) * span
-        diff = jnp.where(span > 0, wrapped, diff)
-    return jnp.sum(diff * diff, axis=-1)
+    if wrap_span is None:
+        return diff
+    span = wrap_span.astype(diff.dtype)
+    wrapped = diff - jnp.round(diff / jnp.where(span > 0, span, 1)) * span
+    return jnp.where(span > 0, wrapped, diff)
 
 
-def _wrap_span_norm(domain: Domain) -> Array | None:
+def wrap_span_norm(domain: Domain) -> Array | None:
+    """Per-axis periodic spans in normalized (Eq. 5) units; None if none."""
     if not any(domain.periodic):
         return None
     spans = [
@@ -106,6 +106,20 @@ def _wrap_span_norm(domain: Domain) -> Array | None:
         for s, p in zip(domain.spans, domain.periodic)
     ]
     return jnp.asarray(spans, dtype=jnp.float32)
+
+
+# Back-compat private alias (pre-packed-pipeline name).
+_wrap_span_norm = wrap_span_norm
+
+
+def _pairwise_r2(a: Array, b: Array, wrap_span: Array | None) -> Array:
+    """Squared distances between row sets a (N,d) and b (M,d), in a.dtype.
+
+    wrap_span: optional (d,) same-dtype spans for minimum-image wrap on
+    periodic axes (0 -> no wrap on that axis).
+    """
+    diff = min_image(a[:, None, :] - b[None, :, :], wrap_span)
+    return jnp.sum(diff * diff, axis=-1)
 
 
 # --------------------------------------------------------------------------
@@ -235,12 +249,7 @@ def cell_list_neighbors(
     x_lo = xn.astype(dtype)
     xi = x_lo[:, None, :]  # (N, 1, d)
     xj = x_lo[cand]  # (N, M, d)
-    diff = xi - xj
-    wrap = _wrap_span_norm(domain)
-    if wrap is not None:
-        span = wrap.astype(diff.dtype)
-        wrapped = diff - jnp.round(diff / jnp.where(span > 0, span, 1)) * span
-        diff = jnp.where(span > 0, wrapped, diff)
+    diff = min_image(xi - xj, wrap_span_norm(domain))
     d2 = jnp.sum(diff * diff, axis=-1)
     r2 = jnp.asarray(domain.radius_norm, dtype=dtype) ** 2
     ok = cmask & (d2 <= r2)
@@ -300,6 +309,7 @@ def rcll_neighbors(
     capacity: int | None = None,
     binning: cells_lib.CellBinning | None = None,
     include_self: bool = False,
+    radius_cell: float | None = None,
 ) -> NeighborList:
     """RCLL search from stored relative coordinates + integer cell coords.
 
@@ -309,6 +319,10 @@ def rcll_neighbors(
     compute_dtype: arithmetic dtype for Eq. (7). Defaults to ``dtype``
          (paper-faithful); fp32 is the TPU-native mode (fp16 storage, VPU
          fp32 arithmetic) with zero arithmetic rounding.
+    radius_cell: search radius override in reference-cell units (used by
+         the Verlet-skin pipeline to search with an inflated radius
+         r + skin). Defaults to the exact kernel-support radius. Must not
+         exceed the 3^dim-neighborhood coverage guarantee (one cell edge).
     """
     n = rel.shape[0]
     cdt = compute_dtype or dtype
@@ -322,12 +336,29 @@ def rcll_neighbors(
     w = jnp.asarray(domain.cell_weights)
     rel = rel.astype(dtype)  # storage quantization
     d2 = rcll_r2_cell_units(rel[:, None, :], rel[cand], delta, w, dtype=cdt)
-    rcell = jnp.asarray(rcll_radius_cell_units(domain), dtype=cdt)
+    if radius_cell is None:
+        radius_cell = rcll_radius_cell_units(domain)
+    rcell = jnp.asarray(radius_cell, dtype=cdt)
     ok = cmask & (d2 <= rcell * rcell)
     if not include_self:
         ok = ok & (cand != jnp.arange(n, dtype=jnp.int32)[:, None])
     idx, mask = select_k(cand, ok, k)
     return NeighborList(idx, mask, jnp.sum(ok, axis=1).astype(jnp.int32))
+
+
+def refilter(nl: NeighborList, d2: Array, r2: Array | float) -> NeighborList:
+    """Narrow a (possibly skin-inflated) list to pairs with d2 <= r2.
+
+    The Verlet-reuse pipeline searches with radius r + skin; the exact-
+    radius neighbor set is recovered by masking with the true radius. The
+    caller supplies d2 computed with the SAME arithmetic as the original
+    search (e.g. Eq. 7 cell units) so boundary decisions are bit-identical
+    to a fresh search. idx is left uncompacted: mask carries the set.
+    """
+    ok = nl.mask & (d2 <= r2)
+    return NeighborList(
+        idx=nl.idx, mask=ok, count=jnp.sum(ok, axis=1).astype(jnp.int32)
+    )
 
 
 # --------------------------------------------------------------------------

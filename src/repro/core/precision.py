@@ -52,16 +52,27 @@ class PrecisionPolicy:
       physics: dtype of density/momentum/energy updates (paper: fp64;
         TPU default: fp32).
       accum: dtype of reductions/accumulators inside physics ops.
+      nnps_compute: ARITHMETIC dtype of the Eq. (7) distance pipeline in
+        the production solver (storage stays ``nnps``/``coords``). The
+        default fp32 is the TPU-native mode (the VPU upconverts fp16
+        storage for free, zero arithmetic rounding) and is what makes the
+        xla and pallas neighbor backends agree bit-for-bit; set "fp16"
+        for the paper's A100 half-ALU arithmetic.
     """
 
     nnps: str = "fp16"
     coords: str = "fp16"
     physics: str = "fp32"
     accum: str = "fp32"
+    nnps_compute: str = "fp32"
 
     @property
     def nnps_dtype(self):
         return dtype_of(self.nnps)
+
+    @property
+    def nnps_compute_dtype(self):
+        return dtype_of(self.nnps_compute)
 
     @property
     def coords_dtype(self):

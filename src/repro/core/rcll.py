@@ -138,6 +138,7 @@ def neighbors(
     k: int,
     capacity: int | None = None,
     include_self: bool = False,
+    radius_cell: float | None = None,
 ) -> tuple[nnps.NeighborList, cells_lib.CellBinning]:
     """Search neighbors from persistent state; also returns the binning."""
     n = state.rel.shape[0]
@@ -152,8 +153,92 @@ def neighbors(
         k=k,
         binning=binning,
         include_self=include_self,
+        radius_cell=radius_cell,
     )
     return nl, binning
+
+
+# --------------------------------------------------------------------------
+# Cell-packed persistent state (the spatial-sort pipeline)
+# --------------------------------------------------------------------------
+class PackedState(NamedTuple):
+    """RCLL state physically reordered by flat cell id.
+
+    ``rc``'s arrays are in *packed* (cell-sorted) order; ``packing`` carries
+    the order/inverse permutation back to original particle indexing plus
+    the binning of the packed arrays (whose cell table therefore holds
+    packed indices). Neighbor lists built from this state are in packed
+    indexing - translate with ``packing.order`` / ``packing.inverse`` at
+    the API boundary.
+    """
+
+    rc: RCLLState
+    packing: cells_lib.CellPacking
+
+
+def pack_state(
+    domain: Domain, state: RCLLState, capacity: int
+) -> PackedState:
+    """Spatially sort an RCLL state by flat cell id (one stable argsort)."""
+    cell_id = domain.flat_cell_id(state.cell_xy)
+    packing = cells_lib.pack_particles(domain, cell_id, state.cell_xy, capacity)
+    rc = RCLLState(
+        cell_xy=packing.binning.cell_xy, rel=packing.pack(state.rel)
+    )
+    return PackedState(rc=rc, packing=packing)
+
+
+def packed_neighbors(
+    domain: Domain,
+    pstate: PackedState,
+    *,
+    dtype=jnp.float16,
+    compute_dtype=None,
+    k: int,
+    include_self: bool = False,
+    radius_cell: float | None = None,
+) -> nnps.NeighborList:
+    """Neighbor search on the packed arrays (returns packed indexing).
+
+    Because the packed binning's table rows are runs of consecutive
+    indices, the candidate gather reads near-contiguous memory - this is
+    where the paper's 2.7x locality win comes from.
+    """
+    return nnps.rcll_neighbors(
+        domain,
+        pstate.rc.rel,
+        pstate.rc.cell_xy,
+        dtype=dtype,
+        compute_dtype=compute_dtype,
+        k=k,
+        binning=pstate.packing.binning,
+        include_self=include_self,
+        radius_cell=radius_cell,
+    )
+
+
+def pair_r2_cell(
+    domain: Domain,
+    state: RCLLState,
+    nl: nnps.NeighborList,
+    *,
+    dtype=jnp.float16,
+    compute_dtype=None,
+) -> Array:
+    """Eq. (7) squared pair distances in reference-cell units for ``nl``.
+
+    Uses exactly the arithmetic of :func:`nnps.rcll_neighbors`, so
+    filtering these against a radius reproduces a fresh search's boundary
+    decisions bit-for-bit (the Verlet-skin exactness argument).
+    """
+    cdt = compute_dtype or dtype
+    rel = state.rel.astype(dtype)
+    delta = state.cell_xy[:, None, :] - state.cell_xy[nl.idx]
+    delta = domain.wrap_cell_delta(delta)
+    w = jnp.asarray(domain.cell_weights)
+    return nnps.rcll_r2_cell_units(
+        rel[:, None, :], rel[nl.idx], delta, w, dtype=cdt
+    )
 
 
 def pair_displacements(

@@ -10,6 +10,33 @@ One jit-able ``step`` covering the paper's three approaches (Table 4):
 The physics tier (density/momentum/EOS/integration) is always the
 policy's ``physics`` dtype (fp32 here; fp64 on CPU for the accuracy
 benchmarks via scoped x64).
+
+Persistent cell-packed pipeline (the production RCLL path)
+----------------------------------------------------------
+The RCLL path no longer re-bins and re-searches every step. Instead the
+scan carry holds a *cell-packed* state (all per-particle arrays physically
+reordered by flat cell id - the paper's Thrust xy-sort locality
+optimization made persistent) plus a Verlet-skin neighbor list:
+
+  * at (re)build time, particles are stably sorted by flat cell id
+    (``rcll.pack_state``) and neighbors are searched with the radius
+    inflated to ``r + skin``;
+  * between rebuilds only pair geometry (Eq. 7 decode) and the physics
+    sums run; the neighbor list is reused verbatim. Extra skin pairs are
+    exactly harmless because the B-spline kernel and its derivative vanish
+    beyond the true support ``2h``;
+  * per-particle displacement since the last rebuild is accumulated in
+    fp32 and the list is rebuilt (via ``lax.cond`` inside the scanned
+    step) only when ``max_i |disp_i| > skin/2`` - the classic Verlet-list
+    criterion. ``skin=0`` degenerates to per-step rebuild (the seed
+    behavior); ``rebuild_every=n`` forces a static cadence for
+    benchmarking.
+
+Neighbor production is backend-switchable: ``backend="xla"`` uses the
+pure-jnp candidate-gather + top_k search; ``backend="pallas"`` routes
+through the cell-blocked Pallas kernel (``kernels/nnps_pairwise.py``),
+which consumes the packed (C, d, cap) tables directly. The default is
+pallas on TPU and xla elsewhere, so CPU tests always pass.
 """
 from __future__ import annotations
 
@@ -41,6 +68,10 @@ class SPHConfig:
     capacity: int | None = None
     algo: str = "rcll"  # "all" | "cell" | "rcll"
     policy: PrecisionPolicy = PrecisionPolicy()
+    # --- persistent-pipeline knobs (RCLL path only) ---
+    skin: float = 0.0  # physical Verlet-skin width added to the search radius
+    rebuild_every: int | None = None  # static rebuild cadence (overrides skin)
+    backend: str | None = None  # None=auto | "xla" | "pallas"
 
     @property
     def h(self) -> float:
@@ -48,6 +79,44 @@ class SPHConfig:
 
     def cap(self, n: int) -> int:
         return self.capacity or cells_lib.default_capacity(self.domain, n)
+
+    @property
+    def skin_norm(self) -> float:
+        """Skin width in normalized (Eq. 5) units."""
+        return 2.0 * self.skin / self.domain.h_d
+
+    @property
+    def search_radius_cell(self) -> float:
+        """Inflated search radius in reference-cell units (r + skin)."""
+        return float(
+            (self.domain.radius_norm + self.skin_norm) / self.domain.hc_ref
+        )
+
+    @property
+    def resolved_backend(self) -> str:
+        if self.backend is not None:
+            if self.backend not in ("xla", "pallas"):
+                raise ValueError(
+                    f"unknown backend {self.backend!r}; one of 'xla', 'pallas'"
+                )
+            return self.backend
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+    def validate_skin(self) -> None:
+        """The 3^dim cell neighborhood only guarantees coverage up to one
+        cell edge: pairs separated by >= min(cell_sizes) can be missed.
+        The inflated radius must stay inside that guarantee - build the
+        Domain with ``cell_factor >= (r + skin) / r`` to use a skin."""
+        if self.skin < 0:
+            raise ValueError(f"skin must be >= 0, got {self.skin}")
+        limit = min(self.domain.cell_sizes)
+        if self.domain.radius + self.skin > limit * (1 + 1e-9):
+            raise ValueError(
+                f"skin {self.skin} too large: r + skin = "
+                f"{self.domain.radius + self.skin:.6g} exceeds the cell "
+                f"coverage guarantee {limit:.6g}; increase cell_factor to "
+                f">= {(self.domain.radius + self.skin) / self.domain.radius:.3f}"
+            )
 
 
 class SPHState(NamedTuple):
@@ -61,6 +130,32 @@ class SPHState(NamedTuple):
     fluid: sph.FluidState
     fixed: Array  # (N,) bool - wall/dummy particles (v pinned to 0)
     t: Array  # () fp32 simulation time
+
+
+class PersistentCarry(NamedTuple):
+    """Scan carry of the packed persistent pipeline.
+
+    All per-particle arrays inside ``st`` are in PACKED (cell-sorted)
+    order; ``order`` maps packed position -> original particle id so the
+    API boundary (``finalize``) can restore user indexing. ``nl`` is in
+    packed indexing and was built with the skin-inflated radius.
+    """
+
+    st: SPHState
+    order: Array  # (N,) int32 packed -> original
+    nl: nnps.NeighborList  # packed indexing, radius r + skin
+    disp_acc: Array  # (N, d) fp32 normalized displacement since rebuild
+    rebuilds: Array  # () int32 number of bin+search rebuilds so far
+    steps: Array  # () int32 steps taken since init
+    overflow: Array  # () bool any cell-table/neighbor-list overflow seen
+
+
+class SimStats(NamedTuple):
+    """Diagnostics of a persistent-pipeline run (see simulate_stats)."""
+
+    rebuilds: Array  # () int32
+    steps: Array  # () int32
+    overflow: Array  # () bool
 
 
 def init_state(
@@ -89,18 +184,201 @@ def positions(cfg: SPHConfig, state: SPHState, dtype=jnp.float32) -> Array:
     return cfg.domain.denormalize(xn, dtype=dtype)
 
 
+# --------------------------------------------------------------------------
+# Persistent cell-packed RCLL pipeline
+# --------------------------------------------------------------------------
+def _permute_state(st: SPHState, perm: Array, rc: rcll.RCLLState) -> SPHState:
+    """Reorder every per-particle array by ``perm`` (rc supplied pre-sorted)."""
+    return SPHState(
+        xn=st.xn[perm],
+        rc=rc,
+        fluid=sph.FluidState(
+            v=st.fluid.v[perm], rho=st.fluid.rho[perm], m=st.fluid.m[perm]
+        ),
+        fixed=st.fixed[perm],
+        t=st.t,
+    )
+
+
+def _packed_neighbor_list(
+    cfg: SPHConfig, ps: rcll.PackedState
+) -> nnps.NeighborList:
+    """Produce the (packed-indexing) neighbor list via the chosen backend."""
+    # One arithmetic dtype for both backends (and for the exact-set
+    # refilter below): backend choice must never change neighbor sets.
+    pol = cfg.policy
+    if cfg.resolved_backend == "pallas":
+        from repro.kernels import ops  # deferred: core stays kernel-free
+
+        return ops.rcll_neighbor_lists(
+            cfg.domain,
+            ps.packing.binning,
+            ps.rc.rel,
+            k=cfg.max_neighbors,
+            radius_cell=cfg.search_radius_cell,
+            nnps_dtype=pol.nnps_dtype,
+            compute_dtype=pol.nnps_compute_dtype,
+        )
+    return rcll.packed_neighbors(
+        cfg.domain,
+        ps,
+        dtype=pol.nnps_dtype,
+        compute_dtype=pol.nnps_compute_dtype,
+        k=cfg.max_neighbors,
+        radius_cell=cfg.search_radius_cell,
+    )
+
+
+def _rebuild(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
+    """Re-sort by cell, re-bin, and re-search with the inflated radius."""
+    n = carry.order.shape[0]
+    ps = rcll.pack_state(cfg.domain, carry.st.rc, cfg.cap(n))
+    perm = ps.packing.order  # current-packed -> new-packed
+    st = _permute_state(carry.st, perm, ps.rc)
+    nl = _packed_neighbor_list(cfg, ps)
+    overflow = (
+        carry.overflow
+        | (ps.packing.binning.overflow > 0)
+        | nl.overflowed
+    )
+    return PersistentCarry(
+        st=st,
+        order=carry.order[perm],
+        nl=nl,
+        disp_acc=jnp.zeros_like(carry.disp_acc),
+        rebuilds=carry.rebuilds + 1,
+        steps=carry.steps,
+        overflow=overflow,
+    )
+
+
+def init_persistent(cfg: SPHConfig, state: SPHState) -> PersistentCarry:
+    """Pack the state and build the first skin-inflated neighbor list."""
+    cfg.validate_skin()
+    n = state.xn.shape[0]
+    carry = PersistentCarry(
+        st=state,
+        order=jnp.arange(n, dtype=jnp.int32),
+        nl=nnps.NeighborList(
+            idx=jnp.zeros((n, cfg.max_neighbors), jnp.int32),
+            mask=jnp.zeros((n, cfg.max_neighbors), bool),
+            count=jnp.zeros((n,), jnp.int32),
+        ),
+        disp_acc=jnp.zeros((n, cfg.domain.dim), jnp.float32),
+        rebuilds=jnp.zeros((), jnp.int32),
+        steps=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), bool),
+    )
+    return _rebuild(cfg, carry)
+
+
+def finalize_persistent(cfg: SPHConfig, carry: PersistentCarry) -> SPHState:
+    """Restore original particle indexing at the API boundary."""
+    inverse = cells_lib.inverse_permutation(carry.order)
+    rc = rcll.RCLLState(
+        cell_xy=carry.st.rc.cell_xy[inverse], rel=carry.st.rc.rel[inverse]
+    )
+    return _permute_state(carry.st, inverse, rc)
+
+
+def _needs_rebuild(cfg: SPHConfig, carry: PersistentCarry) -> Array:
+    """The Verlet-list criterion (or the static-cadence fallback)."""
+    if cfg.rebuild_every is not None:
+        return (carry.steps > 0) & (carry.steps % cfg.rebuild_every == 0)
+    if cfg.skin == 0.0:
+        # Degenerate skin: any movement invalidates the list.
+        return jnp.max(jnp.abs(carry.disp_acc)) > 0.0
+    max_disp = jnp.sqrt(
+        jnp.max(jnp.sum(carry.disp_acc * carry.disp_acc, axis=-1))
+    )
+    return max_disp > 0.5 * cfg.skin_norm
+
+
+def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
+    """One WCSPH step on the packed state, reusing ``carry.nl``.
+
+    Pair geometry is decoded fresh from the *current* RCLL state (exact
+    cell deltas + relative payloads), so only the neighbor LIST is stale -
+    and the skin guarantees it remains a superset of the true neighbors.
+    """
+    dom, pol = cfg.domain, cfg.policy
+    st, nl = carry.st, carry.nl
+    disp, r = rcll.pair_displacements(dom, st.rc, nl, dtype=pol.physics_dtype)
+    gw = sph.grad_w(disp, r, cfg.h, dom.dim, nl.mask)
+
+    fl = st.fluid
+    # Gather pair fields ONCE; continuity + momentum share them.
+    pf = sph.gather_pair_fields(fl.v, fl.m, nl.idx, nl.mask)
+    drho = sph.continuity_rhs_pairs(pf, gw)
+    rho = fl.rho + cfg.dt * drho
+    p = sph.eos_tait(rho, cfg.rho0, cfg.c0)
+
+    bf = jnp.asarray(cfg.body_force, jnp.float32)
+    acc = sph.momentum_rhs_pairs(
+        pf, rho, p, nl.idx, gw, disp, r, h=cfg.h, mu=cfg.mu, body_force=bf
+    )
+    v = fl.v + cfg.dt * acc
+    v = jnp.where(st.fixed[:, None], 0.0, v)
+
+    dxn = (v * cfg.dt * (2.0 / dom.h_d)).astype(jnp.float32)
+    rc = rcll.advance(dom, st.rc, dxn, dtype=pol.coords_dtype)
+    st2 = SPHState(
+        xn=st.xn,
+        rc=rc,
+        fluid=sph.FluidState(v=v, rho=rho, m=fl.m),
+        fixed=st.fixed,
+        t=st.t + cfg.dt,
+    )
+    return PersistentCarry(
+        st=st2,
+        order=carry.order,
+        nl=nl,
+        disp_acc=carry.disp_acc + dxn,
+        rebuilds=carry.rebuilds,
+        steps=carry.steps + 1,
+        overflow=carry.overflow,
+    )
+
+
+def exact_neighbor_list(
+    cfg: SPHConfig, carry: PersistentCarry
+) -> nnps.NeighborList:
+    """Exact-radius neighbor sets (packed indexing) from the reused list.
+
+    Refilters the skin-inflated ``carry.nl`` with the true support radius
+    using the same Eq. (7) arithmetic as a fresh search - the result's
+    neighbor SETS are identical to rebuilding at the current positions
+    whenever the skin invariant (max displacement < skin/2) holds.
+    """
+    pol = cfg.policy
+    d2 = rcll.pair_r2_cell(
+        cfg.domain, carry.st.rc, carry.nl,
+        dtype=pol.nnps_dtype, compute_dtype=pol.nnps_compute_dtype,
+    )
+    r_exact = nnps.rcll_radius_cell_units(cfg.domain)
+    r2 = jnp.asarray(r_exact, d2.dtype) ** 2
+    return nnps.refilter(carry.nl, d2, r2)
+
+
+def step_persistent(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
+    """Rebuild-if-needed (lax.cond) + one physics step."""
+    carry = jax.lax.cond(
+        _needs_rebuild(cfg, carry),
+        lambda c: _rebuild(cfg, c),
+        lambda c: c,
+        carry,
+    )
+    return _physics_step(cfg, carry)
+
+
+# --------------------------------------------------------------------------
+# Legacy absolute-coordinate path (algos "all" / "cell")
+# --------------------------------------------------------------------------
 def _neighbors_and_pairs(cfg: SPHConfig, state: SPHState):
     """NNPS (low-precision tier) + pair geometry (physics tier)."""
     dom, pol = cfg.domain, cfg.policy
     n = state.xn.shape[0]
     k = cfg.max_neighbors
-    if cfg.algo == "rcll":
-        nl, _ = rcll.neighbors(
-            dom, state.rc, dtype=pol.nnps_dtype, k=k, capacity=cfg.cap(n)
-        )
-        disp, r = rcll.pair_displacements(dom, state.rc, nl,
-                                          dtype=pol.physics_dtype)
-        return nl, disp, r
     if cfg.algo == "cell":
         nl = nnps.cell_list_neighbors(
             dom, state.xn, dtype=pol.nnps_dtype, k=k, capacity=cfg.cap(n)
@@ -114,72 +392,94 @@ def _neighbors_and_pairs(cfg: SPHConfig, state: SPHState):
     # Physics-tier pair geometry from hi-precision absolute positions.
     xi = state.xn[:, None, :]
     xj = state.xn[nl.idx]
-    diff = (xi - xj).astype(pol.physics_dtype)
-    span = [
-        (2.0 * s / dom.h_d) if p else 0.0
-        for s, p in zip(dom.spans, dom.periodic)
-    ]
-    if any(dom.periodic):
-        sp = jnp.asarray(span, diff.dtype)
-        wrapped = diff - jnp.round(diff / jnp.where(sp > 0, sp, 1)) * sp
-        diff = jnp.where(sp > 0, wrapped, diff)
+    diff = nnps.min_image(
+        (xi - xj).astype(pol.physics_dtype), nnps.wrap_span_norm(dom)
+    )
     disp = diff * (dom.h_d / 2.0)  # physical units
     r = jnp.sqrt(jnp.sum(disp * disp, axis=-1))
     return nl, disp, r
 
 
-def step(cfg: SPHConfig, state: SPHState) -> SPHState:
-    """One mixed-precision WCSPH step (symplectic Euler)."""
+def _step_absolute(cfg: SPHConfig, state: SPHState) -> SPHState:
+    """One mixed-precision WCSPH step on absolute positions."""
     dom = cfg.domain
-    dim = dom.dim
     nl, disp, r = _neighbors_and_pairs(cfg, state)
-    gw = sph.grad_w(disp, r, cfg.h, dim, nl.mask)
+    gw = sph.grad_w(disp, r, cfg.h, dom.dim, nl.mask)
 
     fl = state.fluid
-    # Continuity -> density (physics tier).
-    drho = sph.continuity_rhs(fl, nl.idx, nl.mask, gw)
+    pf = sph.gather_pair_fields(fl.v, fl.m, nl.idx, nl.mask)
+    drho = sph.continuity_rhs_pairs(pf, gw)
     rho = fl.rho + cfg.dt * drho
     p = sph.eos_tait(rho, cfg.rho0, cfg.c0)
 
-    # Momentum -> velocity. Wall particles stay pinned.
     bf = jnp.asarray(cfg.body_force, jnp.float32)
-    fl2 = sph.FluidState(v=fl.v, rho=rho, m=fl.m)
-    acc = sph.momentum_rhs(
-        fl2, p, nl.idx, nl.mask, gw, disp, r,
-        h=cfg.h, mu=cfg.mu, body_force=bf,
+    acc = sph.momentum_rhs_pairs(
+        pf, rho, p, nl.idx, gw, disp, r, h=cfg.h, mu=cfg.mu, body_force=bf
     )
     v = fl.v + cfg.dt * acc
     v = jnp.where(state.fixed[:, None], 0.0, v)
 
-    # Kick positions (active representation only).
-    dx_phys = v * cfg.dt
-    dxn = dx_phys * (2.0 / dom.h_d)
-    if cfg.algo == "rcll":
-        rc = rcll.advance(dom, state.rc, dxn, dtype=cfg.policy.coords_dtype)
-        xn = state.xn
-    else:
-        xn = state.xn + dxn
-        # wrap periodic axes back into the box
-        lo = jnp.asarray([-s / dom.h_d for s in dom.spans], jnp.float32) * 0 - 1.0
-        span = jnp.asarray(
-            [2.0 * s / dom.h_d if p else 0.0
-             for s, p in zip(dom.spans, dom.periodic)], jnp.float32)
-        org = jnp.asarray(dom.origin_norm, jnp.float32)
-        wrapped = org + jnp.mod(xn - org, jnp.where(span > 0, span, 1.0))
-        xn = jnp.where(span > 0, wrapped, xn)
-        rc = state.rc
+    dxn = v * cfg.dt * (2.0 / dom.h_d)
+    xn = state.xn + dxn
+    # wrap periodic axes back into the box
+    span = jnp.asarray(
+        [2.0 * s / dom.h_d if p else 0.0
+         for s, p in zip(dom.spans, dom.periodic)], jnp.float32)
+    org = jnp.asarray(dom.origin_norm, jnp.float32)
+    wrapped = org + jnp.mod(xn - org, jnp.where(span > 0, span, 1.0))
+    xn = jnp.where(span > 0, wrapped, xn)
     return SPHState(
-        xn=xn, rc=rc,
+        xn=xn, rc=state.rc,
         fluid=sph.FluidState(v=v, rho=rho, m=fl.m),
         fixed=state.fixed, t=state.t + cfg.dt,
     )
 
 
+def step(cfg: SPHConfig, state: SPHState) -> SPHState:
+    """One WCSPH step from/to original particle indexing.
+
+    The RCLL path packs, builds a fresh neighbor list, steps once, and
+    unpacks - identical physics to one ``simulate`` iteration (reuse
+    across steps requires carrying ``PersistentCarry`` via
+    ``step_persistent``; this wrapper is the stateless convenience form).
+    """
+    if cfg.algo == "rcll":
+        carry = init_persistent(cfg, state)
+        return finalize_persistent(cfg, _physics_step(cfg, carry))
+    return _step_absolute(cfg, state)
+
+
+@partial(jax.jit, static_argnums=(0, 2))
+def simulate_stats(
+    cfg: SPHConfig, state: SPHState, nsteps: int
+) -> tuple[SPHState, SimStats]:
+    """Run ``nsteps`` steps; also report rebuild/overflow diagnostics."""
+    if cfg.algo == "rcll":
+        carry = init_persistent(cfg, state)
+
+        def body(c, _):
+            return step_persistent(cfg, c), None
+
+        carry, _ = jax.lax.scan(body, carry, None, length=nsteps)
+        stats = SimStats(
+            rebuilds=carry.rebuilds, steps=carry.steps,
+            overflow=carry.overflow,
+        )
+        return finalize_persistent(cfg, carry), stats
+
+    def body(s, _):
+        return _step_absolute(cfg, s), None
+
+    out, _ = jax.lax.scan(body, state, None, length=nsteps)
+    stats = SimStats(
+        rebuilds=jnp.asarray(nsteps, jnp.int32),
+        steps=jnp.asarray(nsteps, jnp.int32),
+        overflow=jnp.zeros((), bool),
+    )
+    return out, stats
+
+
 @partial(jax.jit, static_argnums=(0, 2))
 def simulate(cfg: SPHConfig, state: SPHState, nsteps: int) -> SPHState:
     """Run ``nsteps`` steps under lax.scan (single fused XLA program)."""
-    def body(s, _):
-        return step(cfg, s), None
-
-    out, _ = jax.lax.scan(body, state, None, length=nsteps)
-    return out
+    return simulate_stats(cfg, state, nsteps)[0]

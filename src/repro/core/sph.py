@@ -124,13 +124,71 @@ def eos_tait(rho: Array, rho0: float, c0: float) -> Array:
     return c0 * c0 * (rho - rho0)
 
 
+class PairFields(NamedTuple):
+    """Per-pair quantities gathered ONCE per step from the neighbor list.
+
+    The persistent-pipeline step computes these a single time and feeds
+    every RHS term from them - the seed path re-gathered v/m per term,
+    which doubles the dominant (N, K) HBM traffic for no reason.
+
+    dv:  (N, K, d) v_i - v_j.
+    mj:  (N, K) neighbor mass, zeroed where ~mask.
+    """
+
+    dv: Array
+    mj: Array
+
+
+def gather_pair_fields(
+    v: Array, m: Array, nl_idx: Array, nl_mask: Array
+) -> PairFields:
+    """Gather the velocity/mass pair terms shared by continuity+momentum."""
+    dv = v[:, None, :] - v[nl_idx]
+    mj = jnp.where(nl_mask, m[nl_idx], 0.0)
+    return PairFields(dv=dv, mj=mj)
+
+
+def continuity_rhs_pairs(pf: PairFields, gw: Array) -> Array:
+    """Dρ_i/Dt = Σ_j m_j (v_i - v_j)·∂W_ij/∂x_i (Eq. 4, first row)."""
+    return jnp.sum(pf.mj * jnp.sum(pf.dv * gw, axis=-1), axis=1)
+
+
+def momentum_rhs_pairs(
+    pf: PairFields,
+    rho: Array,
+    p: Array,
+    nl_idx: Array,
+    gw: Array,
+    disp: Array,
+    r: Array,
+    *,
+    h: float,
+    mu: float,
+    body_force: Array,
+) -> Array:
+    """Dv_i/Dt from pre-gathered pair fields (pressure + Morris viscosity).
+
+    rho/p are gathered here exactly once (they change between continuity
+    and momentum within a step, so they cannot ride in ``pf``).
+    """
+    p_over_rho2 = p / (rho * rho)
+    pij = p_over_rho2[:, None] + p_over_rho2[nl_idx]
+    acc_p = -jnp.sum((pf.mj * pij)[..., None] * gw, axis=1)
+
+    x_dot_gw = jnp.sum(disp * gw, axis=-1)  # (N, K)
+    rho_ij = rho[:, None] * rho[nl_idx]
+    coef = pf.mj * (2.0 * mu) * x_dot_gw / (rho_ij * (r * r + 0.01 * h * h))
+    acc_v = jnp.sum(coef[..., None] * pf.dv, axis=1)
+    return acc_p + acc_v + body_force
+
+
 def continuity_rhs(
     st: FluidState, nl_idx: Array, nl_mask: Array, gw: Array
 ) -> Array:
-    """Dρ_i/Dt = Σ_j m_j (v_i - v_j)·∂W_ij/∂x_i (Eq. 4, first row)."""
-    dv = st.v[:, None, :] - st.v[nl_idx]  # (N, K, d)
-    mj = jnp.where(nl_mask, st.m[nl_idx], 0.0)
-    return jnp.sum(mj * jnp.sum(dv * gw, axis=-1), axis=1)
+    """Eq. 4 continuity (compat wrapper over the pair-field core)."""
+    return continuity_rhs_pairs(
+        gather_pair_fields(st.v, st.m, nl_idx, nl_mask), gw
+    )
 
 
 def momentum_rhs(
@@ -151,18 +209,12 @@ def momentum_rhs(
     Pressure term (Eq. 4, symmetric form): -Σ m_j (p_i/ρ_i² + p_j/ρ_j²) ∇W.
     Viscous term (Morris et al. 1997, the standard for Poiseuille):
         Σ_j m_j (μ_i + μ_j) (x_ij·∇W) / (ρ_i ρ_j (r² + 0.01 h²)) v_ij
+    (Compat wrapper over the pair-field core.)
     """
-    pi = (p / (st.rho * st.rho))[:, None]
-    pj = (p / (st.rho * st.rho))[nl_idx]
-    mj = jnp.where(nl_mask, st.m[nl_idx], 0.0)
-    acc_p = -jnp.sum((mj * (pi + pj))[..., None] * gw, axis=1)
-
-    x_dot_gw = jnp.sum(disp * gw, axis=-1)  # (N, K)
-    rho_ij = st.rho[:, None] * st.rho[nl_idx]
-    coef = mj * (2.0 * mu) * x_dot_gw / (rho_ij * (r * r + 0.01 * h * h))
-    dv = st.v[:, None, :] - st.v[nl_idx]
-    acc_v = jnp.sum(coef[..., None] * dv, axis=1)
-    return acc_p + acc_v + body_force
+    pf = gather_pair_fields(st.v, st.m, nl_idx, nl_mask)
+    return momentum_rhs_pairs(
+        pf, st.rho, p, nl_idx, gw, disp, r, h=h, mu=mu, body_force=body_force
+    )
 
 
 def energy_rhs(

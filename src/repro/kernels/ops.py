@@ -52,15 +52,6 @@ def cell_neighbor_ids(domain: Domain) -> np.ndarray:
     return np.where(valid, flat, C).astype(np.int32)
 
 
-def particle_slots(binning: cells_lib.CellBinning) -> Array:
-    """(N,) int32 slot of each particle within its cell's table row."""
-    cap = binning.table.shape[1]
-    n = binning.cell_id.shape[0]
-    row = binning.table[binning.cell_id]  # (N, cap)
-    hit = row == jnp.arange(n, dtype=jnp.int32)[:, None]
-    return jnp.argmax(hit, axis=1).astype(jnp.int32)
-
-
 def pack_cells(
     binning: cells_lib.CellBinning,
     rel: Array,  # (N, d) storage dtype
@@ -68,22 +59,23 @@ def pack_cells(
 ) -> tuple[Array, Array, list[Array]]:
     """Pack per-particle data into cell-major tables with a sentinel row.
 
+    Thin kernel-facing wrapper over ``cells.to_cell_major``: transposes
+    rel to the (C, d, cap) sublane/lane layout and appends the sentinel
+    empty-cell row the kernels' neighborhood indexing relies on.
+
     Returns (rel_table (C+1, d, cap), occ (C+1, cap), field_tables).
     """
     C, cap = binning.table.shape
     d = rel.shape[1]
-    tbl = binning.table  # (C, cap) particle ids, -1 empty
-    occ = (tbl >= 0).astype(jnp.float32)
-    safe = jnp.maximum(tbl, 0)
-    rel_t = rel[safe]  # (C, cap, d)
-    rel_t = jnp.where(occ[..., None] > 0, rel_t, 0).transpose(0, 2, 1)
+    occ = (binning.table >= 0).astype(jnp.float32)
+    rel_t = cells_lib.to_cell_major(binning, rel).transpose(0, 2, 1)
     rel_t = jnp.concatenate(
         [rel_t, jnp.zeros((1, d, cap), rel_t.dtype)], axis=0
     )
     occ = jnp.concatenate([occ, jnp.zeros((1, cap), occ.dtype)], axis=0)
     packed_fields = []
     for f in fields:
-        ft = jnp.where(occ[:-1] > 0, f[safe], 0).astype(jnp.float32)
+        ft = cells_lib.to_cell_major(binning, f.astype(jnp.float32))
         ft = jnp.concatenate([ft, jnp.zeros((1, cap), ft.dtype)], axis=0)
         packed_fields.append(ft)
     return rel_t, occ, packed_fields
@@ -92,9 +84,12 @@ def pack_cells(
 def unpack_per_particle(
     table: Array, binning: cells_lib.CellBinning
 ) -> Array:
-    """Gather per-particle values out of a (C+1, cap, ...) table -> (N, ...)."""
-    slots = particle_slots(binning)
-    return table[binning.cell_id, slots]
+    """Gather per-particle values out of a (C+1, cap, ...) table -> (N, ...).
+
+    Inverse of ``pack_cells`` outputs: drops the sentinel row and gathers
+    each particle's slot via ``cells.from_cell_major``.
+    """
+    return cells_lib.from_cell_major(binning, table[: binning.table.shape[0]])
 
 
 # --------------------------------------------------------------------------
@@ -131,6 +126,70 @@ def rcll_adjacency_cells(
     )
     counts = unpack_per_particle(cnt, binning)
     return adj, counts
+
+
+# --------------------------------------------------------------------------
+# RCLL packed neighbor lists (the production neighbor producer)
+# --------------------------------------------------------------------------
+def rcll_neighbor_lists(
+    domain: Domain,
+    binning: cells_lib.CellBinning,
+    rel: Array,  # (N, d) storage dtype
+    *,
+    k: int,
+    radius_cell: float | None = None,
+    nnps_dtype=jnp.float16,
+    compute_dtype=None,
+    interpret: bool | None = None,
+) -> nnps_lib.NeighborList:
+    """Per-particle neighbor lists via the cell-blocked Pallas kernel.
+
+    Returns a NeighborList whose ids live in the same indexing as the
+    entries of ``binning.table`` - with the packed (cell-sorted) binning
+    of the persistent pipeline these are packed indices, ready to gather
+    from packed per-particle arrays with near-contiguous reads.
+
+    radius_cell: search radius override in reference-cell units (the
+    Verlet-skin inflated radius); defaults to the exact support radius.
+
+    compute_dtype defaults to fp32 (TPU-native: fp16 storage upconverted
+    by the VPU for free). fp32 arithmetic on fp16-quantized inputs is
+    exact through Eq. (7)'s subtract/halve/shift, which makes the kernel
+    agree with the jnp fallback bit-for-bit; fp16 arithmetic (the paper's
+    A100 mode) can flip exactly-on-boundary pairs between backends.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    cdt = compute_dtype or jnp.float32
+    rel_t, occ, _ = pack_cells(binning, rel.astype(nnps_dtype))
+    ids_t = jnp.concatenate(
+        [binning.table,
+         jnp.full((1, binning.table.shape[1]), -1, jnp.int32)], axis=0
+    )
+    nb = jnp.asarray(cell_neighbor_ids(domain))
+    nb = jnp.concatenate(  # sentinel row points at itself
+        [nb, jnp.full((1, nb.shape[1]), nb.shape[0], nb.dtype)], axis=0
+    )
+    offs = tuple(map(tuple, cells_lib.neighbor_cell_offsets(domain.dim)))
+    if radius_cell is None:
+        radius_cell = nnps_lib.rcll_radius_cell_units(domain)
+    ids_out, cnt = nnps_pairwise.rcll_neighbor_list_tables(
+        rel_t,
+        occ,
+        ids_t,
+        nb,
+        offs=offs,
+        weights=tuple(domain.cell_weights),
+        r_cell=float(radius_cell),
+        k_slots=k,
+        compute_dtype=cdt,
+        interpret=interpret,
+    )
+    idx = unpack_per_particle(ids_out, binning)  # (N, K)
+    mask = idx >= 0
+    count = unpack_per_particle(cnt, binning).astype(jnp.int32)
+    return nnps_lib.NeighborList(
+        idx=jnp.maximum(idx, 0), mask=mask, count=count
+    )
 
 
 # --------------------------------------------------------------------------

@@ -9,21 +9,29 @@ stays on-pod ICI).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types on the mesh
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n_axes: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+
+except ImportError:  # older jax: meshes are implicitly Auto-typed
+    AxisType = None
+
+    def _axis_kwargs(n_axes: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (elastic restarts, tests)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes), **_axis_kwargs(len(axes)))
 
 
 def host_device_counts():

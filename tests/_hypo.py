@@ -1,0 +1,97 @@
+"""Optional-hypothesis shim for the property tests.
+
+The seed test modules import ``hypothesis`` unconditionally, which breaks
+collection on images that don't ship it. This module re-exports the real
+``given``/``settings``/``strategies`` when hypothesis is installed and
+otherwise provides a tiny *deterministic* fallback: each strategy draws
+from a seeded numpy Generator, so every CI run exercises the same example
+set (no shrinking, no database - just fixed-seed property sampling).
+"""
+from __future__ import annotations
+
+import functools
+
+try:  # pragma: no cover - exercised only when hypothesis is present
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A deterministic sampler standing in for a hypothesis strategy."""
+
+        def __init__(self, sample, boundary=()):
+            self._sample = sample  # (rng) -> value
+            self._boundary = tuple(boundary)  # always-tried edge values
+
+        def draw(self, rng, i):
+            if i < len(self._boundary):
+                return self._boundary[i]
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(
+                lambda rng: int(rng.integers(lo, hi + 1)), boundary=(lo, hi)
+            )
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(
+                lambda rng: float(rng.uniform(lo, hi)), boundary=(lo, hi)
+            )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(
+                lambda rng: bool(rng.integers(0, 2)), boundary=(False, True)
+            )
+
+        @staticmethod
+        def sampled_from(values):
+            vals = list(values)
+            return _Strategy(
+                lambda rng: vals[int(rng.integers(0, len(vals)))],
+                boundary=vals[:2],
+            )
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # Unwrap if @settings was applied below @given.
+            n_examples = getattr(fn, "_max_examples", 10)
+
+            @functools.wraps(fn)
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", n_examples)
+                # Seed from the test name: stable across runs/machines
+                # (built-in hash() is salted per process; crc32 is not).
+                seed = zlib.crc32(fn.__qualname__.encode()) % (2**31)
+                rng = np.random.default_rng(seed)
+                for i in range(min(n, 10)):
+                    kwargs = {
+                        k: s.draw(rng, i) for k, s in strategies.items()
+                    }
+                    fn(**kwargs)
+
+            # Hide the strategy parameters from pytest's fixture resolver.
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature([])
+            return wrapper
+
+        return deco

@@ -1,7 +1,7 @@
 """Generic anchored mixed-precision representation."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import anchored
 

@@ -1,7 +1,7 @@
 """NNPS equivalence + precision properties (paper Tables 1-2)."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import domain as D, nnps, rcll
 

@@ -1,0 +1,229 @@
+"""Persistent cell-packed neighbor pipeline: packing round trips,
+Verlet-skin reuse exactness, and Pallas-vs-XLA backend agreement."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import cases, cells, domain as D, nnps, rcll, solver
+
+
+def _cloud(n, dim=2, seed=0, periodic=False):
+    rng = np.random.default_rng(seed)
+    ds = (1.0 / n) ** (1.0 / dim)
+    dom = D.Domain(
+        lo=(0.0,) * dim, hi=(1.0,) * dim, h=1.2 * ds,
+        periodic=(periodic,) * dim,
+    )
+    x = rng.uniform(0, 1, (n, dim))
+    xn = dom.normalize(jnp.asarray(x))
+    return dom, rcll.init_state(dom, xn, dtype=jnp.float16)
+
+
+# --------------------------------------------------------------------------
+# Packed <-> unpacked round trips
+# --------------------------------------------------------------------------
+def test_pack_roundtrip_identity(rng):
+    dom, st = _cloud(900, seed=3)
+    cap = cells.default_capacity(dom, 900)
+    ps = rcll.pack_state(dom, st, cap)
+    pk = ps.packing
+    # order/inverse are mutually inverse permutations
+    np.testing.assert_array_equal(
+        np.asarray(pk.order)[np.asarray(pk.inverse)], np.arange(900)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(cells.inverse_permutation(pk.order)), np.asarray(pk.inverse)
+    )
+    # every per-particle array round-trips exactly
+    np.testing.assert_array_equal(
+        np.asarray(pk.unpack(ps.rc.rel)), np.asarray(st.rel)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(pk.unpack(ps.rc.cell_xy)), np.asarray(st.cell_xy)
+    )
+    extra = jnp.asarray(rng.normal(size=(900, 2)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(pk.unpack(pk.pack(extra))), np.asarray(extra)
+    )
+    # packed arrays are sorted by flat cell id
+    cid = np.asarray(dom.flat_cell_id(ps.rc.cell_xy))
+    assert np.all(np.diff(cid) >= 0)
+    # the packed binning's table rows are runs of consecutive packed ids
+    tbl = np.asarray(pk.binning.table)
+    for row in tbl:
+        occ = row[row >= 0]
+        if occ.size > 1:
+            assert np.all(np.diff(occ) == 1)
+    assert int(pk.binning.overflow) == 0
+
+
+def test_cell_major_tables_roundtrip(rng):
+    dom, st = _cloud(400, seed=5)
+    ps = rcll.pack_state(dom, st, cells.default_capacity(dom, 400))
+    b = ps.packing.binning
+    t = cells.to_cell_major(b, ps.rc.rel)
+    assert t.shape == b.table.shape + (2,)
+    back = cells.from_cell_major(b, t)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(ps.rc.rel))
+
+
+def test_simulate_returns_original_indexing():
+    """finalize_persistent must undo the spatial sort at the API boundary."""
+    case = cases.PoiseuilleCase(ds=0.1, Lx=0.8, algo="rcll")
+    cfg, st = case.build()
+    out = solver.simulate(cfg, st, 30)
+    # fixed mask and (constant) masses identify particles: they must come
+    # back exactly where they started even though the carry is cell-sorted
+    np.testing.assert_array_equal(np.asarray(out.fixed), np.asarray(st.fixed))
+    np.testing.assert_array_equal(
+        np.asarray(out.fluid.m), np.asarray(st.fluid.m)
+    )
+    # wall particles never move: their decoded positions are unchanged
+    p0 = np.asarray(solver.positions(cfg, st))
+    p1 = np.asarray(solver.positions(cfg, out))
+    w = np.asarray(st.fixed)
+    assert np.abs(p1[w] - p0[w]).max() < 1e-3 * case.ds
+
+
+# --------------------------------------------------------------------------
+# Verlet-skin reuse: exact neighbor sets at every step
+# --------------------------------------------------------------------------
+def _to_original(nl: nnps.NeighborList, packed_to_orig) -> nnps.NeighborList:
+    """Re-index a packed neighbor list into original particle indexing."""
+    p2o = np.asarray(packed_to_orig)
+    idx = p2o[np.asarray(nl.idx)]
+    inv = np.argsort(p2o)
+    return nnps.NeighborList(
+        idx=jnp.asarray(idx)[inv],
+        mask=nl.mask[jnp.asarray(inv)],
+        count=nl.count[jnp.asarray(inv)],
+    )
+
+
+def test_skin_reuse_neighbor_sets_match_per_step_rebuild():
+    """Acceptance criterion: with skin reuse, the exact-radius neighbor
+    sets (refiltered from the inflated list) equal a fresh per-step
+    rebuild's sets at EVERY step, while rebuilds << steps."""
+    case = cases.PoiseuilleCase(
+        ds=0.05, Lx=0.8, algo="rcll", cell_factor=2.0, max_neighbors=96
+    )
+    cfg, st = case.build()
+    cfg = dataclasses.replace(cfg, skin=0.5 * min(cfg.domain.cell_sizes))
+    n = st.xn.shape[0]
+    pol = cfg.policy
+
+    step_fn = jax.jit(solver.step_persistent, static_argnums=0)
+    carry = solver.init_persistent(cfg, st)
+    nsteps = 60
+    for _ in range(nsteps):
+        carry = step_fn(cfg, carry)
+        # exact sets recovered from the reused (possibly stale) list
+        exact = solver.exact_neighbor_list(cfg, carry)
+        # fresh per-step rebuild at the current positions (same search
+        # arithmetic as the solver's production rebuild)
+        ps = rcll.pack_state(cfg.domain, carry.st.rc, cfg.cap(n))
+        fresh = rcll.packed_neighbors(
+            cfg.domain, ps, dtype=pol.nnps_dtype,
+            compute_dtype=pol.nnps_compute_dtype, k=cfg.max_neighbors,
+        )
+        # align both to original particle indexing
+        exact_o = _to_original(exact, carry.order)
+        fresh_o = _to_original(fresh, np.asarray(carry.order)[
+            np.asarray(ps.packing.order)])
+        eq = nnps.neighbor_sets_equal(exact_o, fresh_o)
+        assert bool(jnp.all(eq)), (
+            f"neighbor sets diverged at step {int(carry.steps)}: "
+            f"{int(jnp.sum(~eq))} particles differ"
+        )
+    assert not bool(carry.overflow)
+    # measurably fewer rebuilds than steps
+    assert int(carry.rebuilds) < nsteps // 2, int(carry.rebuilds)
+
+
+def test_skin_zero_rebuilds_every_step():
+    case = cases.PoiseuilleCase(ds=0.1, Lx=0.8, algo="rcll")
+    cfg, st = case.build()
+    _, stats = solver.simulate_stats(cfg, st, 25)
+    assert int(stats.rebuilds) == 25  # init build + one per moving step
+    assert int(stats.steps) == 25
+
+
+def test_rebuild_every_static_cadence():
+    case = cases.PoiseuilleCase(
+        ds=0.05, Lx=0.8, algo="rcll", cell_factor=2.0, max_neighbors=96,
+        rebuild_every=5,
+    )
+    cfg, st = case.build()
+    _, stats = solver.simulate_stats(cfg, st, 25)
+    # init + steps 5, 10, 15, 20 (step counter is pre-increment at check)
+    assert int(stats.rebuilds) == 1 + 4
+    assert not bool(stats.overflow)
+
+
+def test_skin_physics_matches_per_step_rebuild():
+    """Same domain/config: reused-list physics tracks per-step rebuild to
+    fp round-off (extra skin pairs contribute exactly zero force)."""
+    kw = dict(ds=0.05, Lx=0.8, algo="rcll", cell_factor=2.0,
+              max_neighbors=96)
+    cfg0, st0 = cases.PoiseuilleCase(**kw).build()
+    cfg1, st1 = cases.PoiseuilleCase(**kw).build()
+    cfg1 = dataclasses.replace(cfg1, skin=0.5 * min(cfg1.domain.cell_sizes))
+    out0 = solver.simulate(cfg0, st0, 150)
+    out1 = solver.simulate(cfg1, st1, 150)
+    p0 = np.asarray(solver.positions(cfg0, out0))
+    p1 = np.asarray(solver.positions(cfg1, out1))
+    assert np.abs(p0 - p1).max() < 1e-3 * cfg0.ds
+    v0, v1 = np.asarray(out0.fluid.v), np.asarray(out1.fluid.v)
+    assert np.abs(v0 - v1).max() < 1e-6 + 1e-3 * np.abs(v0).max()
+
+
+def test_skin_too_large_raises():
+    import pytest
+
+    case = cases.PoiseuilleCase(ds=0.1, Lx=0.8, algo="rcll")
+    cfg, st = case.build()
+    cfg = dataclasses.replace(cfg, skin=cfg.domain.radius)  # r+skin = 2r > hc
+    with pytest.raises(ValueError, match="cell coverage"):
+        solver.init_persistent(cfg, st)
+
+
+# --------------------------------------------------------------------------
+# Pallas kernel vs pure-jnp backend agreement (interpret mode)
+# --------------------------------------------------------------------------
+def test_pallas_xla_neighbor_lists_agree():
+    from repro.kernels import ops
+
+    for n, dim, periodic in [(700, 2, False), (600, 2, True), (400, 3, False)]:
+        dom, st = _cloud(n, dim=dim, seed=7, periodic=periodic)
+        # generous capacity: comparisons are only defined without overflow
+        # (a dropped particle has no table slot for the kernel to read)
+        cap = cells.default_capacity(dom, n, safety=8.0)
+        ps = rcll.pack_state(dom, st, cap)
+        k = 96
+        nl_x = rcll.packed_neighbors(
+            dom, ps, dtype=jnp.float16, compute_dtype=jnp.float32, k=k
+        )
+        nl_p = ops.rcll_neighbor_lists(
+            dom, ps.packing.binning, ps.rc.rel, k=k,
+            nnps_dtype=jnp.float16, interpret=True,
+        )
+        assert bool(jnp.all(nnps.neighbor_sets_equal(nl_x, nl_p)))
+        np.testing.assert_array_equal(
+            np.asarray(nl_x.count), np.asarray(nl_p.count)
+        )
+
+
+def test_pallas_backend_solver_matches_xla_backend():
+    kw = dict(ds=0.1, Lx=0.8, algo="rcll")
+    cfgx, stx = cases.PoiseuilleCase(**kw, backend="xla").build()
+    cfgp, stp = cases.PoiseuilleCase(**kw, backend="pallas").build()
+    outx = solver.simulate(cfgx, stx, 15)
+    outp = solver.simulate(cfgp, stp, 15)
+    px = np.asarray(solver.positions(cfgx, outx))
+    pp = np.asarray(solver.positions(cfgp, outp))
+    assert np.abs(px - pp).max() < 1e-6
+    np.testing.assert_allclose(
+        np.asarray(outx.fluid.v), np.asarray(outp.fluid.v), atol=1e-7
+    )
