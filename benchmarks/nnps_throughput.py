@@ -1,107 +1,218 @@
-"""Persistent-pipeline NNPS throughput: Verlet-skin reuse vs per-step
-rebuild (the paper's third speedup round, made stateful).
+"""End-to-end step throughput: fused force pass vs the gather path, plus
+the persistent-pipeline NNPS diagnostics (Verlet-skin reuse, rebuild
+cost) and an HBM bytes/step model.
 
-Runs the Poiseuille channel with the production RCLL solver at
-N in {8k, 64k} under two neighbor policies:
+For each particle count the Poiseuille channel runs under the production
+persistent RCLL solver with a Verlet skin (cells sized to cover r+skin),
+once per force backend:
 
-  * skin = 0       : the seed behavior - re-bin + re-search every step
-                     (cell_factor 1, tight candidate matrix);
-  * skin = 0.5 h_c : Verlet-skin reuse - search radius inflated to
-                     r + skin (cells sized to cover it: cell_factor 2),
-                     list rebuilt only when max displacement > skin/2.
+  * ``reference`` - PR 1's gather path: per-pair arrays (disp, grad W,
+    pair fields) materialized in HBM every step;
+  * ``xla``       - the fused cell-blocked pass (core/fused.py): one
+    record gather + chunked reduction, no (N, K) pair intermediate.
 
-Emits ``BENCH_nnps.json`` with steps/sec and the rebuild frequency so the
-perf trajectory is tracked from this PR onward. CPU wall times are a
-proxy (see _util); the *ratio* and the rebuild counts are the signal.
+Reported per case:
+  * steps/sec measured on the donating scan entry point
+    (``solver.run_persistent`` — chained segments, buffers updated in
+    place, init/compile excluded);
+  * physics-only ms/step (a scan of pure ``_physics_step``, no rebuild
+    cond) vs the NNPS rebuild cost in ms and the observed rebuild
+    frequency — the paper's Table 6 style split;
+  * the analytic HBM bytes/step model for both paths
+    (``fused.estimate_hbm_bytes_per_step``): CPU wall times are a proxy
+    (see _util), the byte ratio is what transfers to TPU/GPU.
+
+Results are APPENDED to ``BENCH_nnps.json`` (the file holds a list of
+run records, oldest first) so the perf trajectory persists across PRs.
+
+``--n 1000000`` reaches the paper's 1M-particle case (expect minutes per
+backend on CPU); ``--quick`` runs the 8k case only.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import json
-import sys
+import os
+import time
+from functools import partial
 
 import jax
 import numpy as np
 
 from benchmarks._util import emit, time_fn
-from repro.core import cases, solver
+from repro.core import cases, fused, solver
+
+BENCH_PATH = "BENCH_nnps.json"
 
 
-def run_case(n_target: int, skin_frac_hc: float, nsteps: int) -> dict:
+@partial(jax.jit, static_argnums=(0, 2))
+def _physics_only(cfg, carry, nsteps):
+    """Scan of the raw physics step (no rebuild cond) for the time split."""
+
+    def body(c, _):
+        return solver._physics_step(cfg, c), None
+
+    return jax.lax.scan(body, carry, None, length=nsteps)[0]
+
+
+def _build(n_target: int, backend: str, skin_frac_hc: float):
     ds = float((1.0 / n_target) ** 0.5)
-    # skin is skin_frac_hc x the BASELINE cell size h_c = r (cell_factor 1);
-    # the skinned run sizes its cells to cover r + skin exactly
-    # (cell_factor = 1 + skin/r), keeping the candidate set as tight as
-    # the coverage guarantee allows.
     cell_factor = 1.0 + skin_frac_hc
     max_neighbors = 64 if skin_frac_hc > 0 else 40
     case = cases.PoiseuilleCase(
-        ds=ds,
-        L=1.0,
-        Lx=1.0,
-        algo="rcll",
-        cell_factor=cell_factor,
-        max_neighbors=max_neighbors,
+        ds=ds, L=1.0, Lx=1.0, algo="rcll",
+        cell_factor=cell_factor, max_neighbors=max_neighbors,
+        backend=backend,
     )
     cfg, st = case.build()
     if skin_frac_hc > 0:
-        skin = skin_frac_hc * cfg.domain.radius
-        cfg = dataclasses.replace(cfg, skin=skin)
+        cfg = dataclasses.replace(cfg, skin=skin_frac_hc * cfg.domain.radius)
+    return cfg, st, max_neighbors
+
+
+def run_case(
+    n_target: int, backend: str, nsteps: int, skin_frac_hc: float = 0.5
+) -> dict:
+    cfg, st, max_neighbors = _build(n_target, backend, skin_frac_hc)
     n = int(st.xn.shape[0])
 
-    t = time_fn(
-        lambda: solver.simulate_stats(cfg, st, nsteps), warmup=1, repeats=2
-    )
-    _, stats = jax.block_until_ready(solver.simulate_stats(cfg, st, nsteps))
-    rebuilds = int(stats.rebuilds)
+    # warm the flow a little so velocities/densities are nontrivial
+    st = jax.block_until_ready(solver.simulate(cfg, st, 10))
+
+    # physics-only vs NNPS(rebuild) split (non-donating jits)
+    carry = solver.init_persistent(cfg, st)
+    np_steps = min(8, nsteps)
+    t_phys = time_fn(
+        lambda: _physics_only(cfg, carry, np_steps), warmup=1, repeats=2
+    ) / np_steps
+    reb = jax.jit(lambda c: solver._rebuild(cfg, c))
+    t_rebuild = time_fn(lambda: reb(carry), warmup=1, repeats=2)
+
+    # steps/sec on the donating scan entry point (init/compile excluded).
+    # run_persistent donates the carry — and the carry aliases ``st``'s
+    # buffers — so this phase runs LAST and rebinds carry each call.
+    carry = jax.block_until_ready(solver.run_persistent(cfg, carry, nsteps))
+    rebuilds_before = int(carry.rebuilds)
+    times = []
+    timed_segments = 2
+    for _ in range(timed_segments):
+        t0 = time.perf_counter()
+        carry = jax.block_until_ready(
+            solver.run_persistent(cfg, carry, nsteps)
+        )
+        times.append(time.perf_counter() - t0)
+    t_run = min(times)
+    # diagnostics from the SAME timed segments, not a separate run
+    rebuilds = int(carry.rebuilds) - rebuilds_before
+    rebuild_frequency = rebuilds / (timed_segments * nsteps)
+    overflow = bool(carry.overflow)
+
+    k, d = max_neighbors, cfg.domain.dim
     row = {
         "n_target": n_target,
         "n_particles": n,
+        "backend": backend,
         "skin_frac_hc": skin_frac_hc,
-        "skin": float(getattr(cfg, "skin", 0.0)),
-        "cell_factor": cell_factor,
-        "max_neighbors": max_neighbors,
+        "skin": float(cfg.skin),
+        "max_neighbors": k,
         "nsteps": nsteps,
-        "time_s": round(t, 4),
-        "steps_per_sec": round(nsteps / t, 3),
+        "steps_per_sec": round(nsteps / t_run, 3),
+        "physics_ms_per_step": round(t_phys * 1e3, 3),
+        "rebuild_ms": round(t_rebuild * 1e3, 3),
         "rebuilds": rebuilds,
-        "rebuild_frequency": round(rebuilds / nsteps, 4),
-        "overflow": bool(stats.overflow),
+        "rebuild_frequency": round(rebuild_frequency, 4),
+        "overflow": overflow,
+        "hbm_model_bytes_per_step_gather": fused.estimate_hbm_bytes_per_step(
+            n, k, d, fused=False
+        ),
+        "hbm_model_bytes_per_step_fused": fused.estimate_hbm_bytes_per_step(
+            n, k, d, fused=True
+        ),
     }
-    emit("nnps_throughput", row)
+    emit("step_throughput", row)
     return row
 
 
-def main(full: bool = True):
-    sizes = [(8000, 40), (64000, 16)] if full else [(8000, 40)]
+def _append_record(record: dict) -> None:
+    """BENCH_nnps.json holds a list of run records, oldest first."""
+    history = []
+    if os.path.exists(BENCH_PATH):
+        with open(BENCH_PATH) as f:
+            prev = json.load(f)
+        history = prev if isinstance(prev, list) else [prev]
+    history.append(record)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(history, f, indent=2)
+
+
+def default_steps(n: int) -> int:
+    return max(8, min(48, int(3_000_000 / max(n, 1))))
+
+
+def main(
+    full: bool = True,
+    sizes: list[tuple[int, int]] | None = None,
+    skin_compare: bool = True,
+):
+    """``full`` selects the 8k+64k grid (benchmarks.run interface);
+    ``sizes`` overrides it with explicit (n_target, nsteps) pairs."""
+    if sizes is None:
+        targets = [8000, 64000] if full else [8000]
+        sizes = [(t, default_steps(t)) for t in targets]
     rows = []
     for n_target, nsteps in sizes:
-        for skin_frac in (0.0, 0.5):
-            rows.append(run_case(n_target, skin_frac, nsteps))
+        for backend in ("reference", "xla"):
+            rows.append(run_case(n_target, backend, nsteps))
+    if skin_compare:
+        # PR 1's skin-vs-none tracking metric (fused backend, 8k)
+        n0 = sizes[0][0]
+        rows.append(run_case(n0, "xla", sizes[0][1], skin_frac_hc=0.0))
 
     speedups = {}
     for n_target, _ in sizes:
-        base = next(
-            r for r in rows
-            if r["n_target"] == n_target and r["skin_frac_hc"] == 0.0
-        )
-        skinned = next(
-            r for r in rows
-            if r["n_target"] == n_target and r["skin_frac_hc"] > 0.0
-        )
-        speedups[str(n_target)] = round(
-            skinned["steps_per_sec"] / base["steps_per_sec"], 3
-        )
-    out = {
+        by = {
+            r["backend"]: r for r in rows
+            if r["n_target"] == n_target and r["skin_frac_hc"] > 0
+        }
+        if {"reference", "xla"} <= by.keys():
+            speedups[str(n_target)] = round(
+                by["xla"]["steps_per_sec"] / by["reference"]["steps_per_sec"],
+                3,
+            )
+    record = {
+        "label": "fused_force",
         "backend": jax.default_backend(),
         "cases": rows,
-        "steps_per_sec_speedup_skin_vs_none": speedups,
+        "steps_per_sec_speedup_fused_vs_gather": speedups,
+        "hbm_model_ratio_gather_over_fused": round(
+            rows[0]["hbm_model_bytes_per_step_gather"]
+            / rows[0]["hbm_model_bytes_per_step_fused"], 2,
+        ),
     }
-    with open("BENCH_nnps.json", "w") as f:
-        json.dump(out, f, indent=2)
-    emit("nnps_throughput_summary", speedups)
-    return out
+    _append_record(record)
+    emit("step_throughput_summary", speedups)
+    return record
 
 
 if __name__ == "__main__":
-    main(full="--quick" not in sys.argv)
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--n", type=int, action="append", default=None,
+        help="particle-count target (repeatable); e.g. --n 1000000 for "
+        "the paper's 1M case. Default: 8000 and 64000.",
+    )
+    ap.add_argument("--quick", action="store_true", help="8k only")
+    ap.add_argument(
+        "--nsteps", type=int, default=None,
+        help="timed steps per segment (default: scaled by size)",
+    )
+    args = ap.parse_args()
+    if args.n:
+        targets = args.n
+    elif args.quick:
+        targets = [8000]
+    else:
+        targets = [8000, 64000]
+    sizes = [(t, args.nsteps or default_steps(t)) for t in targets]
+    main(sizes=sizes, skin_compare=not args.n)

@@ -1,0 +1,63 @@
+"""Cubic B-spline SPH kernel (paper Eq. 3): the ONE source of truth.
+
+Every consumer of the kernel function or its derivative — the reference
+pair physics (``core/sph.py``), the fused XLA force pass
+(``core/fused.py``), and the Pallas tile kernels
+(``kernels/sph_gradient.py`` / ``kernels/rcll_force.py``) — evaluates it
+through these functions, so a constant or branch-point tweak cannot make
+the fused kernels drift from the reference physics.
+
+All functions are plain elementwise jnp: they trace identically inside a
+``pallas_call`` body (on a (cap, cap) tile) and in bulk XLA (on an
+(N, K) pair array). ``h``/``dim`` are static Python numbers, so the
+normalization constants fold at trace time.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+#: The kernel support radius in units of h: W(r) = 0 for r >= SUPPORT * h.
+SUPPORT = 2.0
+
+
+def alpha_d(dim: int, h: float) -> float:
+    """Normalization factor of the cubic B-spline (paper Eq. 3)."""
+    if dim == 1:
+        return 1.0 / h
+    if dim == 2:
+        return 15.0 / (7.0 * math.pi * h * h)
+    if dim == 3:
+        return 3.0 / (2.0 * math.pi * h**3)
+    raise ValueError(dim)
+
+
+def w(r: Array, h: float, dim: int) -> Array:
+    """Kernel value W(R, h), R = r/h (paper Eq. 3)."""
+    R = r / h
+    a = alpha_d(dim, h)
+    w1 = 2.0 / 3.0 - R * R + 0.5 * R**3
+    w2 = (2.0 - R) ** 3 / 6.0
+    return a * jnp.where(R < 1.0, w1, jnp.where(R < 2.0, w2, 0.0))
+
+
+def dw_dr(r: Array, h: float, dim: int) -> Array:
+    """dW/dr. Vanishes identically for r >= 2h (compact support) and at
+    r = 0 — the property the fused force pass relies on: pairs beyond the
+    true support (Verlet-skin extras) and the self pair contribute an
+    exact 0.0 to every force sum."""
+    R = r / h
+    a = alpha_d(dim, h) / h
+    d1 = -2.0 * R + 1.5 * R * R
+    d2 = -0.5 * (2.0 - R) ** 2
+    return a * jnp.where(R < 1.0, d1, jnp.where(R < 2.0, d2, 0.0))
+
+
+def dw_over_r(r: Array, h: float, dim: int) -> Array:
+    """(dW/dr) / r with the r -> 0 guard, the common factor of every
+    gradient term: ∂W/∂x_a = dw_over_r(r) * disp_a."""
+    rsafe = jnp.where(r > 1e-12, r, 1.0)
+    return dw_dr(r, h, dim) / rsafe

@@ -42,7 +42,9 @@ class PoiseuilleCase:
     skin: float = 0.0
     cell_factor: float = 1.0
     rebuild_every: int | None = None
-    backend: str | None = None
+    backend: str | None = None  # None=auto | "reference" | "xla" | "pallas"
+    force_chunk: int = 0
+    check_overflow: bool = False
 
     @property
     def F(self) -> float:
@@ -108,6 +110,8 @@ class PoiseuilleCase:
             skin=self.skin,
             rebuild_every=self.rebuild_every,
             backend=self.backend,
+            force_chunk=self.force_chunk,
+            check_overflow=self.check_overflow,
         )
         state = solver_lib.init_state(
             cfg, pos, v, m, rho, fixed=jnp.asarray(fixed)

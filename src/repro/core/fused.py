@@ -1,0 +1,268 @@
+"""Fused cell-blocked WCSPH force pass (the ``backend="xla"`` hot path).
+
+The reference step (``backend="reference"``) round-trips every pair
+intermediate through HBM — ``pair_displacements`` (N, K, d), ``grad_w``
+(N, K, d), the gathered pair fields (N, K)x3, one (N, K) coefficient per
+RHS term — and pays 5-6 *separate* neighbor gathers (rel, cell, v, m,
+rho, p/ρ²), each a strided walk over the particle arrays. Profiling
+(paper Table 6) identifies exactly this pattern as bandwidth-bound.
+
+This module evaluates the same sums with two structural changes:
+
+**One record gather per sweep.** All per-particle inputs of a sweep are
+packed into a single fp32 record row (Domínguez et al.'s float4-texture
+trick, arXiv:1110.3711): ``[q (d) | v (d) | m]`` for the continuity
+sweep, plus ``[rho | p/ρ²]`` for the momentum sweep. A sweep then gathers
+``rec[idx]`` once — contiguous rows, cache-line friendly — instead of
+5-6 scalar gathers. ``q = I + x/2`` is the particle position in per-axis
+*cell units*, built from the RCLL state by exact fp32 arithmetic: the
+integer cell coordinate is exact in fp32 and the fp16 payload halving is
+exact, so ``q_i - q_j`` reproduces the Eq. (7) anchored decode to ~1 ulp
+of q — two orders of magnitude below the fp16 *storage* granularity that
+bounds both decodes. Periodic axes wrap by minimum image on the integer
+cell span.
+
+**Chunked reduction, no pair HBM round-trip.** Particles are cell-sorted
+in the persistent pipeline, so a contiguous run of packed rows IS a
+contiguous run of background cells — ``lax.map`` over chunks of packed
+rows is the cell-blocked traversal with zero empty-slot padding (the
+dense (C, cap, K) cell tables pad by cap/mean-occupancy; packed rows
+visit the same cells in the same order without the padding). Each chunk
+decodes pair geometry, evaluates the B-spline gradient and the
+continuity/momentum terms through the SAME primitives as the reference
+path (``core/bspline.py`` + ``sph.momentum_rhs_terms``), and reduces
+over K immediately: peak pair-intermediate memory is O(chunk · K · d) —
+cache-resident — instead of O(N · K · d) in HBM.
+
+Physics ordering note: the solver integrates the standard explicit
+WCSPH scheme (symplectic Euler, as in DualSPHysics): continuity AND
+momentum are evaluated at the common current state, with the Tait
+pressure of the pre-update density. That is what makes a SINGLE pass
+possible — a semi-implicit rho-then-momentum ordering would force all
+drho to exist (a global barrier) before any momentum term, i.e. a
+second full geometry sweep.
+
+Masking note: there is no per-pair mask at all. Invalid neighbor slots
+are redirected to a dummy record row (index N) holding ``m = 0`` (and
+``rho = 1`` so denominators stay positive): every pair term carries an
+m_j factor, and the B-spline derivative vanishes identically beyond the
+support 2h and at r = 0, so invalid slots, padding rows, the self pair,
+and Verlet-skin extras all contribute an exact 0.0 without any per-term
+select or (N, K) boolean traffic in the hot loop.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bspline, rcll, sph
+from repro.core.domain import Domain
+from repro.core.nnps import NeighborList
+
+Array = jnp.ndarray
+
+#: Default rows per chunk. At K = 64, d = 2 this bounds live pair
+#: intermediates to a few MB — L2/L3-resident on CPU hosts.
+DEFAULT_CHUNK = 8192
+
+
+def resolve_chunk(n: int, chunk: int = 0) -> int:
+    """Static chunk size: ``chunk`` (or DEFAULT_CHUNK), equalized.
+
+    The requested size fixes the number of chunks; the returned size is
+    the smallest that still covers n in that many — e.g. n=8455 with a
+    8192 request becomes 2 chunks of 4228 instead of 8192+263 (which
+    would waste ~48% of the second chunk's pair work on padding).
+    """
+    c = max(1, min(n, chunk if chunk > 0 else DEFAULT_CHUNK))
+    nchunk = -(-n // c)
+    return -(-n // nchunk)
+
+
+def _chunk_rows(x: Array, nchunk: int, chunk: int, pad_row: Array) -> Array:
+    """Pad axis 0 to nchunk*chunk with ``pad_row`` rows and reshape to
+    (nchunk, chunk, ...)."""
+    pad = nchunk * chunk - x.shape[0]
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.broadcast_to(pad_row, (pad,) + x.shape[1:])], axis=0
+        )
+    return x.reshape((nchunk, chunk) + x.shape[1:])
+
+
+def _map_chunks(body, row_args: tuple, pad_rows: tuple, n: int, chunk: int):
+    """lax.map ``body`` over row-chunks of every array in ``row_args``.
+
+    Short final chunks are padded with the caller-supplied ``pad_rows``
+    (one per row arg) — the force pass pads the id rows with the dummy
+    index N and the record rows with the dummy record itself, so pad
+    rows evaluate all-dummy pairs: exactly zero, finite, no NaN. The
+    pad is sliced off the output. Returns the per-row results, (n, ...).
+    """
+    chunk = resolve_chunk(n, chunk)
+    nchunk = -(-n // chunk)
+    if nchunk == 1:  # chunk covers all rows: no pad, no map
+        return body(row_args)
+    chunked = tuple(
+        _chunk_rows(a, nchunk, chunk, p) for a, p in zip(row_args, pad_rows)
+    )
+    out = jax.lax.map(body, chunked)
+    return jax.tree_util.tree_map(
+        lambda o: o.reshape((nchunk * chunk,) + o.shape[2:])[:n], out
+    )
+
+
+def cell_coords_f32(rc: rcll.RCLLState) -> Array:
+    """(N, d) fp32 positions in per-axis CELL units: q = I + x/2.
+
+    Integer cell coordinates are exact in fp32 (grids are far below
+    2^24 cells per axis) and halving the fp16 payload is exact, so q
+    carries the full information of the RCLL state to ~1 ulp — the
+    storage quantization of ``rel`` remains the dominant error exactly
+    as in the anchored Eq. (7) decode.
+    """
+    return rc.cell_xy.astype(jnp.float32) + rc.rel.astype(jnp.float32) * 0.5
+
+
+def _pair_geometry(domain: Domain, q_i, q_j):
+    """Physical pair displacement / distance factors from cell-unit coords.
+
+    disp_a = (q_i - q_j)_a * hc_phys_a — the same per-axis scaling as the
+    Pallas tile decode (``kernels/tiling.tile_phys_disp``). The minimum
+    image is applied per-axis at trace time (only periodic axes pay it),
+    in select form: true pairs sit in adjacent cells, so |du| > span/2
+    happens only across the periodic seam and a single +-span correction
+    is exact. Returns (disp, r2, coef) with coef = (dW/dr)/r — the shared
+    scalar factor of every gradient component (gw_a = coef * disp_a).
+    """
+    du = q_i - q_j
+    cols = []
+    for a, (per, ncell, hc) in enumerate(
+        zip(domain.periodic, domain.ncells, domain.cell_sizes)
+    ):
+        da = du[..., a]
+        if per:
+            span = jnp.float32(ncell)
+            half = jnp.float32(ncell / 2.0)
+            da = da - span * (da > half).astype(jnp.float32) \
+                + span * (da < -half).astype(jnp.float32)
+        cols.append(da * jnp.float32(hc))
+    disp = jnp.stack(cols, axis=-1)
+    r2 = jnp.sum(disp * disp, axis=-1)
+    # Unmasked: dW/dr vanishes beyond 2h and at r = 0, and every consumer
+    # multiplies by mj (0 on invalid slots) — no select needed.
+    coef = bspline.dw_over_r(jnp.sqrt(r2), domain.h, domain.dim)
+    return disp, r2, coef
+
+
+def _records(rc: rcll.RCLLState, v: Array, m: Array, *extra: Array) -> Array:
+    """(N+1, 2d+1+len(extra)) record rows [q | v | m | extra...].
+
+    Row N is the dummy target of invalid neighbor slots: m = 0 zeroes
+    every pair term exactly; extras default to 1.0 so denominator fields
+    (rho) stay positive — callers overwrite columns that must be 0.
+    """
+    cols = [cell_coords_f32(rc), v.astype(jnp.float32),
+            m.astype(jnp.float32)[:, None]]
+    cols += [e.astype(jnp.float32)[:, None] for e in extra]
+    rec = jnp.concatenate(cols, axis=1)
+    dummy = jnp.zeros((1, rec.shape[1]), jnp.float32)
+    dummy = dummy.at[0, 2 * v.shape[1] + 1:].set(1.0)
+    return jnp.concatenate([rec, dummy], axis=0)
+
+
+def _sanitized_idx(nl: NeighborList, n: int) -> Array:
+    """Neighbor ids with invalid slots redirected to the dummy row N."""
+    return jnp.where(nl.mask, nl.idx, jnp.int32(n))
+
+
+@partial(jax.jit, static_argnames=("domain", "chunk", "mu"))
+def force_rhs(
+    domain: Domain,
+    rc: rcll.RCLLState,  # packed (N, d) state
+    nl: NeighborList,  # packed indexing, K-compacted
+    v: Array,  # (N, d) f32
+    m: Array,  # (N,) f32
+    rho: Array,  # (N,) f32 current density
+    p: Array,  # (N,) f32 EOS pressure of ``rho``
+    chunk: int = 0,
+    mu: float = 0.0,
+    idx_dummy: Array | None = None,
+) -> tuple[Array, Array]:
+    """The full WCSPH pair RHS in ONE cell-blocked pass.
+
+    Returns (drho (N,), acc (N, d)): the continuity sum and the momentum
+    sum (pressure + Morris viscosity), both at the current state. One
+    record gather and one geometry decode feed both sums; no (N, K)
+    intermediate exists outside the live chunk. Body force and the
+    fixed-particle mask are applied by the caller (per-particle terms —
+    nothing pairwise about them).
+
+    ``idx_dummy``: optional pre-sanitized neighbor ids (invalid -> N).
+    The persistent solver computes them once per REBUILD (the list is
+    static between rebuilds) instead of once per step.
+
+    The pair algebra folds the shared scalar coefficient first
+    (s = coef * pair-coefficient, then s * disp_a / s * dv_a), which is
+    an exact regrouping of ``sph.momentum_rhs_terms`` /
+    ``continuity_rhs_pairs`` — same terms, fewer per-axis multiplies.
+    """
+    d = domain.dim
+    hh = domain.h  # smoothing length: gradient and viscosity guard alike
+    n = rc.rel.shape[0]
+    rec = _records(rc, v, m, rho, p / (rho * rho))
+    rec = rec.at[n, 2 * d + 2].set(0.0)  # dummy p/ρ² (rho stays 1)
+    idx = _sanitized_idx(nl, n) if idx_dummy is None else idx_dummy
+
+    def body(args):
+        idx_c, rec_i = args
+        rec_j = rec[idx_c]  # ONE gather: (chunk, K, 2d+3)
+        disp, r2, coef = _pair_geometry(
+            domain, rec_i[:, None, :d], rec_j[..., :d]
+        )
+        dv = rec_i[:, None, d:2 * d] - rec_j[..., d:2 * d]
+        mj = rec_j[..., 2 * d]  # 0 on the dummy row
+        # Σ m_j (dv·∇W): ∇W_a = coef·disp_a -> fold coef out of the dot.
+        drho = jnp.sum(mj * coef * jnp.sum(dv * disp, axis=-1), axis=-1)
+        # Pressure: -Σ [m_j (p/ρ²_i + p/ρ²_j) coef] disp_a.
+        pc = sph.pressure_pair_coef(
+            mj, rec_i[:, None, 2 * d + 2], rec_j[..., 2 * d + 2]
+        ) * coef
+        # Viscosity: x·∇W = coef·r2 (already folded in the shared coef).
+        vc = sph.viscosity_pair_coef(
+            mj, coef * r2,
+            rec_i[:, None, 2 * d + 1], rec_j[..., 2 * d + 1],
+            r2, h=hh, mu=mu,
+        )
+        acc = jnp.sum(vc[..., None] * dv - pc[..., None] * disp, axis=-2)
+        return drho, acc
+
+    pad_rows = (jnp.full((idx.shape[1],), n, jnp.int32), rec[n])
+    return _map_chunks(body, (idx, rec[:n]), pad_rows, n, chunk)
+
+
+def estimate_hbm_bytes_per_step(
+    n: int, k: int, d: int, fused: bool, itemsize: int = 4
+) -> int:
+    """Back-of-envelope HBM pair-traffic model for one physics step.
+
+    Gather (reference) path materializes, per step: disp (N,K,d), r
+    (N,K), gw (N,K,d), dv (N,K,d), mj (N,K), plus per-term coefficient
+    arrays pij/x_dot_gw/rho_ij/coef (N,K) — ~(6d + 9) N·K fp32 write+read
+    round-trips — and performs ~6 scalar neighbor gathers. Fused path
+    touches the neighbor ids once (idx int32 + mask bool in the
+    sanitize, sanitized idx write + read back), ONE record-row gather
+    for the single sweep ((2d+3) fp32 per pair), and O(N) per-particle
+    in/out; pair intermediates never leave cache.
+    """
+    nk = n * k
+    if fused:
+        ids = nk * (4 + 1 + 2 * 4)  # idx+mask read, idx_s write+read
+        gathers = nk * (2 * d + 3) * itemsize  # one record row, one sweep
+        per_particle = n * (2 * (2 * d + 3) + d + 1) * itemsize
+        return ids + gathers + per_particle
+    round_trips = 2 * (6 * d + 9)  # write + read back of each pair array
+    gathers = nk * (2 * d + 3 + d) * itemsize  # rel/cell/v/m/rho/p scalar
+    return nk * round_trips * itemsize + gathers

@@ -61,12 +61,15 @@ def _migrate(domain: Domain, cell_xy: Array, rel_hi: Array, dtype):
     n = jnp.asarray(domain.ncells, dtype=jnp.int32)
     per = jnp.asarray(np.asarray(domain.periodic))
     wrapped = jnp.where(per, cell_new % n, cell_new)
-    # Non-periodic: clamp to the boundary cell; keep rel in [-1,1] so the
-    # fp16 payload stays in range (physical walls are enforced by the
-    # solver's boundary conditions, not by the coordinate system).
+    # Non-periodic: clamp to the boundary cell and pin rel at the NEAR
+    # edge by clipping the un-recentered value (clipping rel_new would
+    # teleport the particle to the boundary cell's far edge - a full-cell
+    # jump that breaks the Verlet-skin displacement invariant). Physical
+    # walls are enforced by the solver's boundary conditions, not by the
+    # coordinate system.
     clamped = jnp.clip(wrapped, 0, n - 1)
     rel_out = jnp.where(
-        (wrapped == clamped), rel_new, jnp.clip(rel_new, -1.0, 1.0)
+        (wrapped == clamped), rel_new, jnp.clip(rel_hi, -1.0, 1.0)
     )
     return clamped, rel_out.astype(dtype)
 
@@ -123,8 +126,9 @@ def advance_ef(
     per = jnp.asarray(np.asarray(domain.periodic))
     wrapped = jnp.where(per, cell_new % n, cell_new)
     clamped = jnp.clip(wrapped, 0, n - 1)
+    # Pin escapers at the near edge (see _migrate).
     rel_exact = jnp.where(
-        wrapped == clamped, rel_new, jnp.clip(rel_new, -1.0, 1.0))
+        wrapped == clamped, rel_new, jnp.clip(rel_hi, -1.0, 1.0))
     rel_stored = rel_exact.astype(dtype)
     new_carry = rel_exact - rel_stored.astype(jnp.float32)
     return RCLLState(cell_xy=clamped, rel=rel_stored), new_carry
@@ -241,6 +245,28 @@ def pair_r2_cell(
     )
 
 
+def decode_pair_disp(
+    domain: Domain,
+    rel_i: Array,  # (..., d) relative coords of i (storage dtype)
+    rel_j: Array,  # (..., d) relative coords of j
+    delta: Array,  # (..., d) int32 cell delta I - J, already min-image wrapped
+    dtype=jnp.float32,
+) -> tuple[Array, Array]:
+    """Eq. (7) reconstruction of physical pair displacement x_i - x_j.
+
+    The ONE decode every force path uses (reference gather, fused XLA
+    chunks): per-axis cell units -> normalized units -> physical units,
+    with the relative payload difference halved exactly and the integer
+    cell delta added at ``dtype``. Returns (disp (..., d), r (...,)).
+    """
+    du = (rel_i.astype(dtype) - rel_j.astype(dtype)) * 0.5 + delta.astype(dtype)
+    hc = jnp.asarray(domain.hc_norm_axes, dtype)
+    disp_norm = du * hc
+    disp_phys = disp_norm * (domain.h_d / 2.0)
+    r = jnp.sqrt(jnp.sum(disp_phys * disp_phys, axis=-1))
+    return disp_phys, r
+
+
 def pair_displacements(
     domain: Domain,
     state: RCLLState,
@@ -255,14 +281,8 @@ def pair_displacements(
 
     Returns (disp (N,K,d), r (N,K)).
     """
-    rel_i = state.rel[:, None, :].astype(dtype)
-    rel_j = state.rel[nl.idx].astype(dtype)
     delta = state.cell_xy[:, None, :] - state.cell_xy[nl.idx]
     delta = domain.wrap_cell_delta(delta)
-    # per-axis cell units -> normalized units -> physical units
-    du = (rel_i - rel_j) * 0.5 + delta.astype(dtype)
-    hc = jnp.asarray(domain.hc_norm_axes, dtype)
-    disp_norm = du * hc
-    disp_phys = disp_norm * (domain.h_d / 2.0)
-    r = jnp.sqrt(jnp.sum(disp_phys * disp_phys, axis=-1))
-    return disp_phys, r
+    return decode_pair_disp(
+        domain, state.rel[:, None, :], state.rel[nl.idx], delta, dtype=dtype
+    )

@@ -32,11 +32,25 @@ optimization made persistent) plus a Verlet-skin neighbor list:
     behavior); ``rebuild_every=n`` forces a static cadence for
     benchmarking.
 
-Neighbor production is backend-switchable: ``backend="xla"`` uses the
-pure-jnp candidate-gather + top_k search; ``backend="pallas"`` routes
-through the cell-blocked Pallas kernel (``kernels/nnps_pairwise.py``),
-which consumes the packed (C, d, cap) tables directly. The default is
-pallas on TPU and xla elsewhere, so CPU tests always pass.
+Fused force pass (this PR's tentpole)
+-------------------------------------
+``backend`` now selects the whole NNPS + force pipeline, not just the
+neighbor producer:
+
+  * ``"reference"`` - the gather path: per-particle neighbor list,
+    ``rcll.pair_displacements`` (N, K, d), ``sph.gather_pair_fields``.
+    Every pair intermediate round-trips through HBM; kept as the oracle.
+  * ``"xla"`` - jnp neighbor search + the fused cell-blocked force pass
+    (``core/fused.py``): pair geometry decoded and consumed in chunks of
+    packed (cell-sorted) rows, peak pair memory O(chunk*K*d).
+  * ``"pallas"`` - Pallas neighbor tables + Pallas fused force kernels
+    (``kernels/rcll_force.py``): per (cell, neighbor-cell) tile, Eq. 7
+    decode + B-spline gradient + continuity/momentum accumulation in
+    VMEM; no neighbor list is consumed at all (compact support masks
+    out-of-range candidates exactly).
+
+The default is pallas on TPU and xla elsewhere, so CPU tests always
+exercise the fused path with the reference path as the test oracle.
 """
 from __future__ import annotations
 
@@ -48,7 +62,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cells as cells_lib
-from repro.core import nnps, rcll, sph
+from repro.core import fused, nnps, rcll, sph
 from repro.core.domain import Domain
 from repro.core.precision import PrecisionPolicy
 
@@ -71,7 +85,15 @@ class SPHConfig:
     # --- persistent-pipeline knobs (RCLL path only) ---
     skin: float = 0.0  # physical Verlet-skin width added to the search radius
     rebuild_every: int | None = None  # static rebuild cadence (overrides skin)
-    backend: str | None = None  # None=auto | "xla" | "pallas"
+    backend: str | None = None  # None=auto | "reference" | "xla" | "pallas"
+    # Rows per chunk of the fused XLA force pass (0 = auto). Static.
+    force_chunk: int = 0
+    # Raise (via jax.debug.callback -> XlaRuntimeError) from simulate /
+    # simulate_stats when any cell-table or neighbor-list capacity
+    # overflowed during the run. Off by default: the check is a host
+    # callback, i.e. a device sync point. See README for the
+    # ``max_neighbors`` sizing rule.
+    check_overflow: bool = False
 
     @property
     def h(self) -> float:
@@ -95,9 +117,10 @@ class SPHConfig:
     @property
     def resolved_backend(self) -> str:
         if self.backend is not None:
-            if self.backend not in ("xla", "pallas"):
+            if self.backend not in ("reference", "xla", "pallas"):
                 raise ValueError(
-                    f"unknown backend {self.backend!r}; one of 'xla', 'pallas'"
+                    f"unknown backend {self.backend!r}; one of "
+                    "'reference', 'xla', 'pallas'"
                 )
             return self.backend
         return "pallas" if jax.default_backend() == "tpu" else "xla"
@@ -148,6 +171,15 @@ class PersistentCarry(NamedTuple):
     rebuilds: Array  # () int32 number of bin+search rebuilds so far
     steps: Array  # () int32 steps taken since init
     overflow: Array  # () bool any cell-table/neighbor-list overflow seen
+    # Pallas backend only (None otherwise): the packed-state binning of
+    # the last rebuild. The fused force kernels need the (C, cap) slot
+    # structure; between rebuilds it is stale but exact to decode against
+    # (ops.rcll_force_particles re-anchors migrated particles).
+    binning: cells_lib.CellBinning | None = None
+    # XLA fused backend only (None otherwise): neighbor ids with invalid
+    # slots redirected to the dummy row N. Static between rebuilds, so
+    # sanitized once per rebuild instead of once per step.
+    idx_dummy: Array | None = None
 
 
 class SimStats(NamedTuple):
@@ -229,18 +261,41 @@ def _packed_neighbor_list(
     )
 
 
+def _empty_neighbor_list(n: int) -> nnps.NeighborList:
+    """Zero-capacity list for backends that never consume one."""
+    return nnps.NeighborList(
+        idx=jnp.zeros((n, 0), jnp.int32),
+        mask=jnp.zeros((n, 0), bool),
+        count=jnp.zeros((n,), jnp.int32),
+    )
+
+
 def _rebuild(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
-    """Re-sort by cell, re-bin, and re-search with the inflated radius."""
+    """Re-sort by cell, re-bin, and re-search with the inflated radius.
+
+    The pallas force path walks the 3^dim cell neighborhood directly and
+    never reads a neighbor list, so its rebuild skips the K-compaction
+    kernel entirely and carries a zero-capacity list; its overflow flag
+    then means exactly "cell table dropped particles" (K truncation
+    cannot happen - the fused kernel sees every in-support pair).
+    """
     n = carry.order.shape[0]
     ps = rcll.pack_state(cfg.domain, carry.st.rc, cfg.cap(n))
     perm = ps.packing.order  # current-packed -> new-packed
     st = _permute_state(carry.st, perm, ps.rc)
-    nl = _packed_neighbor_list(cfg, ps)
-    overflow = (
-        carry.overflow
-        | (ps.packing.binning.overflow > 0)
-        | nl.overflowed
-    )
+    overflow = carry.overflow | (ps.packing.binning.overflow > 0)
+    if cfg.resolved_backend == "pallas":
+        nl = _empty_neighbor_list(n)
+        binning = ps.packing.binning
+        idx_dummy = None
+    else:
+        nl = _packed_neighbor_list(cfg, ps)
+        overflow = overflow | nl.overflowed
+        binning = None
+        idx_dummy = (
+            fused._sanitized_idx(nl, n)
+            if cfg.resolved_backend == "xla" else None
+        )
     return PersistentCarry(
         st=st,
         order=carry.order[perm],
@@ -249,6 +304,8 @@ def _rebuild(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
         rebuilds=carry.rebuilds + 1,
         steps=carry.steps,
         overflow=overflow,
+        binning=binning,
+        idx_dummy=idx_dummy,
     )
 
 
@@ -294,12 +351,13 @@ def _needs_rebuild(cfg: SPHConfig, carry: PersistentCarry) -> Array:
     return max_disp > 0.5 * cfg.skin_norm
 
 
-def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
-    """One WCSPH step on the packed state, reusing ``carry.nl``.
+def _force_rhs_reference(cfg: SPHConfig, carry: PersistentCarry):
+    """Gather path: per-pair arrays materialized in HBM (the oracle).
 
-    Pair geometry is decoded fresh from the *current* RCLL state (exact
-    cell deltas + relative payloads), so only the neighbor LIST is stale -
-    and the skin guarantees it remains a superset of the true neighbors.
+    Returns (drho, acc), both evaluated at the CURRENT state (standard
+    explicit WCSPH: every RHS term from the common state, DualSPHysics-
+    style symplectic Euler) - the property that lets the fused backends
+    compute the entire right-hand side in one cell-blocked pass.
     """
     dom, pol = cfg.domain, cfg.policy
     st, nl = carry.st, carry.nl
@@ -310,14 +368,60 @@ def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
     # Gather pair fields ONCE; continuity + momentum share them.
     pf = sph.gather_pair_fields(fl.v, fl.m, nl.idx, nl.mask)
     drho = sph.continuity_rhs_pairs(pf, gw)
+    p = sph.eos_tait(fl.rho, cfg.rho0, cfg.c0)
+    acc = sph.momentum_rhs_pairs(
+        pf, fl.rho, p, nl.idx, gw, disp, r, h=cfg.h, mu=cfg.mu,
+        body_force=jnp.zeros((dom.dim,), jnp.float32),
+    )
+    return drho, acc
+
+
+def _force_rhs_fused_xla(cfg: SPHConfig, carry: PersistentCarry):
+    """Fused cell-blocked force pass over packed row chunks (core/fused)."""
+    st, nl, fl = carry.st, carry.nl, carry.st.fluid
+    p = sph.eos_tait(fl.rho, cfg.rho0, cfg.c0)
+    return fused.force_rhs(
+        cfg.domain, st.rc, nl, fl.v, fl.m, fl.rho, p,
+        chunk=cfg.force_chunk, mu=cfg.mu, idx_dummy=carry.idx_dummy,
+    )
+
+
+def _force_rhs_fused_pallas(cfg: SPHConfig, carry: PersistentCarry):
+    """Fused Pallas tile kernels over the (stale-binning) cell tables."""
+    from repro.kernels import ops  # deferred: core stays kernel-free
+
+    dom = cfg.domain
+    st, fl = carry.st, carry.st.fluid
+    p = sph.eos_tait(fl.rho, cfg.rho0, cfg.c0)
+    return ops.rcll_force_particles(
+        dom, carry.binning, st.rc, fl.v, fl.m, fl.rho, p, mu=cfg.mu
+    )
+
+
+_FORCE_BACKENDS = {
+    "reference": _force_rhs_reference,
+    "xla": _force_rhs_fused_xla,
+    "pallas": _force_rhs_fused_pallas,
+}
+
+
+def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
+    """One WCSPH step on the packed state, reusing ``carry.nl``.
+
+    Pair geometry is decoded fresh from the *current* RCLL state (exact
+    cell deltas + relative payloads), so only the neighbor LIST is stale -
+    and the skin guarantees it remains a superset of the true neighbors.
+    The continuity + momentum pair sums run through the backend-selected
+    force path (see module docstring); EOS/integration/boundary terms are
+    per-particle and shared.
+    """
+    dom, pol = cfg.domain, cfg.policy
+    st, fl = carry.st, carry.st.fluid
+    drho, acc = _FORCE_BACKENDS[cfg.resolved_backend](cfg, carry)
     rho = fl.rho + cfg.dt * drho
-    p = sph.eos_tait(rho, cfg.rho0, cfg.c0)
 
     bf = jnp.asarray(cfg.body_force, jnp.float32)
-    acc = sph.momentum_rhs_pairs(
-        pf, rho, p, nl.idx, gw, disp, r, h=cfg.h, mu=cfg.mu, body_force=bf
-    )
-    v = fl.v + cfg.dt * acc
+    v = fl.v + cfg.dt * (acc + bf)
     v = jnp.where(st.fixed[:, None], 0.0, v)
 
     dxn = (v * cfg.dt * (2.0 / dom.h_d)).astype(jnp.float32)
@@ -332,11 +436,13 @@ def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
     return PersistentCarry(
         st=st2,
         order=carry.order,
-        nl=nl,
+        nl=carry.nl,
         disp_acc=carry.disp_acc + dxn,
         rebuilds=carry.rebuilds,
         steps=carry.steps + 1,
         overflow=carry.overflow,
+        binning=carry.binning,
+        idx_dummy=carry.idx_dummy,
     )
 
 
@@ -349,7 +455,15 @@ def exact_neighbor_list(
     using the same Eq. (7) arithmetic as a fresh search - the result's
     neighbor SETS are identical to rebuilding at the current positions
     whenever the skin invariant (max displacement < skin/2) holds.
+
+    Requires a list-producing backend: the pallas force path carries no
+    neighbor list (its rebuild skips the search entirely).
     """
+    if cfg.resolved_backend == "pallas":
+        raise ValueError(
+            "exact_neighbor_list needs backend='reference' or 'xla'; the "
+            "pallas force path does not carry a neighbor list"
+        )
     pol = cfg.policy
     d2 = rcll.pair_r2_cell(
         cfg.domain, carry.st.rc, carry.nl,
@@ -369,6 +483,53 @@ def step_persistent(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
         carry,
     )
     return _physics_step(cfg, carry)
+
+
+def _scan_steps(
+    cfg: SPHConfig, carry: PersistentCarry, nsteps: int
+) -> PersistentCarry:
+    """``nsteps`` persistent steps under one lax.scan (shared hot loop)."""
+
+    def body(c, _):
+        return step_persistent(cfg, c), None
+
+    carry, _ = jax.lax.scan(body, carry, None, length=nsteps)
+    return carry
+
+
+@partial(jax.jit, static_argnums=(0, 2), donate_argnums=(1,))
+def run_persistent(
+    cfg: SPHConfig, carry: PersistentCarry, nsteps: int
+) -> PersistentCarry:
+    """Production scan entry point: advances a carry IN PLACE.
+
+    The carry argument is donated, so the packed state buffers are
+    updated without a second copy resident in HBM (honored on CPU and
+    TPU) — call as ``carry = run_persistent(cfg, carry, n)`` and never
+    touch the old carry again: its buffers are invalidated, INCLUDING
+    arrays it aliases from the ``SPHState`` that ``init_persistent``
+    consumed. Chain segments to checkpoint or stream diagnostics:
+
+        carry = init_persistent(cfg, state)
+        for _ in range(segments):
+            carry = run_persistent(cfg, carry, steps_per_segment)
+        state = finalize_persistent(cfg, carry)
+
+    ``simulate``/``simulate_stats`` stay non-donating (callers reuse
+    their ``state`` argument freely).
+    """
+    return _scan_steps(cfg, carry, nsteps)
+
+
+def _raise_on_overflow(overflow, max_neighbors: int) -> None:
+    if overflow:
+        raise RuntimeError(
+            "neighbor capacity overflow: some particle saw more "
+            f"candidates than max_neighbors={max_neighbors} (or a cell "
+            "table row filled). Results silently dropped pairs - raise "
+            "max_neighbors (see the sizing rule in README) or enlarge "
+            "capacity."
+        )
 
 
 # --------------------------------------------------------------------------
@@ -401,7 +562,12 @@ def _neighbors_and_pairs(cfg: SPHConfig, state: SPHState):
 
 
 def _step_absolute(cfg: SPHConfig, state: SPHState) -> SPHState:
-    """One mixed-precision WCSPH step on absolute positions."""
+    """One mixed-precision WCSPH step on absolute positions.
+
+    Same explicit update as the RCLL backends: continuity AND momentum
+    evaluated at the current state (p from the pre-update density), so
+    every algo integrates the identical scheme.
+    """
     dom = cfg.domain
     nl, disp, r = _neighbors_and_pairs(cfg, state)
     gw = sph.grad_w(disp, r, cfg.h, dom.dim, nl.mask)
@@ -409,12 +575,12 @@ def _step_absolute(cfg: SPHConfig, state: SPHState) -> SPHState:
     fl = state.fluid
     pf = sph.gather_pair_fields(fl.v, fl.m, nl.idx, nl.mask)
     drho = sph.continuity_rhs_pairs(pf, gw)
+    p = sph.eos_tait(fl.rho, cfg.rho0, cfg.c0)
     rho = fl.rho + cfg.dt * drho
-    p = sph.eos_tait(rho, cfg.rho0, cfg.c0)
 
     bf = jnp.asarray(cfg.body_force, jnp.float32)
     acc = sph.momentum_rhs_pairs(
-        pf, rho, p, nl.idx, gw, disp, r, h=cfg.h, mu=cfg.mu, body_force=bf
+        pf, fl.rho, p, nl.idx, gw, disp, r, h=cfg.h, mu=cfg.mu, body_force=bf
     )
     v = fl.v + cfg.dt * acc
     v = jnp.where(state.fixed[:, None], 0.0, v)
@@ -453,18 +619,22 @@ def step(cfg: SPHConfig, state: SPHState) -> SPHState:
 def simulate_stats(
     cfg: SPHConfig, state: SPHState, nsteps: int
 ) -> tuple[SPHState, SimStats]:
-    """Run ``nsteps`` steps; also report rebuild/overflow diagnostics."""
+    """Run ``nsteps`` steps; also report rebuild/overflow diagnostics.
+
+    With ``cfg.check_overflow`` the run fails loudly (XlaRuntimeError
+    from a host callback) instead of carrying the overflow flag silently.
+    """
     if cfg.algo == "rcll":
         carry = init_persistent(cfg, state)
-
-        def body(c, _):
-            return step_persistent(cfg, c), None
-
-        carry, _ = jax.lax.scan(body, carry, None, length=nsteps)
+        carry = _scan_steps(cfg, carry, nsteps)
         stats = SimStats(
             rebuilds=carry.rebuilds, steps=carry.steps,
             overflow=carry.overflow,
         )
+        if cfg.check_overflow:
+            jax.debug.callback(
+                _raise_on_overflow, stats.overflow, cfg.max_neighbors
+            )
         return finalize_persistent(cfg, carry), stats
 
     def body(s, _):

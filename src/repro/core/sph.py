@@ -9,42 +9,20 @@ precision.
 """
 from __future__ import annotations
 
-import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import bspline
+
 Array = jnp.ndarray
 
-
-def alpha_d(dim: int, h: float) -> float:
-    """Normalization factor of the cubic B-spline (paper Eq. 3)."""
-    if dim == 1:
-        return 1.0 / h
-    if dim == 2:
-        return 15.0 / (7.0 * math.pi * h * h)
-    if dim == 3:
-        return 3.0 / (2.0 * math.pi * h**3)
-    raise ValueError(dim)
-
-
-def bspline_w(r: Array, h: float, dim: int) -> Array:
-    """Cubic B-spline kernel W(R, h), R = r/h (paper Eq. 3)."""
-    R = r / h
-    a = alpha_d(dim, h)
-    w1 = 2.0 / 3.0 - R * R + 0.5 * R**3
-    w2 = (2.0 - R) ** 3 / 6.0
-    return a * jnp.where(R < 1.0, w1, jnp.where(R < 2.0, w2, 0.0))
-
-
-def bspline_dw_dr(r: Array, h: float, dim: int) -> Array:
-    """dW/dr of the cubic B-spline."""
-    R = r / h
-    a = alpha_d(dim, h) / h
-    d1 = -2.0 * R + 1.5 * R * R
-    d2 = -0.5 * (2.0 - R) ** 2
-    return a * jnp.where(R < 1.0, d1, jnp.where(R < 2.0, d2, 0.0))
+# Single-source B-spline (see core/bspline.py); the old names stay public
+# because benchmarks/tests call them directly.
+alpha_d = bspline.alpha_d
+bspline_w = bspline.w
+bspline_dw_dr = bspline.dw_dr
 
 
 def grad_w(disp: Array, r: Array, h: float, dim: int, mask: Array) -> Array:
@@ -52,9 +30,7 @@ def grad_w(disp: Array, r: Array, h: float, dim: int, mask: Array) -> Array:
 
     disp = x_i - x_j (note sign: gradient w.r.t. particle i's position).
     """
-    dw = bspline_dw_dr(r, h, dim)
-    rsafe = jnp.where(r > 1e-12, r, 1.0)
-    g = (dw / rsafe)[..., None] * disp
+    g = bspline.dw_over_r(r, h, dim)[..., None] * disp
     return jnp.where(mask[..., None], g, 0.0)
 
 
@@ -150,7 +126,51 @@ def gather_pair_fields(
 
 def continuity_rhs_pairs(pf: PairFields, gw: Array) -> Array:
     """Dρ_i/Dt = Σ_j m_j (v_i - v_j)·∂W_ij/∂x_i (Eq. 4, first row)."""
-    return jnp.sum(pf.mj * jnp.sum(pf.dv * gw, axis=-1), axis=1)
+    return jnp.sum(pf.mj * jnp.sum(pf.dv * gw, axis=-1), axis=-1)
+
+
+# --- per-tile pair primitives ---------------------------------------------
+# These take already-gathered pair-shaped arrays (any leading shape: an
+# (N, K) neighbor matrix, a (chunk, K) slab of the fused XLA pass, or a
+# (cap_i, cap_j) Pallas tile), so every backend evaluates the SAME
+# arithmetic — the reference path below is a thin wrapper over them.
+def pressure_pair_coef(mj: Array, por2_i: Array, por2_j: Array) -> Array:
+    """m_j (p_i/ρ_i² + p_j/ρ_j²), the symmetric pressure-term coefficient."""
+    return mj * (por2_i + por2_j)
+
+
+def viscosity_pair_coef(
+    mj: Array, x_dot_gw: Array, rho_i: Array, rho_j: Array, r2: Array,
+    *, h: float, mu: float,
+) -> Array:
+    """Morris-viscosity pair coefficient (multiplies v_i - v_j).
+
+    x_dot_gw = (x_i - x_j)·∇W; the 0.01 h² denominator guard is Morris'.
+    """
+    return mj * (2.0 * mu) * x_dot_gw / (rho_i * rho_j * (r2 + 0.01 * h * h))
+
+
+def momentum_rhs_terms(
+    dv: Array,  # (..., K, d) v_i - v_j
+    mj: Array,  # (..., K) neighbor mass, zeroed where invalid
+    por2_i: Array,  # (..., K) or broadcastable: p_i / ρ_i²
+    por2_j: Array,  # (..., K) p_j / ρ_j²
+    rho_i: Array,
+    rho_j: Array,
+    gw: Array,  # (..., K, d) ∂W/∂x_i, masked
+    disp: Array,  # (..., K, d) x_i - x_j
+    r2: Array,  # (..., K) squared pair distance
+    *,
+    h: float,
+    mu: float,
+) -> Array:
+    """Dv_i/Dt pair sums (pressure + Morris viscosity), reduced over K."""
+    acc_p = -jnp.sum(
+        pressure_pair_coef(mj, por2_i, por2_j)[..., None] * gw, axis=-2
+    )
+    x_dot_gw = jnp.sum(disp * gw, axis=-1)
+    coef = viscosity_pair_coef(mj, x_dot_gw, rho_i, rho_j, r2, h=h, mu=mu)
+    return acc_p + jnp.sum(coef[..., None] * dv, axis=-2)
 
 
 def momentum_rhs_pairs(
@@ -172,14 +192,13 @@ def momentum_rhs_pairs(
     and momentum within a step, so they cannot ride in ``pf``).
     """
     p_over_rho2 = p / (rho * rho)
-    pij = p_over_rho2[:, None] + p_over_rho2[nl_idx]
-    acc_p = -jnp.sum((pf.mj * pij)[..., None] * gw, axis=1)
-
-    x_dot_gw = jnp.sum(disp * gw, axis=-1)  # (N, K)
-    rho_ij = rho[:, None] * rho[nl_idx]
-    coef = pf.mj * (2.0 * mu) * x_dot_gw / (rho_ij * (r * r + 0.01 * h * h))
-    acc_v = jnp.sum(coef[..., None] * pf.dv, axis=1)
-    return acc_p + acc_v + body_force
+    acc = momentum_rhs_terms(
+        pf.dv, pf.mj,
+        p_over_rho2[:, None], p_over_rho2[nl_idx],
+        rho[:, None], rho[nl_idx],
+        gw, disp, r * r, h=h, mu=mu,
+    )
+    return acc + body_force
 
 
 def continuity_rhs(

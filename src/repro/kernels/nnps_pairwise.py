@@ -41,6 +41,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tiling
+
 Array = jnp.ndarray
 
 
@@ -62,30 +64,20 @@ def _adjacency_kernel(
     compute_dtype,
 ):
     c, k = pl.program_id(0), pl.program_id(1)
-    d, cap = rel_i_ref.shape[1], rel_i_ref.shape[2]
+    cap = rel_i_ref.shape[2]
 
     @pl.when(k == 0)
     def _init():
         cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
-    rel_i = rel_i_ref[0].astype(compute_dtype)  # (d, cap)
-    rel_j = rel_j_ref[0].astype(compute_dtype)  # (d, cap)
-    off_k = off_ref[0].astype(compute_dtype)  # (d,)
-
-    d2 = jnp.zeros((cap, cap), compute_dtype)
-    for a in range(d):  # static unroll over the 2-3 axes
-        du = (rel_i[a][:, None] - rel_j[a][None, :]) * compute_dtype(0.5)
-        du = (du - off_k[a]) * compute_dtype(weights[a])
-        d2 = d2 + du * du
-
+    d2 = tiling.tile_r2_cell(
+        rel_i_ref[0], rel_j_ref[0], off_ref[0], weights, compute_dtype
+    )
     ok = d2 <= compute_dtype(r2_cell)
-    occ = (occ_i_ref[0][:, None] > 0) & (occ_j_ref[0][None, :] > 0)
-    ok = ok & occ
-    # self-pair exclusion: neighbor cell == self cell and same slot
-    is_self_cell = nb_ref[c, k] == c
-    eye = jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 0) == \
-        jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 1)
-    ok = ok & ~(is_self_cell & eye)
+    # occupancy + self-pair exclusion (neighbor cell == self cell, same slot)
+    ok = ok & tiling.tile_pair_mask(
+        occ_i_ref[0], occ_j_ref[0], nb_ref[c, k] == c, cap
+    )
 
     adj = ok.astype(jnp.float32)
     adj_ref[0, 0] = adj
@@ -121,31 +113,21 @@ def _neighbor_list_kernel(
     and the v5e roofline both fit comfortably at cap <= 128, K <= 128.
     """
     c, k = pl.program_id(0), pl.program_id(1)
-    d, cap = rel_i_ref.shape[1], rel_i_ref.shape[2]
+    cap = rel_i_ref.shape[2]
 
     @pl.when(k == 0)
     def _init():
         out_ref[...] = jnp.full_like(out_ref, -1)
         cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
-    rel_i = rel_i_ref[0].astype(compute_dtype)  # (d, cap)
-    rel_j = rel_j_ref[0].astype(compute_dtype)  # (d, cap)
-    off_k = off_ref[0].astype(compute_dtype)  # (d,)
-
-    d2 = jnp.zeros((cap, cap), compute_dtype)
-    for a in range(d):  # static unroll over the 2-3 axes
-        du = (rel_i[a][:, None] - rel_j[a][None, :]) * compute_dtype(0.5)
-        du = (du - off_k[a]) * compute_dtype(weights[a])
-        d2 = d2 + du * du
-
+    d2 = tiling.tile_r2_cell(
+        rel_i_ref[0], rel_j_ref[0], off_ref[0], weights, compute_dtype
+    )
     ok = d2 <= compute_dtype(r2_cell)
-    occ = (occ_i_ref[0][:, None] > 0) & (occ_j_ref[0][None, :] > 0)
-    ok = ok & occ
-    # self-pair exclusion: neighbor cell == self cell and same slot
-    is_self_cell = nb_ref[c, k] == c
-    eye = jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 0) == \
-        jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 1)
-    ok = ok & ~(is_self_cell & eye)
+    # occupancy + self-pair exclusion (neighbor cell == self cell, same slot)
+    ok = ok & tiling.tile_pair_mask(
+        occ_i_ref[0], occ_j_ref[0], nb_ref[c, k] == c, cap
+    )
 
     # Compact: hit at (i, j) targets list slot prev_count_i + rank_j.
     prev = cnt_ref[0].astype(jnp.int32)  # (cap,)

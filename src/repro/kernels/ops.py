@@ -12,6 +12,7 @@ on real TPU. All wrappers are shape-polymorphic over (C, cap, d, M).
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -19,14 +20,38 @@ import numpy as np
 
 from repro.core import cells as cells_lib
 from repro.core import nnps as nnps_lib
+from repro.core import rcll as rcll_lib
 from repro.core.domain import Domain
-from repro.kernels import nnps_pairwise, sph_gradient
+from repro.kernels import nnps_pairwise, rcll_force, sph_gradient
 
 Array = jnp.ndarray
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def nb_with_sentinel(domain: Domain) -> Array:
+    """(C+1, M) neighbor-cell ids; the sentinel row points at itself."""
+    nb = jnp.asarray(cell_neighbor_ids(domain))
+    return jnp.concatenate(
+        [nb, jnp.full((1, nb.shape[1]), nb.shape[0], nb.dtype)], axis=0
+    )
+
+
+def _row_table(
+    binning: cells_lib.CellBinning, f: Array, fill: float = 0.0
+) -> Array:
+    """(C+1, cap) f32 cell-major table of a per-particle scalar field.
+
+    ``fill`` value for empty slots and the sentinel row — pass a nonzero
+    fill for fields that appear in denominators (e.g. rho) so masked
+    pair terms stay an exact 0 instead of 0 * inf = NaN.
+    """
+    ft = cells_lib.to_cell_major(binning, f.astype(jnp.float32), fill=fill)
+    return jnp.concatenate(
+        [ft, jnp.full((1, ft.shape[1]), fill, ft.dtype)], axis=0
+    )
 
 
 def cell_neighbor_ids(domain: Domain) -> np.ndarray:
@@ -109,10 +134,7 @@ def rcll_adjacency_cells(
     """
     interpret = default_interpret() if interpret is None else interpret
     rel_t, occ, _ = pack_cells(binning, rel)
-    nb = jnp.asarray(cell_neighbor_ids(domain))
-    nb = jnp.concatenate(  # sentinel row points at itself
-        [nb, jnp.full((1, nb.shape[1]), nb.shape[0], nb.dtype)], axis=0
-    )
+    nb = nb_with_sentinel(domain)
     offs = tuple(map(tuple, cells_lib.neighbor_cell_offsets(domain.dim)))
     adj, cnt = nnps_pairwise.rcll_adjacency(
         rel_t,
@@ -165,10 +187,7 @@ def rcll_neighbor_lists(
         [binning.table,
          jnp.full((1, binning.table.shape[1]), -1, jnp.int32)], axis=0
     )
-    nb = jnp.asarray(cell_neighbor_ids(domain))
-    nb = jnp.concatenate(  # sentinel row points at itself
-        [nb, jnp.full((1, nb.shape[1]), nb.shape[0], nb.dtype)], axis=0
-    )
+    nb = nb_with_sentinel(domain)
     offs = tuple(map(tuple, cells_lib.neighbor_cell_offsets(domain.dim)))
     if radius_cell is None:
         radius_cell = nnps_lib.rcll_radius_cell_units(domain)
@@ -208,10 +227,7 @@ def rcll_gradient_particles(
     """Per-particle A5 gradient (N, d) via the fused Pallas kernel."""
     interpret = default_interpret() if interpret is None else interpret
     rel_t, occ, (f_t,) = pack_cells(binning, rel, f)
-    nb = jnp.asarray(cell_neighbor_ids(domain))
-    nb = jnp.concatenate(
-        [nb, jnp.full((1, nb.shape[1]), nb.shape[0], nb.dtype)], axis=0
-    )
+    nb = nb_with_sentinel(domain)
     offs = tuple(map(tuple, cells_lib.neighbor_cell_offsets(domain.dim)))
     hc_phys = tuple(domain.cell_sizes)
     num, den = sph_gradient.rcll_gradient(
@@ -231,3 +247,54 @@ def rcll_gradient_particles(
     den = jnp.where(jnp.abs(den) > eps, den, jnp.where(den >= 0, eps, -eps))
     grad_t = (num / den).transpose(0, 2, 1)  # (C+1, cap, d)
     return unpack_per_particle(grad_t, binning)
+
+
+# --------------------------------------------------------------------------
+# Fused RCLL force pass (kernels/rcll_force.py wrappers)
+# --------------------------------------------------------------------------
+def rcll_force_particles(
+    domain: Domain,
+    binning: cells_lib.CellBinning,
+    rc: "rcll_lib.RCLLState",  # CURRENT state, packed indexing
+    v: Array,  # (N, d) f32
+    m: Array,  # (N,) f32
+    rho: Array,  # (N,) f32 current density
+    p: Array,  # (N,) f32 EOS pressure of ``rho``
+    *,
+    mu: float,
+    interpret: bool | None = None,
+) -> tuple[Array, Array]:
+    """The full WCSPH pair RHS via the fused Pallas kernel.
+
+    Returns (drho (N,), acc (N, d)); body force / fixed-particle masking
+    are per-particle terms applied by the caller.
+
+    Between Verlet-skin rebuilds the binning is STALE: a particle may
+    have migrated to an adjacent cell while still occupying its old slot.
+    The decode stays exact by re-expressing each particle's coordinate
+    relative to its stale cell: rel' = rel + 2 (cell_now - cell_stale)
+    (minimum-image wrapped), carried in fp32 — the shift is an exact
+    small integer, so rel' decodes to the identical fp32 position, and
+    the skin invariant (drift <= skin/2 <= half a cell) keeps every true
+    pair within the stale 3^dim neighborhood.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    delta = domain.wrap_cell_delta(rc.cell_xy - binning.cell_xy)
+    rel_shift = rc.rel.astype(jnp.float32) + 2.0 * delta.astype(jnp.float32)
+    rel_t, occ, (m_t,) = pack_cells(binning, rel_shift, m)
+    v_t, _, _ = pack_cells(binning, v.astype(jnp.float32))
+    rho_t = _row_table(binning, rho, fill=1.0)  # appears in denominators
+    por2_t = _row_table(binning, p / (rho * rho))
+    offs = tuple(map(tuple, cells_lib.neighbor_cell_offsets(domain.dim)))
+    drho_t, acc_t = rcll_force.rcll_force(
+        rel_t, v_t, m_t, rho_t, por2_t, occ, nb_with_sentinel(domain),
+        offs=offs,
+        hc_phys=tuple(domain.cell_sizes),
+        h=domain.h,
+        dim=domain.dim,
+        mu=float(mu),
+        interpret=interpret,
+    )
+    drho = unpack_per_particle(drho_t, binning)
+    acc = unpack_per_particle(acc_t.transpose(0, 2, 1), binning)
+    return drho, acc

@@ -1,0 +1,172 @@
+"""Pallas TPU kernel: fused cell-blocked WCSPH force evaluation.
+
+The paper's bandwidth argument (Table 6: NNPS + gradient are ~8% compute
+/ ~51% bandwidth) applied to the *force* stage: instead of gathering
+per-pair arrays (disp, grad W, dv, m_j — all (N, K, d)-sized HBM round
+trips), each (cell, neighbor-cell) tile decodes the relative coordinates
++ the exact integer cell offset (Eq. 7) in registers, evaluates the
+B-spline gradient in place, and accumulates the continuity AND momentum
+sums directly into fp32 VMEM accumulators indexed by the self cell — the
+full WCSPH right-hand side in ONE pass over the neighbor tiles (the
+solver integrates the standard explicit scheme, so both sums read the
+same state). Layout, blocking, and scalar-prefetched neighbor ids are
+identical to ``nnps_pairwise.py`` / ``sph_gradient.py`` (shared helpers
+in ``kernels/tiling.py``); the pair physics goes through the same
+primitives as the reference path (``core/bspline.py`` / ``core/sph.py``).
+
+No neighbor list is consumed: the B-spline derivative vanishes
+identically beyond the support 2h and at r = 0, so every out-of-support
+candidate in the 3^dim neighborhood (and the self pair) contributes an
+exact 0.0 — the kernel sums over the full tile and lets compact support
+do the masking. Empty slots are killed by m_j = 0 (zero-filled tables;
+rho tables are 1-filled so denominators stay positive). Consequence: the
+fused kernel never truncates at K — it sees every in-support pair even
+where the K-compacted list would overflow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bspline, sph
+from repro.kernels import tiling
+
+Array = jnp.ndarray
+
+
+def _force_kernel(
+    # scalar prefetch
+    nb_ref,
+    # inputs
+    off_ref,  # (1, d) neighborhood offset for this k
+    rel_i_ref,  # (1, d, cap) self cell (fp32 stale-cell-shifted rel)
+    rel_j_ref,  # (1, d, cap) neighbor cell
+    v_i_ref,  # (1, d, cap) f32
+    v_j_ref,  # (1, d, cap) f32
+    m_j_ref,  # (1, cap) f32 (0 in empty slots)
+    rho_i_ref,  # (1, cap) f32 (1 in empty slots: denominator-safe)
+    rho_j_ref,  # (1, cap) f32
+    por2_i_ref,  # (1, cap) f32 p / ρ²
+    por2_j_ref,  # (1, cap) f32
+    occ_i_ref,  # (1, cap)
+    occ_j_ref,  # (1, cap)
+    # outputs (indexed by c only -> accumulated across the k axis)
+    drho_ref,  # (1, cap) f32
+    acc_ref,  # (1, d, cap) f32
+    *,
+    hc_phys: tuple,
+    h: float,
+    dim: int,
+    mu: float,
+):
+    _, k = pl.program_id(0), pl.program_id(1)
+    d = rel_i_ref.shape[1]
+
+    @pl.when(k == 0)
+    def _init():
+        drho_ref[...] = jnp.zeros_like(drho_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    disp, r2 = tiling.tile_phys_disp(
+        rel_i_ref[0], rel_j_ref[0], off_ref[0], hc_phys
+    )
+    adj = tiling.tile_occ_pair(occ_i_ref[0], occ_j_ref[0]).astype(jnp.float32)
+    coef = adj * bspline.dw_over_r(jnp.sqrt(r2), h, dim)
+
+    mj = m_j_ref[0][None, :]
+    pc = sph.pressure_pair_coef(
+        mj, por2_i_ref[0][:, None], por2_j_ref[0][None, :]
+    )
+    # x·∇W = coef * Σ disp² = coef * r2 (the gw tiles are coef * disp_a).
+    vc = sph.viscosity_pair_coef(
+        mj, coef * r2,
+        rho_i_ref[0][:, None], rho_j_ref[0][None, :],
+        r2, h=h, mu=mu,
+    )
+    dv_dot_gw = jnp.zeros_like(r2)
+    for a in range(d):
+        gw_a = coef * disp[a]
+        dv_a = v_i_ref[0, a][:, None] - v_j_ref[0, a][None, :]
+        dv_dot_gw += dv_a * gw_a
+        acc_ref[0, a] += jnp.sum(-pc * gw_a + vc * dv_a, axis=1)
+    drho_ref[...] += jnp.sum(mj * dv_dot_gw, axis=1)[None]
+
+
+def _cell_block(d, cap):
+    return pl.BlockSpec((1, d, cap), lambda c, k, nb: (c, 0, 0))
+
+
+def _nbcell_block(d, cap):
+    return pl.BlockSpec((1, d, cap), lambda c, k, nb: (nb[c, k], 0, 0))
+
+
+def _cell_row(cap):
+    return pl.BlockSpec((1, cap), lambda c, k, nb: (c, 0))
+
+
+def _nbcell_row(cap):
+    return pl.BlockSpec((1, cap), lambda c, k, nb: (nb[c, k], 0))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("offs", "hc_phys", "h", "dim", "mu", "interpret"),
+)
+def rcll_force(
+    rel: Array,  # (C, d, cap) f32 (stale-cell-shifted, see ops wrapper)
+    v: Array,  # (C, d, cap) f32
+    m: Array,  # (C, cap) f32, 0 in empty slots
+    rho: Array,  # (C, cap) f32, 1 in empty slots
+    por2: Array,  # (C, cap) f32 p / ρ²
+    occ: Array,  # (C, cap) f32 {0,1}
+    nb_ids: Array,  # (C, M) int32
+    *,
+    offs: tuple,  # M x d neighborhood offsets (static)
+    hc_phys: tuple,  # (d,) physical cell edges (static)
+    h: float,
+    dim: int,
+    mu: float,
+    interpret: bool = True,
+) -> tuple[Array, Array]:
+    """Fused WCSPH RHS: (drho (C, cap), acc (C, d, cap)), one tile pass."""
+    C, d, cap = rel.shape
+    M = nb_ids.shape[1]
+    offs_arr = jnp.asarray(np.asarray(offs, np.float32).reshape(M, d))
+    kernel = functools.partial(
+        _force_kernel,
+        hc_phys=tuple(float(x) for x in hc_phys),
+        h=float(h),
+        dim=int(dim),
+        mu=float(mu),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C, M),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda c, k, nb: (k, 0)),
+            _cell_block(d, cap), _nbcell_block(d, cap),  # rel i, j
+            _cell_block(d, cap), _nbcell_block(d, cap),  # v i, j
+            _nbcell_row(cap),  # m_j
+            _cell_row(cap), _nbcell_row(cap),  # rho i, j
+            _cell_row(cap), _nbcell_row(cap),  # por2 i, j
+            _cell_row(cap), _nbcell_row(cap),  # occ i, j
+        ],
+        out_specs=[
+            _cell_row(cap),
+            pl.BlockSpec((1, d, cap), lambda c, k, nb: (c, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((C, cap), jnp.float32),
+            jax.ShapeDtypeStruct((C, d, cap), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nb_ids, offs_arr, rel, rel, v, v, m, rho, rho, por2, por2, occ, occ)

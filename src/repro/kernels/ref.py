@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bspline
+
 Array = jnp.ndarray
 
 
@@ -58,21 +60,6 @@ def ref_rcll_adjacency(
 # --------------------------------------------------------------------------
 # Fused RCLL NNPS + A5 gradient (kernels/sph_gradient.py)
 # --------------------------------------------------------------------------
-def _bspline_dw_dr(r: Array, h: float, dim: int) -> Array:
-    import math
-
-    if dim == 2:
-        a = 15.0 / (7.0 * math.pi * h * h)
-    elif dim == 3:
-        a = 3.0 / (2.0 * math.pi * h**3)
-    else:
-        a = 1.0 / h
-    R = r / h
-    d1 = -2.0 * R + 1.5 * R * R
-    d2 = -0.5 * (2.0 - R) ** 2
-    return (a / h) * jnp.where(R < 1.0, d1, jnp.where(R < 2.0, d2, 0.0))
-
-
 def ref_rcll_gradient(
     rel: Array,  # (C, d, cap)
     f: Array,  # (C, cap) f32 field values
@@ -104,7 +91,7 @@ def ref_rcll_gradient(
     # physical displacement x_i - x_j, per axis: (C, M, d, cap_i, cap_j)
     disp = du * jnp.asarray(hc_phys, jnp.float32)[None, None, :, None, None]
     r = jnp.sqrt(jnp.sum(disp * disp, axis=2))  # (C, M, cap, cap)
-    dw = _bspline_dw_dr(r, h, dim)
+    dw = bspline.dw_dr(r, h, dim)
     rsafe = jnp.where(r > 1e-12, r, 1.0)
     gw = (dw / rsafe)[:, :, None] * disp  # (C, M, d, cap_i, cap_j)
     gw = gw * adj[:, :, None]

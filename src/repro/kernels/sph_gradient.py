@@ -16,13 +16,15 @@ and accumulators are fp32 (the paper's high-precision tier).
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bspline
+from repro.kernels import tiling
 
 Array = jnp.ndarray
 
@@ -57,47 +59,21 @@ def _gradient_kernel(
     off_k = off_ref[0]  # (d,) f32
 
     # ---- NNPS tier (low precision): Eq. 7 distance + radius test --------
-    rel_i_lo = rel_i_ref[0].astype(nnps_dtype)
-    rel_j_lo = rel_j_ref[0].astype(nnps_dtype)
-    d2_lo = jnp.zeros((cap, cap), nnps_dtype)
-    for a in range(d):
-        du = (rel_i_lo[a][:, None] - rel_j_lo[a][None, :]) * nnps_dtype(0.5)
-        du = (du - off_k[a].astype(nnps_dtype)) * nnps_dtype(weights[a])
-        d2_lo = d2_lo + du * du
+    d2_lo = tiling.tile_r2_cell(
+        rel_i_ref[0], rel_j_ref[0], off_k, weights, nnps_dtype
+    )
     ok = d2_lo <= nnps_dtype(r2_cell)
-    occ = (occ_i_ref[0][:, None] > 0) & (occ_j_ref[0][None, :] > 0)
-    ok = ok & occ
-    is_self_cell = nb_ref[c, k] == c
-    eye = jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 0) == \
-        jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 1)
-    ok = ok & ~(is_self_cell & eye)
+    ok = ok & tiling.tile_pair_mask(
+        occ_i_ref[0], occ_j_ref[0], nb_ref[c, k] == c, cap
+    )
     adj = ok.astype(jnp.float32)
 
     # ---- physics tier (fp32): B-spline dW/dr and A5 accumulators --------
-    rel_i = rel_i_ref[0].astype(jnp.float32)
-    rel_j = rel_j_ref[0].astype(jnp.float32)
-    disp = []
-    r2 = jnp.zeros((cap, cap), jnp.float32)
-    for a in range(d):
-        du = (rel_i[a][:, None] - rel_j[a][None, :]) * 0.5 - off_k[a]
-        dx = du * hc_phys[a]  # physical x_i - x_j along axis a
-        disp.append(dx)
-        r2 = r2 + dx * dx
-    r = jnp.sqrt(r2)
-
-    if dim == 2:
-        alpha = 15.0 / (7.0 * math.pi * h * h)
-    elif dim == 3:
-        alpha = 3.0 / (2.0 * math.pi * h**3)
-    else:
-        alpha = 1.0 / h
-    R = r * (1.0 / h)
-    dw = (alpha / h) * jnp.where(
-        R < 1.0, -2.0 * R + 1.5 * R * R,
-        jnp.where(R < 2.0, -0.5 * (2.0 - R) ** 2, 0.0),
+    disp, r2 = tiling.tile_phys_disp(
+        rel_i_ref[0], rel_j_ref[0], off_k, hc_phys
     )
-    rsafe = jnp.where(r > 1e-12, r, 1.0)
-    coef = adj * dw / rsafe  # (cap_i, cap_j)
+    r = jnp.sqrt(r2)
+    coef = adj * bspline.dw_over_r(r, h, dim)  # (cap_i, cap_j)
 
     df = f_j_ref[0][None, :] - f_i_ref[0][:, None]  # f_j - f_i
     for a in range(d):

@@ -1,0 +1,87 @@
+"""Shared cell-pair tile math for the RCLL Pallas kernels.
+
+Every cell-blocked kernel in this package (``nnps_pairwise``,
+``sph_gradient``, ``rcll_force``) walks the same structure: grid (C, M),
+block (c, k) holding the self cell's (d, cap) coordinate tile and the
+k-th neighbor cell's tile (scalar-prefetched ``nb_ids``), with the
+neighborhood offset as the exact Eq. (7) integer anchor. These helpers
+are that structure's tile math, factored once so a change to the
+distance arithmetic or masking cannot diverge between kernels.
+
+All functions are plain jnp on (d, cap)/(cap,) tiles — they trace inside
+``pallas_call`` bodies and in the pure-jnp oracles (``kernels/ref.py``)
+identically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def tile_r2_cell(
+    rel_i: Array,  # (d, cap) self-cell relative coords, arithmetic dtype
+    rel_j: Array,  # (d, cap) neighbor-cell relative coords
+    off_k: Array,  # (d,) neighborhood offset (j_cell - i_cell), f32
+    weights: tuple,  # (d,) static anisotropy weights hc_a / hc_ref
+    dtype,
+) -> Array:
+    """Eq. (7) squared distances in reference-cell units, (cap_i, cap_j).
+
+    The NNPS tier: arithmetic runs in ``dtype`` (fp16 paper-faithful /
+    fp32 TPU-native). Static unroll over the 2-3 axes.
+    """
+    d, cap = rel_i.shape
+    ri = rel_i.astype(dtype)
+    rj = rel_j.astype(dtype)
+    d2 = jnp.zeros((cap, cap), dtype)
+    for a in range(d):
+        du = (ri[a][:, None] - rj[a][None, :]) * dtype(0.5)
+        du = (du - off_k[a].astype(dtype)) * dtype(weights[a])
+        d2 = d2 + du * du
+    return d2
+
+
+def tile_phys_disp(
+    rel_i: Array,  # (d, cap) self-cell relative coords (any float dtype)
+    rel_j: Array,  # (d, cap)
+    off_k: Array,  # (d,) f32
+    hc_phys: tuple,  # (d,) static physical cell edges
+) -> tuple[list[Array], Array]:
+    """Physics-tier (fp32) pair displacement x_i - x_j per axis.
+
+    Returns (disp [d x (cap_i, cap_j)], r2 (cap_i, cap_j)). The cell
+    delta I - J is ``-off_k`` (off is j's offset from i), so the decode
+    is ``((rel_i - rel_j)/2 - off) * hc`` — the tile form of
+    ``rcll.decode_pair_disp``.
+    """
+    ri = rel_i.astype(jnp.float32)
+    rj = rel_j.astype(jnp.float32)
+    d = ri.shape[0]
+    disp = []
+    r2 = None
+    for a in range(d):
+        du = (ri[a][:, None] - rj[a][None, :]) * 0.5 - off_k[a]
+        dx = du * hc_phys[a]
+        disp.append(dx)
+        r2 = dx * dx if r2 is None else r2 + dx * dx
+    return disp, r2
+
+
+def tile_occ_pair(occ_i: Array, occ_j: Array) -> Array:
+    """(cap_i, cap_j) bool: both slots occupied."""
+    return (occ_i[:, None] > 0) & (occ_j[None, :] > 0)
+
+
+def tile_self_mask(cap: int) -> Array:
+    """(cap, cap) bool eye via iota (TPU needs >= 2-D iota)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 0) == \
+        jax.lax.broadcasted_iota(jnp.int32, (cap, cap), 1)
+
+
+def tile_pair_mask(
+    occ_i: Array, occ_j: Array, is_self_cell: Array, cap: int
+) -> Array:
+    """Occupancy mask with the self-pair (same cell, same slot) removed."""
+    return tile_occ_pair(occ_i, occ_j) & ~(is_self_cell & tile_self_mask(cap))
