@@ -1,0 +1,103 @@
+"""Diff consecutive BENCH_nnps.json run records and flag regressions.
+
+The perf history file accumulates one record per ``nnps_throughput``
+run, oldest first. This tool compares the two most recent records —
+or an out-of-history candidate record (``--candidate``, produced by
+``nnps_throughput --no-append --out FILE``) against the newest history
+record — matching cases by (n_target, backend, records, skin_frac_hc)
+and flagging every case whose steps/sec dropped by more than
+``--threshold`` (default 15%).
+
+Exit status: 1 if any regression was flagged, else 0. CI runs this as a
+NON-blocking step (``continue-on-error``): CPU runner timings are noisy
+— the flag is a prompt to look, not a gate.
+
+  PYTHONPATH=src python -m benchmarks.compare_bench
+  PYTHONPATH=src python -m benchmarks.compare_bench --candidate smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _case_key(case: dict) -> tuple:
+    return (
+        case.get("n_target"),
+        case.get("backend"),
+        case.get("records", "fp32"),  # pre-half-record rows were fp32
+        case.get("skin_frac_hc"),
+    )
+
+
+def _load_history(path: str) -> list[dict]:
+    with open(path) as f:
+        data = json.load(f)
+    return data if isinstance(data, list) else [data]
+
+
+def compare(old: dict, new: dict, threshold: float) -> tuple[list, list]:
+    """Returns (comparison rows, flagged regressions)."""
+    old_cases = {_case_key(c): c for c in old.get("cases", [])}
+    rows, flagged = [], []
+    for case in new.get("cases", []):
+        key = _case_key(case)
+        prev = old_cases.get(key)
+        if prev is None:
+            continue
+        before, after = prev["steps_per_sec"], case["steps_per_sec"]
+        change = (after - before) / before if before else 0.0
+        regressed = change < -threshold
+        rows.append((key, before, after, change, regressed))
+        if regressed:
+            flagged.append((key, before, after, change))
+    return rows, flagged
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--file", default="BENCH_nnps.json",
+                    help="perf history file (list of run records)")
+    ap.add_argument("--candidate", default=None,
+                    help="standalone record to compare against the newest "
+                    "history record (else: the two newest history records)")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative steps/sec drop that counts as a "
+                    "regression (default 0.15)")
+    args = ap.parse_args(argv)
+
+    history = _load_history(args.file)
+    if args.candidate:
+        with open(args.candidate) as f:
+            new = json.load(f)
+        old = history[-1]
+    else:
+        if len(history) < 2:
+            print("compare_bench: fewer than two run records — nothing "
+                  "to compare")
+            return 0
+        old, new = history[-2], history[-1]
+
+    rows, flagged = compare(old, new, args.threshold)
+    if not rows:
+        print("compare_bench: no matching cases between the two records "
+              "(different sizes/backends) — nothing to compare")
+        return 0
+
+    print(f"{'case (n, backend, records, skin)':<44} "
+          f"{'before':>10} {'after':>10} {'change':>8}")
+    for key, before, after, change, regressed in rows:
+        mark = "  << REGRESSION" if regressed else ""
+        print(f"{str(key):<44} {before:>10.3f} {after:>10.3f} "
+              f"{change:>+7.1%}{mark}")
+    if flagged:
+        print(f"\n{len(flagged)} case(s) regressed more than "
+              f"{args.threshold:.0%} in steps/sec")
+        return 1
+    print("\nno steps/sec regressions beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

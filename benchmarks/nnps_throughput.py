@@ -3,13 +3,15 @@ the persistent-pipeline NNPS diagnostics (Verlet-skin reuse, rebuild
 cost) and an HBM bytes/step model.
 
 For each particle count the Poiseuille channel runs under the production
-persistent RCLL solver with a Verlet skin (cells sized to cover r+skin),
-once per force backend:
+persistent RCLL solver with a Verlet skin (cells sized to cover r+skin):
 
-  * ``reference`` - PR 1's gather path: per-pair arrays (disp, grad W,
-    pair fields) materialized in HBM every step;
-  * ``xla``       - the fused cell-blocked pass (core/fused.py): one
-    record gather + chunked reduction, no (N, K) pair intermediate.
+  * ``reference``          - PR 1's gather path: per-pair arrays (disp,
+    grad W, pair fields) materialized in HBM every step;
+  * ``xla`` records=fp16   - the production half-width record sweep
+    (core/fused.py): one uint16 record gather + one fp32 rho gather per
+    pair, EOS-folded p/ρ², counting-sort rebuild, window search;
+  * ``xla`` records=fp32   - the full-width record sweep (the PR 2
+    layout) as the measured A/B for the record quantization.
 
 Reported per case:
   * steps/sec measured on the donating scan entry point
@@ -18,12 +20,15 @@ Reported per case:
   * physics-only ms/step (a scan of pure ``_physics_step``, no rebuild
     cond) vs the NNPS rebuild cost in ms and the observed rebuild
     frequency — the paper's Table 6 style split;
-  * the analytic HBM bytes/step model for both paths
-    (``fused.estimate_hbm_bytes_per_step``): CPU wall times are a proxy
-    (see _util), the byte ratio is what transfers to TPU/GPU.
+  * the analytic HBM bytes/step model for both paths and both record
+    layouts (``fused.estimate_hbm_bytes_per_step``): CPU wall times are
+    a proxy (see _util), the byte ratio is what transfers to TPU/GPU.
 
 Results are APPENDED to ``BENCH_nnps.json`` (the file holds a list of
-run records, oldest first) so the perf trajectory persists across PRs.
+run records, oldest first) so the perf trajectory persists across PRs;
+``benchmarks/compare_bench.py`` diffs consecutive records. CI smoke runs
+pass ``--no-append`` (optionally with ``--out FILE``) so they never
+pollute the history.
 
 ``--n 1000000`` reaches the paper's 1M-particle case (expect minutes per
 backend on CPU); ``--quick`` runs the 8k case only.
@@ -42,6 +47,7 @@ import numpy as np
 
 from benchmarks._util import emit, time_fn
 from repro.core import cases, fused, solver
+from repro.core.precision import PrecisionPolicy
 
 BENCH_PATH = "BENCH_nnps.json"
 
@@ -56,14 +62,14 @@ def _physics_only(cfg, carry, nsteps):
     return jax.lax.scan(body, carry, None, length=nsteps)[0]
 
 
-def _build(n_target: int, backend: str, skin_frac_hc: float):
+def _build(n_target: int, backend: str, skin_frac_hc: float, records: str):
     ds = float((1.0 / n_target) ** 0.5)
     cell_factor = 1.0 + skin_frac_hc
     max_neighbors = 64 if skin_frac_hc > 0 else 40
     case = cases.PoiseuilleCase(
         ds=ds, L=1.0, Lx=1.0, algo="rcll",
         cell_factor=cell_factor, max_neighbors=max_neighbors,
-        backend=backend,
+        backend=backend, policy=PrecisionPolicy(records=records),
     )
     cfg, st = case.build()
     if skin_frac_hc > 0:
@@ -72,9 +78,13 @@ def _build(n_target: int, backend: str, skin_frac_hc: float):
 
 
 def run_case(
-    n_target: int, backend: str, nsteps: int, skin_frac_hc: float = 0.5
+    n_target: int,
+    backend: str,
+    nsteps: int,
+    skin_frac_hc: float = 0.5,
+    records: str = "fp16",
 ) -> dict:
-    cfg, st, max_neighbors = _build(n_target, backend, skin_frac_hc)
+    cfg, st, max_neighbors = _build(n_target, backend, skin_frac_hc, records)
     n = int(st.xn.shape[0])
 
     # warm the flow a little so velocities/densities are nontrivial
@@ -95,7 +105,7 @@ def run_case(
     carry = jax.block_until_ready(solver.run_persistent(cfg, carry, nsteps))
     rebuilds_before = int(carry.rebuilds)
     times = []
-    timed_segments = 2
+    timed_segments = 3
     for _ in range(timed_segments):
         t0 = time.perf_counter()
         carry = jax.block_until_ready(
@@ -113,6 +123,7 @@ def run_case(
         "n_target": n_target,
         "n_particles": n,
         "backend": backend,
+        "records": records,
         "skin_frac_hc": skin_frac_hc,
         "skin": float(cfg.skin),
         "max_neighbors": k,
@@ -127,7 +138,7 @@ def run_case(
             n, k, d, fused=False
         ),
         "hbm_model_bytes_per_step_fused": fused.estimate_hbm_bytes_per_step(
-            n, k, d, fused=True
+            n, k, d, fused=True, records=records
         ),
     }
     emit("step_throughput", row)
@@ -154,43 +165,73 @@ def main(
     full: bool = True,
     sizes: list[tuple[int, int]] | None = None,
     skin_compare: bool = True,
+    append: bool = True,
+    out: str | None = None,
 ):
     """``full`` selects the 8k+64k grid (benchmarks.run interface);
     ``sizes`` overrides it with explicit (n_target, nsteps) pairs."""
     if sizes is None:
         targets = [8000, 64000] if full else [8000]
         sizes = [(t, default_steps(t)) for t in targets]
+    runs = [("reference", "fp32"), ("xla", "fp32"), ("xla", "fp16")]
     rows = []
     for n_target, nsteps in sizes:
-        for backend in ("reference", "xla"):
-            rows.append(run_case(n_target, backend, nsteps))
+        for backend, records in runs:
+            rows.append(run_case(n_target, backend, nsteps, records=records))
     if skin_compare:
         # PR 1's skin-vs-none tracking metric (fused backend, 8k)
         n0 = sizes[0][0]
         rows.append(run_case(n0, "xla", sizes[0][1], skin_frac_hc=0.0))
 
-    speedups = {}
+    def pick(n_target, backend, records):
+        for r in rows:
+            if (r["n_target"], r["backend"], r["records"]) == (
+                n_target, backend, records
+            ) and r["skin_frac_hc"] > 0:
+                return r
+        return None
+
+    speedups, layout_speedups = {}, {}
     for n_target, _ in sizes:
-        by = {
-            r["backend"]: r for r in rows
-            if r["n_target"] == n_target and r["skin_frac_hc"] > 0
-        }
-        if {"reference", "xla"} <= by.keys():
+        ref = pick(n_target, "reference", "fp32")
+        h16 = pick(n_target, "xla", "fp16")
+        f32 = pick(n_target, "xla", "fp32")
+        if ref and h16:
             speedups[str(n_target)] = round(
-                by["xla"]["steps_per_sec"] / by["reference"]["steps_per_sec"],
-                3,
+                h16["steps_per_sec"] / ref["steps_per_sec"], 3
             )
+        if f32 and h16:
+            layout_speedups[str(n_target)] = round(
+                h16["steps_per_sec"] / f32["steps_per_sec"], 3
+            )
+    k, d = rows[0]["max_neighbors"], 2
+    n0 = rows[0]["n_particles"]
     record = {
-        "label": "fused_force",
+        "label": "half_records",
         "backend": jax.default_backend(),
+        # CPU wall-clocks are machine-sensitive: record the core count so
+        # cross-record comparisons (compare_bench) can be read in context.
+        "cpu_count": os.cpu_count(),
         "cases": rows,
         "steps_per_sec_speedup_fused_vs_gather": speedups,
+        "steps_per_sec_half_vs_fp32_records": layout_speedups,
         "hbm_model_ratio_gather_over_fused": round(
             rows[0]["hbm_model_bytes_per_step_gather"]
-            / rows[0]["hbm_model_bytes_per_step_fused"], 2,
+            / fused.estimate_hbm_bytes_per_step(
+                n0, k, d, fused=True, records="fp16"
+            ), 2,
+        ),
+        "hbm_model_ratio_fp32_over_half_records": round(
+            fused.estimate_hbm_bytes_per_step(n0, k, d, records="fp32")
+            / fused.estimate_hbm_bytes_per_step(n0, k, d, records="fp16"),
+            2,
         ),
     }
-    _append_record(record)
+    if append:
+        _append_record(record)
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
     emit("step_throughput_summary", speedups)
     return record
 
@@ -207,6 +248,16 @@ if __name__ == "__main__":
         "--nsteps", type=int, default=None,
         help="timed steps per segment (default: scaled by size)",
     )
+    ap.add_argument(
+        "--no-append", action="store_true",
+        help="do not append the run record to BENCH_nnps.json (CI smoke "
+        "runs must not pollute the perf history)",
+    )
+    ap.add_argument(
+        "--out", type=str, default=None,
+        help="also write this run's record to a standalone JSON file "
+        "(pairs with compare_bench --candidate)",
+    )
     args = ap.parse_args()
     if args.n:
         targets = args.n
@@ -215,4 +266,9 @@ if __name__ == "__main__":
     else:
         targets = [8000, 64000]
     sizes = [(t, args.nsteps or default_steps(t)) for t in targets]
-    main(sizes=sizes, skin_compare=not args.n)
+    main(
+        sizes=sizes,
+        skin_compare=not args.n,
+        append=not args.no_append,
+        out=args.out,
+    )

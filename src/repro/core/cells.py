@@ -65,10 +65,7 @@ def _table_from_sorted(
     """
     npart = sorted_cid.shape[0]
     counts = jnp.bincount(sorted_cid, length=n_total).astype(jnp.int32)
-    starts = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)[:-1]]
-    )
-    slot = jnp.arange(npart, dtype=jnp.int32) - starts[sorted_cid]
+    slot = jnp.arange(npart, dtype=jnp.int32) - exclusive_cumsum(counts)[sorted_cid]
     keep = slot < capacity
     overflow = jnp.sum(~keep).astype(jnp.int32)
     # Route dropped entries to a scratch row we slice off afterwards.
@@ -187,30 +184,153 @@ def inverse_permutation(order: Array) -> Array:
     return inv.at[order].set(jnp.arange(n, dtype=jnp.int32))
 
 
+def exclusive_cumsum(counts: Array) -> Array:
+    """Exclusive prefix sum of per-cell counts: packed start of each cell."""
+    return jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)[:-1]]
+    )
+
+
+def _packed_table(n_total: int, counts: Array, capacity: int):
+    """(C, cap) table of consecutive packed ids — pure arithmetic, no sort
+    and no scatter.
+
+    Packed ids are cell-sorted by construction, so cell c's occupants are
+    exactly ``starts[c] .. starts[c] + counts[c] - 1``; slots past the
+    occupancy (or past ``capacity``) are -1. Returns
+    (table, starts, overflow).
+    """
+    starts = exclusive_cumsum(counts)
+    slot = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    occ = slot < jnp.minimum(counts, capacity)[:, None]
+    table = jnp.where(occ, starts[:, None] + slot, -1)
+    overflow = jnp.sum(jnp.maximum(counts - capacity, 0)).astype(jnp.int32)
+    return table, starts, overflow
+
+
+def _counting_sort_positions(
+    domain: Domain,
+    cell_id: Array,  # (N,) flat cell id per particle, current order
+    cell_xy: Array,  # (N, d) per-axis cell coords
+    prev_cell_id: Array,  # (N,) PREVIOUS flat cell id (non-decreasing)
+    prev_counts: Array,  # (C,) previous per-cell occupancy
+    prev_cell_xy: Array,  # (N, d) previous per-axis cell coords
+) -> Array:
+    """Stable counting-sort positions: bincount → exclusive scan → rank.
+
+    Computes, for every particle, its slot under a STABLE sort by
+    ``cell_id`` (ties broken by current array position) — the identical
+    permutation to ``jnp.argsort(cell_id, stable=True)`` — in O(3^d · N)
+    vectorized passes with no sort anywhere.
+
+    The O(N) rank trick reuses the previous rebuild's near-sorted order:
+    the current arrays are grouped by ``prev_cell_id`` (runs), and under
+    the Verlet-skin invariant every particle's cell moved by at most one
+    cell per axis (min-image) since then, so a particle's stable rank
+    within its new cell splits into (a) whole earlier runs that sent
+    particles to the same cell — a (C, 3^d) arrival histogram read — and
+    (b) a within-run exclusive prefix count over the 3^d migration
+    offsets — one cumsum per offset.
+
+    PRECONDITION (guarded by the caller's ``lax.cond``): per-axis
+    min-image cell deltas all in {-1, 0, 1}.
+    """
+    dim = domain.dim
+    m = 3**dim
+    c_total = domain.ncells_total
+    offs = jnp.asarray(neighbor_cell_offsets(dim))  # (m, d)
+    delta = domain.wrap_cell_delta(cell_xy - prev_cell_xy)  # (N, d)
+    # Categorical migration-offset index, matching offs enumeration order.
+    o = delta[:, 0] + 1
+    for a in range(1, dim):
+        o = o * 3 + (delta[:, a] + 1)
+    # Arrival histogram: D[c, k] = particles that moved into cell c via
+    # offset k. Row sums are the new per-cell counts.
+    d_hist = jnp.bincount(
+        cell_id * m + o, length=c_total * m
+    ).astype(jnp.int32).reshape(c_total, m)
+    # (a) whole-run term: arrivals into my new cell from strictly earlier
+    # runs. Source run of offset k is src = wrap(new_xy - offs[k]).
+    src = cell_xy[:, None, :] - offs[None, :, :]  # (N, m, d)
+    n_ax = jnp.asarray(domain.ncells, dtype=jnp.int32)
+    per = jnp.asarray(np.asarray(domain.periodic))
+    wrapped = jnp.where(per, src % n_ax, src)
+    valid = jnp.all((wrapped >= 0) & (wrapped < n_ax), axis=-1)  # (N, m)
+    clipped = jnp.clip(wrapped, 0, n_ax - 1)
+    src_flat = clipped[..., 0]
+    for a in range(1, dim):
+        src_flat = src_flat * domain.ncells[a] + clipped[..., a]
+    g = prev_cell_id
+    before = jnp.sum(
+        jnp.where(valid & (src_flat < g[:, None]), d_hist[cell_id], 0), axis=1
+    ).astype(jnp.int32)
+    # (b) within-run term: earlier particles of MY run with my offset
+    # (same run + same offset <=> same new cell, since runs share a
+    # source cell and distinct offsets land in distinct cells).
+    seg_start = exclusive_cumsum(prev_counts)[g]  # (N,)
+    within = jnp.zeros_like(cell_id)
+    for k in range(m):
+        mk = (o == k).astype(jnp.int32)
+        ex = jnp.cumsum(mk).astype(jnp.int32) - mk  # exclusive prefix
+        within = within + jnp.where(o == k, ex - ex[seg_start], 0)
+    starts_new = exclusive_cumsum(jnp.sum(d_hist, axis=1))
+    return starts_new[cell_id] + before + within
+
+
+def _argsort_positions(cell_id: Array) -> Array:
+    """Oracle path: stable-argsort positions (new packed slot of each row)."""
+    order = jnp.argsort(cell_id, stable=True).astype(jnp.int32)
+    return inverse_permutation(order)
+
+
 def pack_particles(
-    domain: Domain, cell_id: Array, cell_xy: Array, capacity: int
+    domain: Domain,
+    cell_id: Array,
+    cell_xy: Array,
+    capacity: int,
+    prev: CellBinning | None = None,
 ) -> CellPacking:
     """Spatially sort particles by flat cell id and bin the sorted set.
 
-    One stable argsort serves both purposes: it IS the paper's locality
-    sort, and because the sorted set is cell-contiguous the cell table is
-    filled with consecutive packed indices (table[c, s] = starts[c] + s)
-    without a second sort.
+    ``prev=None`` (cold start / unknown order) stable-argsorts: that IS
+    the paper's locality sort, and because the sorted set becomes
+    cell-contiguous the cell table holds consecutive packed indices
+    (``table[c, s] = starts[c] + s``) built without any scatter.
+
+    With ``prev`` — the binning of the order the input arrays are
+    CURRENTLY in (the persistent pipeline's previous rebuild) — the sort
+    is replaced by a counting-sort pack (bincount → exclusive scan →
+    stable rank → one scatter): the previous near-sorted order bounds
+    every migration to the 3^d cell neighborhood, making stable ranks an
+    O(N) computation. A ``lax.cond`` falls back to the argsort oracle if
+    any particle moved further (the permutation is identical either way).
     """
     npart = cell_id.shape[0]
-    order = jnp.argsort(cell_id, stable=True).astype(jnp.int32)
-    inverse = inverse_permutation(order)
-    sorted_cid = cell_id[order]
-    packed_ids = jnp.arange(npart, dtype=jnp.int32)
-    table, counts, overflow = _table_from_sorted(
-        domain.ncells_total, sorted_cid, packed_ids, capacity
+    if prev is None:
+        pos = _argsort_positions(cell_id)
+    else:
+        delta = domain.wrap_cell_delta(cell_xy - prev.cell_xy)
+        adjacent = jnp.max(jnp.abs(delta)) <= 1
+        pos = jax.lax.cond(
+            adjacent,
+            lambda args: _counting_sort_positions(domain, *args),
+            lambda args: _argsort_positions(args[0]),
+            (cell_id, cell_xy, prev.cell_id, prev.counts, prev.cell_xy),
+        )
+    inverse = pos
+    order = jnp.zeros((npart,), jnp.int32).at[pos].set(
+        jnp.arange(npart, dtype=jnp.int32)
     )
+    counts = jnp.bincount(cell_id, length=domain.ncells_total).astype(
+        jnp.int32
+    )
+    table, _, overflow = _packed_table(domain.ncells_total, counts, capacity)
     binning = CellBinning(
         table=table,
         counts=counts,
-        cell_id=sorted_cid,
+        cell_id=cell_id[order],
         cell_xy=cell_xy[order],
-        order=packed_ids,  # packed arrays are already cell-sorted
+        order=jnp.arange(npart, dtype=jnp.int32),  # already cell-sorted
         overflow=overflow,
     )
     return CellPacking(order=order, inverse=inverse, binning=binning)

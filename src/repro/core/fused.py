@@ -10,17 +10,39 @@ rho, p/ρ²), each a strided walk over the particle arrays. Profiling
 This module evaluates the same sums with two structural changes:
 
 **One record gather per sweep.** All per-particle inputs of a sweep are
-packed into a single fp32 record row (Domínguez et al.'s float4-texture
-trick, arXiv:1110.3711): ``[q (d) | v (d) | m]`` for the continuity
-sweep, plus ``[rho | p/ρ²]`` for the momentum sweep. A sweep then gathers
-``rec[idx]`` once — contiguous rows, cache-line friendly — instead of
-5-6 scalar gathers. ``q = I + x/2`` is the particle position in per-axis
-*cell units*, built from the RCLL state by exact fp32 arithmetic: the
-integer cell coordinate is exact in fp32 and the fp16 payload halving is
-exact, so ``q_i - q_j`` reproduces the Eq. (7) anchored decode to ~1 ulp
-of q — two orders of magnitude below the fp16 *storage* granularity that
-bounds both decodes. Periodic axes wrap by minimum image on the integer
-cell span.
+packed into a single record row (Domínguez et al.'s float4-texture
+trick, arXiv:1110.3711). A sweep then gathers ``rec[idx]`` once —
+contiguous rows, cache-line friendly — instead of 5-6 scalar gathers.
+Two layouts, selected by ``PrecisionPolicy.records``:
+
+  * ``records="fp32"`` (the accuracy oracle): one fp32 row
+    ``[q | v | m | 1/ρ | p/ρ²]`` where ``q = I + x/2`` is the position
+    in per-axis *cell units*, built from the RCLL state by exact fp32
+    arithmetic: the integer cell coordinate is exact in fp32 and the
+    fp16 payload halving is exact, so ``q_i - q_j`` reproduces the
+    Eq. (7) anchored decode to ~1 ulp of q — two orders of magnitude
+    below the fp16 *storage* granularity that bounds both decodes.
+  * ``records="fp16"``/``"bf16"`` (the half-width production layout —
+    the bandwidth round): one 16-bit row ``[I | rel | v | m]`` plus a
+    single separate fp32 ``1/ρ`` gather. The coordinate payload is the
+    RAW RCLL storage value (fp16 rel — lossless by construction,
+    exactly the paper's point that cell-relative values are fp16-safe)
+    next to its integer cell anchor (see ``_records_half`` for the two
+    row encodings); v is quantized to the records dtype, m is stored
+    normalized by ``mass_scale`` (raw SPH masses go subnormal in fp16
+    at fine ds — every pair term is linear in m, so the sweep rescales
+    its outputs once); the density tier stays fp32 as the reciprocal,
+    and ``p/ρ² = c0²(1/ρ − ρ0/ρ²)`` is recomputed *division-free*
+    in-register through the linearized Tait EOS
+    (``sph.eos_tait_por2_inv``) instead of being gathered — the flops
+    are free on a bandwidth-bound sweep and 4 bytes per pair disappear.
+    Everything upcasts to fp32 before any pair arithmetic
+    (``q = I + rel/2`` is the SAME exact fp32 value as the fp32 layout
+    stores), so the only deviation from the oracle is the v/m storage
+    quantization itself. 2-D bytes per pair: 7×16-bit + 1×fp32 = 18 vs
+    7×fp32 = 28.
+
+Periodic axes wrap by minimum image on the integer cell span.
 
 **Chunked reduction, no pair HBM round-trip.** Particles are cell-sorted
 in the persistent pipeline, so a contiguous run of packed rows IS a
@@ -43,12 +65,13 @@ drho to exist (a global barrier) before any momentum term, i.e. a
 second full geometry sweep.
 
 Masking note: there is no per-pair mask at all. Invalid neighbor slots
-are redirected to a dummy record row (index N) holding ``m = 0`` (and
-``rho = 1`` so denominators stay positive): every pair term carries an
-m_j factor, and the B-spline derivative vanishes identically beyond the
-support 2h and at r = 0, so invalid slots, padding rows, the self pair,
-and Verlet-skin extras all contribute an exact 0.0 without any per-term
-select or (N, K) boolean traffic in the hot loop.
+are redirected to a dummy record row (index N) holding ``m = 0`` (with
+the density field kept positive so denominators stay finite): every
+pair term carries an m_j factor, and the B-spline derivative vanishes
+identically beyond the support 2h and at r = 0, so invalid slots,
+padding rows, the self pair, and Verlet-skin extras all contribute an
+exact 0.0 without any per-term select or (N, K) boolean traffic in the
+hot loop.
 """
 from __future__ import annotations
 
@@ -60,23 +83,34 @@ import jax.numpy as jnp
 from repro.core import bspline, rcll, sph
 from repro.core.domain import Domain
 from repro.core.nnps import NeighborList
+from repro.core.precision import dtype_of
 
 Array = jnp.ndarray
 
-#: Default rows per chunk. At K = 64, d = 2 this bounds live pair
-#: intermediates to a few MB — L2/L3-resident on CPU hosts.
+#: Default rows per chunk of the mapped sweep. At K = 64, d = 2 this
+#: bounds live pair intermediates to a few MB — cache-resident on CPU
+#: hosts (measured best among {2048..16384} at N = 64k).
 DEFAULT_CHUNK = 8192
+
+#: Below this row count the sweep runs as ONE chunk (no lax.map): the
+#: intermediates fit in cache anyway and skipping the loop + pad was
+#: measurably faster at N = 8k.
+SINGLE_CHUNK_MAX = 12288
 
 
 def resolve_chunk(n: int, chunk: int = 0) -> int:
-    """Static chunk size: ``chunk`` (or DEFAULT_CHUNK), equalized.
+    """Static chunk size: ``chunk`` (0 = auto), equalized.
 
-    The requested size fixes the number of chunks; the returned size is
-    the smallest that still covers n in that many — e.g. n=8455 with a
-    8192 request becomes 2 chunks of 4228 instead of 8192+263 (which
-    would waste ~48% of the second chunk's pair work on padding).
+    Auto picks one chunk for small n (<= SINGLE_CHUNK_MAX) and
+    DEFAULT_CHUNK above. The requested size fixes the number of chunks;
+    the returned size is the smallest that still covers n in that many —
+    e.g. n=8455 with a 4096 request becomes 3 chunks of 2819 instead of
+    2x4096+263 (which would waste ~93% of the last chunk's pair work on
+    padding).
     """
-    c = max(1, min(n, chunk if chunk > 0 else DEFAULT_CHUNK))
+    if chunk <= 0:
+        chunk = n if n <= SINGLE_CHUNK_MAX else DEFAULT_CHUNK
+    c = max(1, min(n, chunk))
     nchunk = -(-n // c)
     return -(-n // nchunk)
 
@@ -157,8 +191,41 @@ def _pair_geometry(domain: Domain, q_i, q_j):
     return disp, r2, coef
 
 
+def _pair_rhs(
+    domain: Domain,
+    q_i, q_j,  # (..., d) fp32 cell-unit coords
+    v_i, v_j,  # (..., d) fp32
+    mj,  # (...,) fp32, 0 on invalid slots
+    por2_i, por2_j,  # (...,) fp32 p/ρ²
+    inv_i, inv_j,  # (...,) fp32 reciprocal densities 1/ρ
+    *,
+    mu: float,
+):
+    """(drho, acc) pair sums over the trailing K axis.
+
+    The ONE arithmetic body both record layouts decode into: the pair
+    algebra folds the shared scalar coefficient first (s = coef *
+    pair-coefficient, then s * disp_a / s * dv_a), an exact regrouping
+    of ``sph.momentum_rhs_terms`` / ``continuity_rhs_pairs`` — same
+    terms, fewer per-axis multiplies. Densities enter as reciprocals
+    (see ``sph.eos_tait_por2_inv``).
+    """
+    disp, r2, coef = _pair_geometry(domain, q_i, q_j)
+    dv = v_i - v_j
+    # Σ m_j (dv·∇W): ∇W_a = coef·disp_a -> fold coef out of the dot.
+    drho = jnp.sum(mj * coef * jnp.sum(dv * disp, axis=-1), axis=-1)
+    # Pressure: -Σ [m_j (p/ρ²_i + p/ρ²_j) coef] disp_a.
+    pc = sph.pressure_pair_coef(mj, por2_i, por2_j) * coef
+    # Viscosity: x·∇W = coef·r2 (already folded in the shared coef).
+    vc = sph.viscosity_pair_coef_inv(
+        mj, coef * r2, inv_i, inv_j, r2, h=domain.h, mu=mu
+    )
+    acc = jnp.sum(vc[..., None] * dv - pc[..., None] * disp, axis=-2)
+    return drho, acc
+
+
 def _records(rc: rcll.RCLLState, v: Array, m: Array, *extra: Array) -> Array:
-    """(N+1, 2d+1+len(extra)) record rows [q | v | m | extra...].
+    """(N+1, 2d+1+len(extra)) fp32 record rows [q | v | m | extra...].
 
     Row N is the dummy target of invalid neighbor slots: m = 0 zeroes
     every pair term exactly; extras default to 1.0 so denominator fields
@@ -173,12 +240,90 @@ def _records(rc: rcll.RCLLState, v: Array, m: Array, *extra: Array) -> Array:
     return jnp.concatenate([rec, dummy], axis=0)
 
 
+def _u16(x: Array) -> Array:
+    return jax.lax.bitcast_convert_type(x, jnp.uint16)
+
+
+#: Largest per-axis cell count whose integer coordinates are exactly
+#: representable in the half-record coordinate column (fp16 integers are
+#: exact through 2^11; bf16 rides in a uint16 row, exact through 2^16).
+HALF_CELL_LIMIT = {jnp.dtype(jnp.float16): 1 << 11,
+                   jnp.dtype(jnp.bfloat16): 1 << 16}
+
+
+def mass_scale(m: Array) -> Array:
+    """Normalizer for the half-record mass column: mean |m|.
+
+    SPH masses are ~rho0·ds^dim — far below fp16's normal range once ds
+    is small (ds=1e-3 in 2-D gives m~1e-6: subnormal, ~0.2-3%
+    quantization; below 6e-8 it flushes to exactly 0). Every pair term
+    is LINEAR in m_j, so the record stores m/scale (O(1), full fp16
+    precision) and the sweep multiplies its outputs by scale once —
+    resolution-independent accuracy for two O(N) multiplies.
+    """
+    return jnp.maximum(
+        jnp.mean(jnp.abs(m)).astype(jnp.float32), jnp.float32(1e-30)
+    )
+
+
+def _records_half(
+    rc: rcll.RCLLState, v: Array, m: Array, records_dtype
+) -> Array:
+    """(N+1, 3d+1) half-width record rows [I | rel | v | m].
+
+    ``m`` must arrive pre-normalized by ``mass_scale`` (callers rescale
+    the sweep outputs).
+
+    Two encodings of the same 16-bit row, chosen by the records dtype:
+
+      * fp16: one PLAIN fp16 array — the cell coordinate is stored as an
+        fp16 VALUE (exact: grids are guarded to < 2^11 cells per axis),
+        rel is the raw RCLL storage value, v/m are fp16. The sweep then
+        decodes with a single upconvert and zero bitcasts — measured
+        ~25% faster than a bitcast row on CPU, and TPU VPUs upconvert
+        fp16 storage for free.
+      * bf16: a uint16-bitcast row — rel must stay fp16 (bf16's 8-bit
+        mantissa would quantize the coordinate), so the row mixes uint16
+        cell values, fp16 rel bits, and bf16 v/m bits.
+
+    Either way the decode reconstructs the IDENTICAL fp32 values. Row N
+    is the all-zero dummy row (m = 0 kills every term).
+    """
+    d = rc.rel.shape[1]
+    if jnp.dtype(records_dtype) == jnp.float16:
+        rec = jnp.concatenate(
+            [
+                rc.cell_xy.astype(jnp.float16),
+                rc.rel.astype(jnp.float16),
+                v.astype(jnp.float16),
+                m.astype(jnp.float16)[:, None],
+            ],
+            axis=1,
+        )
+        pad = jnp.zeros((1, 3 * d + 1), jnp.float16)
+    else:
+        rec = jnp.concatenate(
+            [
+                rc.cell_xy.astype(jnp.uint16),
+                _u16(rc.rel.astype(jnp.float16)),
+                _u16(v.astype(records_dtype)),
+                _u16(m.astype(records_dtype))[:, None],
+            ],
+            axis=1,
+        )
+        pad = jnp.zeros((1, 3 * d + 1), jnp.uint16)
+    return jnp.concatenate([rec, pad], axis=0)
+
+
 def _sanitized_idx(nl: NeighborList, n: int) -> Array:
     """Neighbor ids with invalid slots redirected to the dummy row N."""
     return jnp.where(nl.mask, nl.idx, jnp.int32(n))
 
 
-@partial(jax.jit, static_argnames=("domain", "chunk", "mu"))
+@partial(
+    jax.jit,
+    static_argnames=("domain", "chunk", "mu", "c0", "rho0", "records"),
+)
 def force_rhs(
     domain: Domain,
     rc: rcll.RCLLState,  # packed (N, d) state
@@ -186,83 +331,170 @@ def force_rhs(
     v: Array,  # (N, d) f32
     m: Array,  # (N,) f32
     rho: Array,  # (N,) f32 current density
-    p: Array,  # (N,) f32 EOS pressure of ``rho``
+    *,
+    c0: float,  # EOS speed of sound (p and p/ρ² are derived in here)
+    rho0: float = 1.0,
     chunk: int = 0,
     mu: float = 0.0,
+    records: str = "fp32",
     idx_dummy: Array | None = None,
 ) -> tuple[Array, Array]:
     """The full WCSPH pair RHS in ONE cell-blocked pass.
 
     Returns (drho (N,), acc (N, d)): the continuity sum and the momentum
     sum (pressure + Morris viscosity), both at the current state. One
-    record gather and one geometry decode feed both sums; no (N, K)
-    intermediate exists outside the live chunk. Body force and the
-    fixed-particle mask are applied by the caller (per-particle terms —
-    nothing pairwise about them).
+    record gather (plus, in the half-width layout, one fp32 rho gather)
+    and one geometry decode feed both sums; no (N, K) intermediate
+    exists outside the live chunk. Body force and the fixed-particle
+    mask are applied by the caller (per-particle terms — nothing
+    pairwise about them).
+
+    ``records`` selects the record layout (see module docstring):
+    "fp32" is the full-width accuracy oracle, "fp16"/"bf16" the
+    half-width production layout. Both run the identical fp32 pair
+    arithmetic (``_pair_rhs``) on their decoded slabs, so half-width
+    results are bit-identical to fp32-record results whenever v and m
+    are exactly representable in the records dtype.
 
     ``idx_dummy``: optional pre-sanitized neighbor ids (invalid -> N).
     The persistent solver computes them once per REBUILD (the list is
     static between rebuilds) instead of once per step.
-
-    The pair algebra folds the shared scalar coefficient first
-    (s = coef * pair-coefficient, then s * disp_a / s * dv_a), which is
-    an exact regrouping of ``sph.momentum_rhs_terms`` /
-    ``continuity_rhs_pairs`` — same terms, fewer per-axis multiplies.
     """
     d = domain.dim
-    hh = domain.h  # smoothing length: gradient and viscosity guard alike
     n = rc.rel.shape[0]
-    rec = _records(rc, v, m, rho, p / (rho * rho))
-    rec = rec.at[n, 2 * d + 2].set(0.0)  # dummy p/ρ² (rho stays 1)
+    rdt = dtype_of(records)
+    half = jnp.dtype(rdt).itemsize == 2
+    if half and max(domain.ncells) >= HALF_CELL_LIMIT[jnp.dtype(rdt)]:
+        raise ValueError(
+            "half-width records store cell coordinates in 16-bit rows "
+            f"(exact through {HALF_CELL_LIMIT[jnp.dtype(rdt)]} cells per "
+            f"axis for records={records!r}); grid {domain.ncells} exceeds "
+            "that — use records='fp32'"
+        )
     idx = _sanitized_idx(nl, n) if idx_dummy is None else idx_dummy
+    # The single fp32 density field of BOTH layouts is the reciprocal:
+    # p/ρ² becomes division-free per pair (sph.eos_tait_por2_inv) and
+    # the viscosity ρ-product division disappears. N divisions once
+    # instead of N·K per sweep.
+    inv = (1.0 / rho).astype(jnp.float32)
+
+    if not half:
+        rec = _records(rc, v, m, inv, sph.eos_tait_por2_inv(inv, rho0, c0))
+        rec = rec.at[n, 2 * d + 2].set(0.0)  # dummy p/ρ² (1/ρ stays 1)
+
+        def body(args):
+            idx_c, rec_i = args
+            rec_j = rec[idx_c]  # ONE gather: (chunk, K, 2d+3)
+            return _pair_rhs(
+                domain,
+                rec_i[:, None, :d], rec_j[..., :d],
+                rec_i[:, None, d:2 * d], rec_j[..., d:2 * d],
+                rec_j[..., 2 * d],  # m_j: 0 on the dummy row
+                rec_i[:, None, 2 * d + 2], rec_j[..., 2 * d + 2],
+                rec_i[:, None, 2 * d + 1], rec_j[..., 2 * d + 1],
+                mu=mu,
+            )
+
+        pad_rows = (jnp.full((idx.shape[1],), n, jnp.int32), rec[n])
+        return _map_chunks(body, (idx, rec[:n]), pad_rows, n, chunk)
+
+    m_scale = mass_scale(m)
+    rec16 = _records_half(rc, v, m.astype(jnp.float32) / m_scale, rdt)
+    # Dummy 1/ρ = 1/ρ0: p/ρ² decodes to ~0 and denominators stay
+    # positive; m = 0 on the dummy row kills every pair term regardless.
+    inv32 = jnp.concatenate(
+        [inv, jnp.full((1,), 1.0 / rho0, jnp.float32)]
+    )
+
+    plain = jnp.dtype(rdt) == jnp.float16  # plain-fp16 row, no bitcasts
+
+    def decode(r16):
+        """ONE upconvert of the whole gathered row -> (q, v, m) fp32.
+
+        q = I + rel/2 is the exact fp32 value the full-width row
+        stores, so past this point the body is the fp32 body.
+        """
+        if plain:
+            r32 = r16.astype(jnp.float32)
+        else:  # bf16: mixed-bits row [u16 cell | f16 rel | bf16 v m]
+            r32 = jnp.concatenate(
+                [
+                    r16[..., :d].astype(jnp.float32),
+                    jax.lax.bitcast_convert_type(
+                        r16[..., d:2 * d], jnp.float16
+                    ).astype(jnp.float32),
+                    jax.lax.bitcast_convert_type(
+                        r16[..., 2 * d:], rdt
+                    ).astype(jnp.float32),
+                ],
+                axis=-1,
+            )
+        q = r32[..., :d] + r32[..., d:2 * d] * 0.5
+        return q, r32[..., 2 * d:3 * d], r32[..., 3 * d]
 
     def body(args):
-        idx_c, rec_i = args
-        rec_j = rec[idx_c]  # ONE gather: (chunk, K, 2d+3)
-        disp, r2, coef = _pair_geometry(
-            domain, rec_i[:, None, :d], rec_j[..., :d]
+        idx_c, r16_i, inv_i = args
+        r16_j = rec16[idx_c]  # ONE half-width gather: (chunk, K, 3d+1)
+        inv_j = inv32[idx_c]  # the single fp32 pair field
+        q_i, v_i, _ = decode(r16_i)
+        q_j, v_j, m_j = decode(r16_j)
+        return _pair_rhs(
+            domain,
+            q_i[:, None, :], q_j,
+            v_i[:, None, :], v_j,
+            m_j,
+            sph.eos_tait_por2_inv(inv_i, rho0, c0)[:, None],
+            sph.eos_tait_por2_inv(inv_j, rho0, c0),
+            inv_i[:, None], inv_j,
+            mu=mu,
         )
-        dv = rec_i[:, None, d:2 * d] - rec_j[..., d:2 * d]
-        mj = rec_j[..., 2 * d]  # 0 on the dummy row
-        # Σ m_j (dv·∇W): ∇W_a = coef·disp_a -> fold coef out of the dot.
-        drho = jnp.sum(mj * coef * jnp.sum(dv * disp, axis=-1), axis=-1)
-        # Pressure: -Σ [m_j (p/ρ²_i + p/ρ²_j) coef] disp_a.
-        pc = sph.pressure_pair_coef(
-            mj, rec_i[:, None, 2 * d + 2], rec_j[..., 2 * d + 2]
-        ) * coef
-        # Viscosity: x·∇W = coef·r2 (already folded in the shared coef).
-        vc = sph.viscosity_pair_coef(
-            mj, coef * r2,
-            rec_i[:, None, 2 * d + 1], rec_j[..., 2 * d + 1],
-            r2, h=hh, mu=mu,
-        )
-        acc = jnp.sum(vc[..., None] * dv - pc[..., None] * disp, axis=-2)
-        return drho, acc
 
-    pad_rows = (jnp.full((idx.shape[1],), n, jnp.int32), rec[n])
-    return _map_chunks(body, (idx, rec[:n]), pad_rows, n, chunk)
+    pad_rows = (
+        jnp.full((idx.shape[1],), n, jnp.int32), rec16[n], inv32[n]
+    )
+    drho, acc = _map_chunks(
+        body, (idx, rec16[:n], inv32[:n]), pad_rows, n, chunk
+    )
+    return drho * m_scale, acc * m_scale  # undo the mass normalization
+
+
+def record_bytes_per_pair(d: int, records: str = "fp32") -> int:
+    """Record bytes gathered per neighbor pair under a record layout.
+
+    fp32: one (2d+3)-column fp32 row. Half-width: one (3d+1)-column
+    uint16 row plus the single fp32 rho gather (p/ρ² is recomputed
+    in-register from 1/rho — see ``sph.eos_tait_por2_inv``).
+    """
+    if jnp.dtype(dtype_of(records)).itemsize == 2:
+        return (3 * d + 1) * 2 + 4
+    return (2 * d + 3) * 4
 
 
 def estimate_hbm_bytes_per_step(
-    n: int, k: int, d: int, fused: bool, itemsize: int = 4
+    n: int, k: int, d: int, fused: bool = True, records: str = "fp32"
 ) -> int:
     """Back-of-envelope HBM pair-traffic model for one physics step.
 
     Gather (reference) path materializes, per step: disp (N,K,d), r
     (N,K), gw (N,K,d), dv (N,K,d), mj (N,K), plus per-term coefficient
     arrays pij/x_dot_gw/rho_ij/coef (N,K) — ~(6d + 9) N·K fp32 write+read
-    round-trips — and performs ~6 scalar neighbor gathers. Fused path
-    touches the neighbor ids once (idx int32 + mask bool in the
-    sanitize, sanitized idx write + read back), ONE record-row gather
-    for the single sweep ((2d+3) fp32 per pair), and O(N) per-particle
-    in/out; pair intermediates never leave cache.
+    round-trips — and performs ~6 scalar neighbor gathers.
+
+    Fused path, per step: ONE sanitized-id read per pair (int32 — the
+    sanitize itself, idx + mask read and idx_dummy write, happens once
+    per REBUILD since PR 2 and is amortized out of the per-step model,
+    which the PR 2 model overcounted), the record gather
+    (``record_bytes_per_pair`` — layout-dependent), and O(N)
+    per-particle traffic (record build write + self-row read + drho/acc
+    out); pair intermediates never leave cache.
     """
     nk = n * k
     if fused:
-        ids = nk * (4 + 1 + 2 * 4)  # idx+mask read, idx_s write+read
-        gathers = nk * (2 * d + 3) * itemsize  # one record row, one sweep
-        per_particle = n * (2 * (2 * d + 3) + d + 1) * itemsize
+        ids = nk * 4  # sanitized idx read, one sweep
+        rec = record_bytes_per_pair(d, records)
+        gathers = nk * rec
+        per_particle = n * (2 * rec + (d + 1) * 4)
         return ids + gathers + per_particle
     round_trips = 2 * (6 * d + 9)  # write + read back of each pair array
-    gathers = nk * (2 * d + 3 + d) * itemsize  # rel/cell/v/m/rho/p scalar
-    return nk * round_trips * itemsize + gathers
+    gathers = nk * (2 * d + 3 + d) * 4  # rel/cell/v/m/rho/p scalar
+    return nk * round_trips * 4 + gathers

@@ -346,6 +346,109 @@ def rcll_neighbors(
     return NeighborList(idx, mask, jnp.sum(ok, axis=1).astype(jnp.int32))
 
 
+def rcll_neighbors_windows(
+    domain: Domain,
+    rel: Array,  # (N, d) CELL-SORTED relative coords (storage dtype)
+    cell_xy: Array,  # (N, d) int32 cell coords, cell-sorted
+    counts: Array,  # (C,) int32 per-cell occupancy of the sorted arrays
+    *,
+    dtype=jnp.float16,
+    compute_dtype=None,
+    k: int,
+    window: int,
+    radius_cell: float | None = None,
+    include_self: bool = False,
+) -> NeighborList:
+    """Table-free RCLL search over cell-SORTED particle arrays.
+
+    The counting-sort byproducts are the whole data structure: because
+    packed ids are contiguous per cell (and row-major cell order makes
+    runs of last-axis-adjacent cells contiguous too), every particle's
+    candidate set is 3^(d-1) contiguous index ranges
+    ``starts[c_lo] .. starts[c_hi] + counts[c_hi]`` — no (C, cap) table
+    is built and no candidate-id gather happens: candidate ids are
+    ``begin + iota`` arithmetic, and the coordinate gather reads
+    near-contiguous memory. (A periodic LAST axis breaks the 3-cell run
+    contiguity at the seam, so that case falls back to 3^d single-cell
+    ranges; leading-axis periodicity only changes which runs are read.)
+
+    window: static candidate slots per contiguous range. ``3 * capacity``
+    preserves the dense-table guarantee exactly; tighter windows trade
+    guarantee for bandwidth and are flagged: a range longer than
+    ``window`` marks the particle's ``count`` with the ``k + 1`` sentinel
+    so ``NeighborList.overflowed`` (and the solver's overflow plumbing)
+    reports the truncation.
+    """
+    n, dim = rel.shape
+    cdt = compute_dtype or dtype
+    starts = cells_lib.exclusive_cumsum(counts)
+    nc = domain.ncells
+    # Static run descriptors: (leading-axes offset, lo/hi last-axis offset).
+    if dim > 1:
+        lead_offs = cells_lib.neighbor_cell_offsets(dim - 1)
+    else:
+        lead_offs = np.zeros((1, 0), np.int32)
+    if domain.periodic[-1]:
+        runs = [(lo, dy, dy) for lo in lead_offs for dy in (-1, 0, 1)]
+    else:
+        runs = [(lo, -1, 1) for lo in lead_offs]
+
+    n_lead = jnp.asarray(nc[:-1], jnp.int32)
+    per_lead = jnp.asarray(np.asarray(domain.periodic[:-1]))
+    ncy = nc[-1]
+    cy = cell_xy[:, -1]
+
+    def run_flat(lead_xy, y):
+        flat = lead_xy[..., 0] if dim > 1 else jnp.zeros_like(y)
+        for a in range(1, dim - 1):
+            flat = flat * nc[a] + lead_xy[..., a]
+        return flat * ncy + y if dim > 1 else y
+
+    cand_parts, okw_parts = [], []
+    trunc = jnp.zeros((n,), bool)
+    for lead, ylo_off, yhi_off in runs:
+        if dim > 1:
+            lead_xy = cell_xy[:, :-1] + jnp.asarray(lead, jnp.int32)
+            wrapped = jnp.where(per_lead, lead_xy % n_lead, lead_xy)
+            valid = jnp.all((wrapped >= 0) & (wrapped < n_lead), axis=-1)
+            lead_xy = jnp.clip(wrapped, 0, n_lead - 1)
+        else:
+            lead_xy = None
+            valid = jnp.ones((n,), bool)
+        if domain.periodic[-1]:
+            ylo = yhi = (cy + ylo_off) % ncy
+        else:
+            ylo = jnp.clip(cy + ylo_off, 0, ncy - 1)
+            yhi = jnp.clip(cy + yhi_off, 0, ncy - 1)
+        c_lo = run_flat(lead_xy, ylo)
+        c_hi = run_flat(lead_xy, yhi)
+        begin = starts[c_lo]
+        end = starts[c_hi] + counts[c_hi]
+        ids = begin[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
+        okw = valid[:, None] & (ids < end[:, None])
+        trunc = trunc | (valid & (end - begin > window))
+        cand_parts.append(jnp.clip(ids, 0, n - 1))
+        okw_parts.append(okw)
+    cand = jnp.concatenate(cand_parts, axis=1)  # (N, runs * window)
+    cmask = jnp.concatenate(okw_parts, axis=1)
+
+    delta = cell_xy[:, None, :] - cell_xy[cand]
+    delta = domain.wrap_cell_delta(delta)
+    w = jnp.asarray(domain.cell_weights)
+    rel = rel.astype(dtype)
+    d2 = rcll_r2_cell_units(rel[:, None, :], rel[cand], delta, w, dtype=cdt)
+    if radius_cell is None:
+        radius_cell = rcll_radius_cell_units(domain)
+    rcell = jnp.asarray(radius_cell, dtype=cdt)
+    ok = cmask & (d2 <= rcell * rcell)
+    if not include_self:
+        ok = ok & (cand != jnp.arange(n, dtype=jnp.int32)[:, None])
+    idx, mask = select_k(cand, ok, k)
+    count = jnp.sum(ok, axis=1).astype(jnp.int32)
+    count = jnp.where(trunc, jnp.maximum(count, k + 1), count)
+    return NeighborList(idx, mask, count)
+
+
 def refilter(nl: NeighborList, d2: Array, r2: Array | float) -> NeighborList:
     """Narrow a (possibly skin-inflated) list to pairs with d2 <= r2.
 

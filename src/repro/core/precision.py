@@ -58,6 +58,16 @@ class PrecisionPolicy:
         storage for free, zero arithmetic rounding) and is what makes the
         xla and pallas neighbor backends agree bit-for-bit; set "fp16"
         for the paper's A100 half-ALU arithmetic.
+      records: STORAGE dtype of the velocity/mass columns of the fused
+        force pass's record rows (and of the Pallas force kernel's v/m
+        cell tables). "fp16"/"bf16" is the half-width production layout:
+        the coordinate payload rides as the raw fp16 RCLL relative
+        coordinate (lossless — it IS the storage dtype) next to an
+        integer cell anchor, v and m are quantized to ``records``, and
+        the density tier (rho, p/ρ²) stays fp32. All pair arithmetic
+        upcasts to fp32 in-register; accumulators stay fp32 — only the
+        per-pair HBM bytes shrink. "fp32" is the full-width layout, kept
+        selectable as the accuracy oracle.
     """
 
     nnps: str = "fp16"
@@ -65,6 +75,7 @@ class PrecisionPolicy:
     physics: str = "fp32"
     accum: str = "fp32"
     nnps_compute: str = "fp32"
+    records: str = "fp16"
 
     @property
     def nnps_dtype(self):
@@ -86,12 +97,27 @@ class PrecisionPolicy:
     def accum_dtype(self):
         return dtype_of(self.accum)
 
+    @property
+    def records_dtype(self):
+        return dtype_of(self.records)
+
+    @property
+    def half_records(self) -> bool:
+        """True when the fused force pass uses the 16-bit record layout."""
+        return jnp.dtype(self.records_dtype).itemsize == 2
+
 
 # The paper's three experiment configurations (Table 4), adapted per
 # DESIGN.md section 7 (fp64 -> fp32 as the TPU high tier; the CPU accuracy
 # benchmarks still build true-fp64 references).
-APPROACH_I = PrecisionPolicy(nnps="fp32", coords="fp32", physics="fp32")
+APPROACH_I = PrecisionPolicy(
+    nnps="fp32", coords="fp32", physics="fp32", records="fp32"
+)
 APPROACH_II = PrecisionPolicy(nnps="fp16", coords="fp16", physics="fp32")
 APPROACH_III = PrecisionPolicy(nnps="fp16", coords="fp16", physics="fp32")
+
+# The full-width record layout (the PR 2 behavior): exact cross-backend
+# agreement oracle for the fused force pass.
+FP32_RECORDS = PrecisionPolicy(records="fp32")
 
 APPROACHES = {"I": APPROACH_I, "II": APPROACH_II, "III": APPROACH_III}

@@ -88,6 +88,12 @@ class SPHConfig:
     backend: str | None = None  # None=auto | "reference" | "xla" | "pallas"
     # Rows per chunk of the fused XLA force pass (0 = auto). Static.
     force_chunk: int = 0
+    # Candidate slots per contiguous cell-run of the table-free packed
+    # search (None = 2 * capacity; 3 * capacity reproduces the dense-
+    # table coverage guarantee exactly). Tighter windows cut search
+    # bandwidth; truncation is flagged through the overflow plumbing.
+    # Static.
+    window: int | None = None
     # Raise (via jax.debug.callback -> XlaRuntimeError) from simulate /
     # simulate_stats when any cell-table or neighbor-list capacity
     # overflowed during the run. Off by default: the check is a host
@@ -171,10 +177,12 @@ class PersistentCarry(NamedTuple):
     rebuilds: Array  # () int32 number of bin+search rebuilds so far
     steps: Array  # () int32 steps taken since init
     overflow: Array  # () bool any cell-table/neighbor-list overflow seen
-    # Pallas backend only (None otherwise): the packed-state binning of
-    # the last rebuild. The fused force kernels need the (C, cap) slot
-    # structure; between rebuilds it is stale but exact to decode against
-    # (ops.rcll_force_particles re-anchors migrated particles).
+    # The packed-state binning of the last rebuild (all rcll backends).
+    # Between rebuilds it is stale but exact to decode against: the
+    # pallas force kernels re-anchor migrated particles against its
+    # (C, cap) slot structure, and the next rebuild's counting-sort
+    # pack reuses its near-sorted run structure for the O(N) stable
+    # rank (cells.pack_particles prev=...).
     binning: cells_lib.CellBinning | None = None
     # XLA fused backend only (None otherwise): neighbor ids with invalid
     # slots redirected to the dummy row N. Static between rebuilds, so
@@ -258,6 +266,7 @@ def _packed_neighbor_list(
         compute_dtype=pol.nnps_compute_dtype,
         k=cfg.max_neighbors,
         radius_cell=cfg.search_radius_cell,
+        window=cfg.window,
     )
 
 
@@ -273,6 +282,13 @@ def _empty_neighbor_list(n: int) -> nnps.NeighborList:
 def _rebuild(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
     """Re-sort by cell, re-bin, and re-search with the inflated radius.
 
+    The re-sort is the counting-sort pack: the carried binning describes
+    the run structure the arrays are currently in (the previous
+    rebuild's), which turns the stable re-sort into O(N) bincount +
+    exclusive-scan + rank passes (``cells.pack_particles``) — no argsort
+    on the hot path (a ``lax.cond`` falls back to it if any particle
+    out-ran the 3^dim neighborhood since the last rebuild).
+
     The pallas force path walks the 3^dim cell neighborhood directly and
     never reads a neighbor list, so its rebuild skips the K-compaction
     kernel entirely and carries a zero-capacity list; its overflow flag
@@ -280,18 +296,19 @@ def _rebuild(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
     cannot happen - the fused kernel sees every in-support pair).
     """
     n = carry.order.shape[0]
-    ps = rcll.pack_state(cfg.domain, carry.st.rc, cfg.cap(n))
+    ps = rcll.pack_state(
+        cfg.domain, carry.st.rc, cfg.cap(n), prev=carry.binning
+    )
     perm = ps.packing.order  # current-packed -> new-packed
     st = _permute_state(carry.st, perm, ps.rc)
     overflow = carry.overflow | (ps.packing.binning.overflow > 0)
+    binning = ps.packing.binning
     if cfg.resolved_backend == "pallas":
         nl = _empty_neighbor_list(n)
-        binning = ps.packing.binning
         idx_dummy = None
     else:
         nl = _packed_neighbor_list(cfg, ps)
         overflow = overflow | nl.overflowed
-        binning = None
         idx_dummy = (
             fused._sanitized_idx(nl, n)
             if cfg.resolved_backend == "xla" else None
@@ -326,7 +343,15 @@ def init_persistent(cfg: SPHConfig, state: SPHState) -> PersistentCarry:
         steps=jnp.zeros((), jnp.int32),
         overflow=jnp.zeros((), bool),
     )
-    return _rebuild(cfg, carry)
+    carry = _rebuild(cfg, carry)
+    # _rebuild hands the SAME array to st.rc.cell_xy and binning.cell_xy
+    # (they only diverge once a step migrates particles). run_persistent
+    # donates the carry, and XLA refuses to donate one buffer through two
+    # arguments — materialize a distinct copy at this eager boundary.
+    rc = carry.st.rc
+    return carry._replace(
+        st=carry.st._replace(rc=rc._replace(cell_xy=jnp.copy(rc.cell_xy)))
+    )
 
 
 def finalize_persistent(cfg: SPHConfig, carry: PersistentCarry) -> SPHState:
@@ -376,13 +401,29 @@ def _force_rhs_reference(cfg: SPHConfig, carry: PersistentCarry):
     return drho, acc
 
 
+def _resolved_records(cfg: SPHConfig) -> str:
+    """The record layout the fused XLA pass actually runs.
+
+    Half-width rows anchor coordinates in 16-bit cell columns, which
+    caps the grid per axis (``fused.HALF_CELL_LIMIT``); past the cap the
+    solver falls back to the fp32 layout rather than erroring — the
+    policy's dtype is a bandwidth knob, not a correctness contract.
+    """
+    records = cfg.policy.records
+    if records != "fp32":
+        limit = fused.HALF_CELL_LIMIT.get(jnp.dtype(cfg.policy.records_dtype))
+        if limit is not None and max(cfg.domain.ncells) >= limit:
+            return "fp32"
+    return records
+
+
 def _force_rhs_fused_xla(cfg: SPHConfig, carry: PersistentCarry):
     """Fused cell-blocked force pass over packed row chunks (core/fused)."""
     st, nl, fl = carry.st, carry.nl, carry.st.fluid
-    p = sph.eos_tait(fl.rho, cfg.rho0, cfg.c0)
     return fused.force_rhs(
-        cfg.domain, st.rc, nl, fl.v, fl.m, fl.rho, p,
-        chunk=cfg.force_chunk, mu=cfg.mu, idx_dummy=carry.idx_dummy,
+        cfg.domain, st.rc, nl, fl.v, fl.m, fl.rho,
+        c0=cfg.c0, rho0=cfg.rho0, chunk=cfg.force_chunk, mu=cfg.mu,
+        records=_resolved_records(cfg), idx_dummy=carry.idx_dummy,
     )
 
 
@@ -392,9 +433,10 @@ def _force_rhs_fused_pallas(cfg: SPHConfig, carry: PersistentCarry):
 
     dom = cfg.domain
     st, fl = carry.st, carry.st.fluid
-    p = sph.eos_tait(fl.rho, cfg.rho0, cfg.c0)
     return ops.rcll_force_particles(
-        dom, carry.binning, st.rc, fl.v, fl.m, fl.rho, p, mu=cfg.mu
+        dom, carry.binning, st.rc, fl.v, fl.m, fl.rho,
+        mu=cfg.mu, c0=cfg.c0, rho0=cfg.rho0,
+        records_dtype=cfg.policy.records_dtype,
     )
 
 

@@ -100,6 +100,35 @@ def eos_tait(rho: Array, rho0: float, c0: float) -> Array:
     return c0 * c0 * (rho - rho0)
 
 
+def eos_tait_por2_inv(inv_rho: Array, rho0: float, c0: float) -> Array:
+    """p/ρ² of the linear Tait EOS from the RECIPROCAL density.
+
+    p/ρ² = c0²(ρ−ρ0)/ρ² = c0²(1/ρ − ρ0/ρ²) — division-free given 1/ρ.
+    The fused sweeps gather 1/ρ as their single fp32 density field and
+    evaluate this per PAIR: the flops are free on a bandwidth-bound
+    sweep, and unlike the ρ form there is no per-pair division (the
+    full-width layout precomputes p/ρ² per particle, so a per-pair
+    division would be pure overhead for the half-width layout). Both
+    fused layouts evaluate this identical expression on the identical
+    gathered 1/ρ, so their fp32 coefficients are bitwise equal.
+    """
+    return c0 * c0 * (inv_rho - rho0 * inv_rho * inv_rho)
+
+
+def viscosity_pair_coef_inv(
+    mj: Array, x_dot_gw: Array, inv_i: Array, inv_j: Array, r2: Array,
+    *, h: float, mu: float,
+) -> Array:
+    """Morris-viscosity pair coefficient from RECIPROCAL densities.
+
+    ``viscosity_pair_coef`` with 1/(ρ_i ρ_j) supplied as inv_i·inv_j —
+    the form the fused sweeps use (they carry 1/ρ, see
+    ``eos_tait_por2_inv``); one division per pair either way (the
+    Morris h² regularizer), the ρ-product division disappears.
+    """
+    return mj * (2.0 * mu) * x_dot_gw * inv_i * inv_j / (r2 + 0.01 * h * h)
+
+
 class PairFields(NamedTuple):
     """Per-pair quantities gathered ONCE per step from the neighbor list.
 

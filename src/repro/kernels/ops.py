@@ -252,6 +252,16 @@ def rcll_gradient_particles(
 # --------------------------------------------------------------------------
 # Fused RCLL force pass (kernels/rcll_force.py wrappers)
 # --------------------------------------------------------------------------
+def _typed_row_table(
+    binning: cells_lib.CellBinning, f: Array, dtype, fill: float = 0.0
+) -> Array:
+    """(C+1, cap) cell-major table of a per-particle scalar at ``dtype``."""
+    ft = cells_lib.to_cell_major(binning, f.astype(dtype), fill=fill)
+    return jnp.concatenate(
+        [ft, jnp.full((1, ft.shape[1]), fill, ft.dtype)], axis=0
+    )
+
+
 def rcll_force_particles(
     domain: Domain,
     binning: cells_lib.CellBinning,
@@ -259,42 +269,67 @@ def rcll_force_particles(
     v: Array,  # (N, d) f32
     m: Array,  # (N,) f32
     rho: Array,  # (N,) f32 current density
-    p: Array,  # (N,) f32 EOS pressure of ``rho``
     *,
     mu: float,
+    c0: float,
+    rho0: float = 1.0,
+    records_dtype=jnp.float32,
     interpret: bool | None = None,
 ) -> tuple[Array, Array]:
     """The full WCSPH pair RHS via the fused Pallas kernel.
 
     Returns (drho (N,), acc (N, d)); body force / fixed-particle masking
-    are per-particle terms applied by the caller.
+    are per-particle terms applied by the caller. Pressure is derived
+    in-kernel from rho through the linearized Tait EOS (c0, rho0) — no
+    p/ρ² table is streamed.
+
+    ``records_dtype`` is the storage dtype of the v/m tile streams
+    (``PrecisionPolicy.records``): fp16/bf16 is the half-width
+    production layout, fp32 the accuracy oracle. The coordinate tiles
+    always stream the raw storage-dtype rel (lossless).
 
     Between Verlet-skin rebuilds the binning is STALE: a particle may
     have migrated to an adjacent cell while still occupying its old slot.
-    The decode stays exact by re-expressing each particle's coordinate
-    relative to its stale cell: rel' = rel + 2 (cell_now - cell_stale)
-    (minimum-image wrapped), carried in fp32 — the shift is an exact
-    small integer, so rel' decodes to the identical fp32 position, and
-    the skin invariant (drift <= skin/2 <= half a cell) keeps every true
-    pair within the stale 3^dim neighborhood.
+    The decode stays exact by streaming the int8 cell shift
+    cell_now - cell_stale (minimum-image wrapped) next to the raw rel
+    and re-anchoring rel' = rel + 2·shift in fp32 registers — the shift
+    is an exact small integer, so rel' decodes to the identical fp32
+    position, and the skin invariant (drift <= skin/2 <= half a cell)
+    keeps every true pair within the stale 3^dim neighborhood.
     """
+    from repro.core import fused  # shared mass normalizer
+
     interpret = default_interpret() if interpret is None else interpret
     delta = domain.wrap_cell_delta(rc.cell_xy - binning.cell_xy)
-    rel_shift = rc.rel.astype(jnp.float32) + 2.0 * delta.astype(jnp.float32)
-    rel_t, occ, (m_t,) = pack_cells(binning, rel_shift, m)
-    v_t, _, _ = pack_cells(binning, v.astype(jnp.float32))
-    rho_t = _row_table(binning, rho, fill=1.0)  # appears in denominators
-    por2_t = _row_table(binning, p / (rho * rho))
+    rel_t, _, _ = pack_cells(binning, rc.rel)
+    shift_t, _, _ = pack_cells(binning, delta.astype(jnp.int8))
+    v_t, _, _ = pack_cells(binning, v.astype(records_dtype))
+    # Mass normalized to O(1) for the 16-bit stream (fused.mass_scale:
+    # raw SPH masses go subnormal in fp16 at fine ds); every pair term
+    # is linear in m_j, so the outputs are rescaled once below. The fp32
+    # oracle stream stays un-normalized (bit-stable vs the reference).
+    half = jnp.dtype(records_dtype).itemsize == 2
+    m_scale = fused.mass_scale(m) if half else jnp.float32(1.0)
+    m_t = _typed_row_table(
+        binning, m.astype(jnp.float32) / m_scale, records_dtype
+    )
+    # Reciprocal density: one division per particle here, none per pair
+    # in the kernel (sph.eos_tait_por2_inv / viscosity_pair_coef_inv).
+    inv_t = _row_table(
+        binning, (1.0 / rho).astype(jnp.float32), fill=1.0 / rho0
+    )
     offs = tuple(map(tuple, cells_lib.neighbor_cell_offsets(domain.dim)))
     drho_t, acc_t = rcll_force.rcll_force(
-        rel_t, v_t, m_t, rho_t, por2_t, occ, nb_with_sentinel(domain),
+        rel_t, shift_t, v_t, m_t, inv_t, nb_with_sentinel(domain),
         offs=offs,
         hc_phys=tuple(domain.cell_sizes),
         h=domain.h,
         dim=domain.dim,
         mu=float(mu),
+        c0=float(c0),
+        rho0=float(rho0),
         interpret=interpret,
     )
-    drho = unpack_per_particle(drho_t, binning)
-    acc = unpack_per_particle(acc_t.transpose(0, 2, 1), binning)
+    drho = unpack_per_particle(drho_t, binning) * m_scale
+    acc = unpack_per_particle(acc_t.transpose(0, 2, 1), binning) * m_scale
     return drho, acc

@@ -14,14 +14,37 @@ identical to ``nnps_pairwise.py`` / ``sph_gradient.py`` (shared helpers
 in ``kernels/tiling.py``); the pair physics goes through the same
 primitives as the reference path (``core/bspline.py`` / ``core/sph.py``).
 
+Half-width tile streams (the bandwidth round). The kernel's per-tile
+inputs are sized by ``PrecisionPolicy.records``:
+
+  * coordinates stream as the RAW storage-dtype relative coordinate
+    (fp16 — lossless, it IS the RCLL state) plus an int8 stale-cell
+    shift; the re-anchor ``rel' = rel + 2·(cell_now − cell_stale)``
+    happens in fp32 registers (``tiling.tile_phys_disp_shifted``) — an
+    exact decode at 3 bytes/axis instead of a pre-shifted fp32
+    coordinate's 4;
+  * v and m stream in the records dtype (fp16/bf16 production, fp32
+    oracle) and upcast to fp32 in-register;
+  * the density tier streams fp32 as the RECIPROCAL 1/ρ (full fp32
+    density information, one reciprocal per particle at pack time):
+    p/ρ² is recomputed division-free in-register through the linearized
+    Tait EOS (``sph.eos_tait_por2_inv``) and the viscosity ρ-product
+    division disappears — no p/ρ² table, no occupancy table (see
+    below). 2-D bytes per slot per tile: 16 vs 32 for the PR 2 layout.
+
 No neighbor list is consumed: the B-spline derivative vanishes
 identically beyond the support 2h and at r = 0, so every out-of-support
 candidate in the 3^dim neighborhood (and the self pair) contributes an
 exact 0.0 — the kernel sums over the full tile and lets compact support
 do the masking. Empty slots are killed by m_j = 0 (zero-filled tables;
-rho tables are 1-filled so denominators stay positive). Consequence: the
-fused kernel never truncates at K — it sees every in-support pair even
-where the K-compacted list would overflow.
+1/ρ tables are 1/rho0-filled so every factor stays finite and the EOS
+decode yields ~0); an occupancy mask adds nothing the m_j
+factor and compact support don't already guarantee, so none is streamed.
+Garbage accumulated into a vacant SELF slot (i empty, j occupied) is
+finite and never read back — ``ops.unpack_per_particle`` gathers
+occupied slots only. Consequence: the fused kernel never truncates at
+K — it sees every in-support pair even where the K-compacted list would
+overflow.
 """
 from __future__ import annotations
 
@@ -44,17 +67,15 @@ def _force_kernel(
     nb_ref,
     # inputs
     off_ref,  # (1, d) neighborhood offset for this k
-    rel_i_ref,  # (1, d, cap) self cell (fp32 stale-cell-shifted rel)
+    rel_i_ref,  # (1, d, cap) self cell (raw storage-dtype rel)
     rel_j_ref,  # (1, d, cap) neighbor cell
-    v_i_ref,  # (1, d, cap) f32
-    v_j_ref,  # (1, d, cap) f32
-    m_j_ref,  # (1, cap) f32 (0 in empty slots)
-    rho_i_ref,  # (1, cap) f32 (1 in empty slots: denominator-safe)
-    rho_j_ref,  # (1, cap) f32
-    por2_i_ref,  # (1, cap) f32 p / ρ²
-    por2_j_ref,  # (1, cap) f32
-    occ_i_ref,  # (1, cap)
-    occ_j_ref,  # (1, cap)
+    shift_i_ref,  # (1, d, cap) int8 stale-cell shift
+    shift_j_ref,  # (1, d, cap)
+    v_i_ref,  # (1, d, cap) records dtype
+    v_j_ref,  # (1, d, cap)
+    m_j_ref,  # (1, cap) records dtype (0 in empty slots)
+    inv_i_ref,  # (1, cap) f32 reciprocal density (1/rho0 in empty slots)
+    inv_j_ref,  # (1, cap) f32
     # outputs (indexed by c only -> accumulated across the k axis)
     drho_ref,  # (1, cap) f32
     acc_ref,  # (1, d, cap) f32
@@ -63,6 +84,8 @@ def _force_kernel(
     h: float,
     dim: int,
     mu: float,
+    c0: float,
+    rho0: float,
 ):
     _, k = pl.program_id(0), pl.program_id(1)
     d = rel_i_ref.shape[1]
@@ -72,26 +95,29 @@ def _force_kernel(
         drho_ref[...] = jnp.zeros_like(drho_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    disp, r2 = tiling.tile_phys_disp(
-        rel_i_ref[0], rel_j_ref[0], off_ref[0], hc_phys
+    disp, r2 = tiling.tile_phys_disp_shifted(
+        rel_i_ref[0], rel_j_ref[0], shift_i_ref[0], shift_j_ref[0],
+        off_ref[0], hc_phys,
     )
-    adj = tiling.tile_occ_pair(occ_i_ref[0], occ_j_ref[0]).astype(jnp.float32)
-    coef = adj * bspline.dw_over_r(jnp.sqrt(r2), h, dim)
+    coef = bspline.dw_over_r(jnp.sqrt(r2), h, dim)
 
-    mj = m_j_ref[0][None, :]
-    pc = sph.pressure_pair_coef(
-        mj, por2_i_ref[0][:, None], por2_j_ref[0][None, :]
-    )
+    mj = m_j_ref[0].astype(jnp.float32)[None, :]
+    por2_i = sph.eos_tait_por2_inv(inv_i_ref[0], rho0, c0)
+    por2_j = sph.eos_tait_por2_inv(inv_j_ref[0], rho0, c0)
+    pc = sph.pressure_pair_coef(mj, por2_i[:, None], por2_j[None, :])
     # x·∇W = coef * Σ disp² = coef * r2 (the gw tiles are coef * disp_a).
-    vc = sph.viscosity_pair_coef(
+    vc = sph.viscosity_pair_coef_inv(
         mj, coef * r2,
-        rho_i_ref[0][:, None], rho_j_ref[0][None, :],
+        inv_i_ref[0][:, None], inv_j_ref[0][None, :],
         r2, h=h, mu=mu,
     )
     dv_dot_gw = jnp.zeros_like(r2)
     for a in range(d):
         gw_a = coef * disp[a]
-        dv_a = v_i_ref[0, a][:, None] - v_j_ref[0, a][None, :]
+        dv_a = (
+            v_i_ref[0, a].astype(jnp.float32)[:, None]
+            - v_j_ref[0, a].astype(jnp.float32)[None, :]
+        )
         dv_dot_gw += dv_a * gw_a
         acc_ref[0, a] += jnp.sum(-pc * gw_a + vc * dv_a, axis=1)
     drho_ref[...] += jnp.sum(mj * dv_dot_gw, axis=1)[None]
@@ -115,15 +141,16 @@ def _nbcell_row(cap):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("offs", "hc_phys", "h", "dim", "mu", "interpret"),
+    static_argnames=(
+        "offs", "hc_phys", "h", "dim", "mu", "c0", "rho0", "interpret"
+    ),
 )
 def rcll_force(
-    rel: Array,  # (C, d, cap) f32 (stale-cell-shifted, see ops wrapper)
-    v: Array,  # (C, d, cap) f32
-    m: Array,  # (C, cap) f32, 0 in empty slots
-    rho: Array,  # (C, cap) f32, 1 in empty slots
-    por2: Array,  # (C, cap) f32 p / ρ²
-    occ: Array,  # (C, cap) f32 {0,1}
+    rel: Array,  # (C, d, cap) raw storage-dtype relative coords
+    shift: Array,  # (C, d, cap) int8 cell shift (cell_now - cell_stale)
+    v: Array,  # (C, d, cap) records dtype
+    m: Array,  # (C, cap) records dtype, 0 in empty slots
+    inv_rho: Array,  # (C, cap) f32 reciprocal density, 1/rho0 in empty slots
     nb_ids: Array,  # (C, M) int32
     *,
     offs: tuple,  # M x d neighborhood offsets (static)
@@ -131,6 +158,8 @@ def rcll_force(
     h: float,
     dim: int,
     mu: float,
+    c0: float,
+    rho0: float,
     interpret: bool = True,
 ) -> tuple[Array, Array]:
     """Fused WCSPH RHS: (drho (C, cap), acc (C, d, cap)), one tile pass."""
@@ -143,6 +172,8 @@ def rcll_force(
         h=float(h),
         dim=int(dim),
         mu=float(mu),
+        c0=float(c0),
+        rho0=float(rho0),
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -150,11 +181,10 @@ def rcll_force(
         in_specs=[
             pl.BlockSpec((1, d), lambda c, k, nb: (k, 0)),
             _cell_block(d, cap), _nbcell_block(d, cap),  # rel i, j
+            _cell_block(d, cap), _nbcell_block(d, cap),  # shift i, j
             _cell_block(d, cap), _nbcell_block(d, cap),  # v i, j
             _nbcell_row(cap),  # m_j
-            _cell_row(cap), _nbcell_row(cap),  # rho i, j
-            _cell_row(cap), _nbcell_row(cap),  # por2 i, j
-            _cell_row(cap), _nbcell_row(cap),  # occ i, j
+            _cell_row(cap), _nbcell_row(cap),  # 1/rho i, j
         ],
         out_specs=[
             _cell_row(cap),
@@ -169,4 +199,4 @@ def rcll_force(
             jax.ShapeDtypeStruct((C, d, cap), jnp.float32),
         ],
         interpret=interpret,
-    )(nb_ids, offs_arr, rel, rel, v, v, m, rho, rho, por2, por2, occ, occ)
+    )(nb_ids, offs_arr, rel, rel, shift, shift, v, v, m, inv_rho, inv_rho)

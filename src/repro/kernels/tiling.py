@@ -69,6 +69,38 @@ def tile_phys_disp(
     return disp, r2
 
 
+def tile_phys_disp_shifted(
+    rel_i: Array,  # (d, cap) raw storage-dtype relative coords
+    rel_j: Array,  # (d, cap)
+    shift_i: Array,  # (d, cap) small-int cell shift (cell_now - cell_stale)
+    shift_j: Array,  # (d, cap)
+    off_k: Array,  # (d,) f32
+    hc_phys: tuple,  # (d,) static physical cell edges
+) -> tuple[list[Array], Array]:
+    """Shift-anchored physics-tier pair displacement x_i - x_j per axis.
+
+    The half-width force kernel streams the RAW fp16 relative coords
+    plus an int8 per-particle cell shift instead of a pre-shifted fp32
+    coordinate (half the coordinate bytes): the stale-binning re-anchor
+    ``rel' = rel + 2 (cell_now - cell_stale)`` happens here in fp32
+    registers — the shift is an exact small integer and fp32 addition of
+    an fp16 payload and a small integer is exact, so the decode is
+    bit-identical to pre-shifting. Everything else matches
+    ``tile_phys_disp``.
+    """
+    d = rel_i.shape[0]
+    disp = []
+    r2 = None
+    for a in range(d):
+        ri = rel_i[a].astype(jnp.float32) + 2.0 * shift_i[a].astype(jnp.float32)
+        rj = rel_j[a].astype(jnp.float32) + 2.0 * shift_j[a].astype(jnp.float32)
+        du = (ri[:, None] - rj[None, :]) * 0.5 - off_k[a]
+        dx = du * hc_phys[a]
+        disp.append(dx)
+        r2 = dx * dx if r2 is None else r2 + dx * dx
+    return disp, r2
+
+
 def tile_occ_pair(occ_i: Array, occ_j: Array) -> Array:
     """(cap_i, cap_j) bool: both slots occupied."""
     return (occ_i[:, None] > 0) & (occ_j[None, :] > 0)

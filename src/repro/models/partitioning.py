@@ -23,8 +23,19 @@ Array = Any
 
 
 def current_mesh():
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or m.empty:
+    # jax.sharding.get_abstract_mesh only exists in newer jax releases;
+    # older ones expose it under jax._src.mesh. No ambient mesh -> None.
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        try:
+            from jax._src import mesh as _mesh
+
+            m = _mesh.get_abstract_mesh()
+        except (ImportError, AttributeError):
+            return None
+    else:
+        m = get()
+    if m is None or getattr(m, "empty", True):
         return None
     return m
 

@@ -1,9 +1,10 @@
-"""Background-cell binning (the static 'link list')."""
+"""Background-cell binning (the static 'link list') and the
+counting-sort pack."""
 import numpy as np
 import jax.numpy as jnp
 from _hypo import given, settings, st
 
-from repro.core import cells, domain as D
+from repro.core import cells, domain as D, rcll
 
 
 def _brute_cells(dom, x):
@@ -69,3 +70,99 @@ def test_property_candidates_superset_of_neighbors(n, seed):
         true_nb = set(np.nonzero(d[i] <= radius)[0].tolist())
         got = set(cand[i][mask[i]].tolist())
         assert true_nb <= got | {i}
+
+
+# --------------------------------------------------------------------------
+# Counting-sort pack: identical permutation/table to the argsort oracle
+# --------------------------------------------------------------------------
+def _assert_pack_equal(pk_fast, pk_oracle):
+    np.testing.assert_array_equal(
+        np.asarray(pk_fast.order), np.asarray(pk_oracle.order)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(pk_fast.inverse), np.asarray(pk_oracle.inverse)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(pk_fast.binning.table), np.asarray(pk_oracle.binning.table)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(pk_fast.binning.counts),
+        np.asarray(pk_oracle.binning.counts),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(pk_fast.binning.cell_id),
+        np.asarray(pk_oracle.binning.cell_id),
+    )
+
+
+def test_counting_pack_matches_argsort_under_migration(rng):
+    """Advance a packed state (some particles migrate cells), then
+    re-pack with prev=<old binning>: the counting-sort fast path must
+    produce the argsort path's permutation and tables exactly."""
+    for dim, periodic in [
+        (2, (False, False)), (2, (True, False)), (2, (True, True)),
+        (3, (False, True, False)),
+    ]:
+        n = 700
+        dom = D.Domain(
+            lo=(0.0,) * dim, hi=(1.0,) * dim, h=0.08, periodic=periodic
+        )
+        x = rng.uniform(0, 1, (n, dim))
+        st0 = rcll.init_state(dom, dom.normalize(jnp.asarray(x)), jnp.float16)
+        cap = cells.default_capacity(dom, n)
+        ps = rcll.pack_state(dom, st0, cap)  # cold start: argsort
+        prc = ps.rc
+        for step in range(3):
+            dxn = jnp.asarray(
+                rng.uniform(-0.4, 0.4, (n, dim)) * min(dom.hc_norm_axes),
+                jnp.float32,
+            )
+            prc = rcll.advance(dom, prc, dxn)
+            migrated = int(jnp.sum(
+                dom.flat_cell_id(prc.cell_xy) != ps.packing.binning.cell_id
+            ))
+            assert migrated > 0, "setup must migrate particles"
+            fast = rcll.pack_state(dom, prc, cap, prev=ps.packing.binning)
+            oracle = rcll.pack_state(dom, prc, cap)
+            _assert_pack_equal(fast.packing, oracle.packing)
+            ps, prc = fast, fast.rc
+
+
+def test_counting_pack_falls_back_on_long_jumps(rng):
+    """Moves beyond the 3^d neighborhood violate the fast-path
+    precondition; the lax.cond fallback must still be exact."""
+    dom = D.unit_square(h=0.1, periodic=(True, False))
+    n = 300
+    x = rng.uniform(0, 1, (n, 2))
+    st0 = rcll.init_state(dom, dom.normalize(jnp.asarray(x)), jnp.float16)
+    pk0 = cells.pack_particles(
+        dom, dom.flat_cell_id(st0.cell_xy), st0.cell_xy, 16
+    )
+    new_xy = jnp.asarray(
+        rng.integers(0, np.asarray(dom.ncells), (n, 2)), jnp.int32
+    )
+    new_cid = dom.flat_cell_id(new_xy)
+    fast = cells.pack_particles(dom, new_cid, new_xy, 16, prev=pk0.binning)
+    oracle = cells.pack_particles(dom, new_cid, new_xy, 16)
+    _assert_pack_equal(fast, oracle)
+
+
+def test_packed_table_overflow_counts(rng):
+    """The arithmetic (C, cap) table drops the same overflow the scatter
+    table did and reports the dropped count."""
+    dom = D.unit_square(h=0.4)  # few cells -> guaranteed overflow
+    n = 120
+    x = rng.uniform(0, 1, (n, 2))
+    st0 = rcll.init_state(dom, dom.normalize(jnp.asarray(x)), jnp.float16)
+    cid = dom.flat_cell_id(st0.cell_xy)
+    pk = cells.pack_particles(dom, cid, st0.cell_xy, capacity=3)
+    counts = np.asarray(pk.binning.counts)
+    assert int(pk.binning.overflow) == int(np.maximum(counts - 3, 0).sum()) > 0
+    tbl = np.asarray(pk.binning.table)
+    # table rows are consecutive packed ids starting at the cell start
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    for c in range(tbl.shape[0]):
+        occ = tbl[c][tbl[c] >= 0]
+        np.testing.assert_array_equal(
+            occ, starts[c] + np.arange(min(counts[c], 3))
+        )

@@ -1,5 +1,6 @@
 """Fused cell-blocked force pass: backend agreement (reference / xla /
-pallas-interpret), stale-binning re-anchoring under cell migration,
+pallas-interpret), half-width record quantization (derived tolerance +
+bit-exactness), stale-binning re-anchoring under cell migration,
 overflow surfacing, and the donating scan entry point."""
 import dataclasses
 
@@ -9,15 +10,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cases, cells, domain as D, fused, rcll, solver, sph
+from repro.core.precision import FP32_RECORDS, PrecisionPolicy
 
 ON_TPU = jax.default_backend() == "tpu"
 
+C0, RHO0 = 1.25, 1.0
 
-def _poiseuille(backend, *, ds=0.1, skin_frac=0.0, **kw):
+
+def _poiseuille(backend, *, ds=0.1, skin_frac=0.0, records="fp32", **kw):
     kw.setdefault("max_neighbors", 96 if skin_frac > 0 else 40)
     case = cases.PoiseuilleCase(
         ds=ds, Lx=0.8, algo="rcll", backend=backend,
         cell_factor=2.0 if skin_frac > 0 else 1.0,
+        policy=PrecisionPolicy(records=records),
         **kw,
     )
     cfg, st = case.build()
@@ -55,7 +60,7 @@ def _cloud_setup(n=800, seed=0, k=256):
     return dom, cfg, ps, nl, fields
 
 
-def _reference_rhs(dom, rc, nl, v, m, rho, *, h, mu, rho0=1.0, c0=1.25):
+def _reference_rhs(dom, rc, nl, v, m, rho, *, h, mu, rho0=RHO0, c0=C0):
     disp, r = rcll.pair_displacements(dom, rc, nl)
     gw = sph.grad_w(disp, r, h, dom.dim, nl.mask)
     pf = sph.gather_pair_fields(v, m, nl.idx, nl.mask)
@@ -78,8 +83,8 @@ def test_fused_xla_rhs_matches_reference():
     )
     for chunk in (0, 100, 10**6):  # padded map, odd chunk, single chunk
         drho_f, acc_f = fused.force_rhs(
-            dom, ps.rc, nl, f["v"], f["m"], f["rho"], p,
-            chunk=chunk, mu=1.0,
+            dom, ps.rc, nl, f["v"], f["m"], f["rho"],
+            c0=C0, rho0=RHO0, chunk=chunk, mu=1.0,
         )
         np.testing.assert_allclose(drho_f, drho_r, rtol=2e-5, atol=1e-5)
         np.testing.assert_allclose(acc_f, acc_r, rtol=2e-5, atol=2e-3)
@@ -93,8 +98,8 @@ def test_fused_pallas_rhs_matches_reference():
         dom, ps.rc, nl, f["v"], f["m"], f["rho"], h=dom.h, mu=1.0
     )
     drho_k, acc_k = ops.rcll_force_particles(
-        dom, ps.packing.binning, ps.rc, f["v"], f["m"], f["rho"], p,
-        mu=1.0, interpret=not ON_TPU,
+        dom, ps.packing.binning, ps.rc, f["v"], f["m"], f["rho"],
+        mu=1.0, c0=C0, rho0=RHO0, interpret=not ON_TPU,
     )
     np.testing.assert_allclose(drho_k, drho_r, rtol=2e-5, atol=1e-5)
     np.testing.assert_allclose(acc_k, acc_r, rtol=2e-5, atol=2e-3)
@@ -102,7 +107,7 @@ def test_fused_pallas_rhs_matches_reference():
 
 def test_fused_pallas_stale_binning_with_migrations():
     """Between Verlet rebuilds the binning is stale; particles that
-    migrated cells must decode exactly via the re-anchored fp32 rel."""
+    migrated cells must decode exactly via the int8 shift re-anchor."""
     from repro.kernels import ops
 
     rng = np.random.default_rng(3)
@@ -124,17 +129,193 @@ def test_fused_pallas_stale_binning_with_migrations():
         dom, rc1, nl, f["v"], f["m"], f["rho"], h=dom.h, mu=1.0
     )
     drho_k, acc_k = ops.rcll_force_particles(
-        dom, ps.packing.binning, rc1, f["v"], f["m"], f["rho"], p,
-        mu=1.0, interpret=not ON_TPU,
+        dom, ps.packing.binning, rc1, f["v"], f["m"], f["rho"],
+        mu=1.0, c0=C0, rho0=RHO0, interpret=not ON_TPU,
     )
     np.testing.assert_allclose(drho_k, drho_r, rtol=2e-5, atol=1e-5)
     np.testing.assert_allclose(acc_k, acc_r, rtol=2e-5, atol=2e-3)
     # fused xla path too (consumes the same stale list + current state)
     drho_f, acc_f = fused.force_rhs(
-        dom, rc1, nl, f["v"], f["m"], f["rho"], p, mu=1.0
+        dom, rc1, nl, f["v"], f["m"], f["rho"], c0=C0, rho0=RHO0, mu=1.0
     )
     np.testing.assert_allclose(drho_f, drho_r, rtol=2e-5, atol=1e-5)
     np.testing.assert_allclose(acc_f, acc_r, rtol=2e-5, atol=2e-3)
+
+
+# --------------------------------------------------------------------------
+# half-width record quantization
+# --------------------------------------------------------------------------
+def _quantize(x, dtype):
+    return jnp.asarray(x).astype(dtype).astype(jnp.float32)
+
+
+@pytest.mark.parametrize("records", ["fp16", "bf16"])
+def test_half_records_match_quantized_oracle(records):
+    """The half-width sweep IS fp32 arithmetic on records-quantized v/m:
+    it must tightly match the fp32 reference path evaluated on the
+    pre-quantized inputs (same tolerances as the fp32-record tests)."""
+    rdt = {"fp16": jnp.float16, "bf16": jnp.bfloat16}[records]
+    dom, cfg, ps, nl, f = _cloud_setup(seed=5)
+    vq = _quantize(f["v"], rdt)
+    # m is stored normalized by the mean mass (fp16 subnormal guard);
+    # quantize the oracle's m at the same point
+    s = fused.mass_scale(f["m"])
+    mq = _quantize(f["m"] / s, rdt) * s
+    drho_r, acc_r, _ = _reference_rhs(
+        dom, ps.rc, nl, vq, mq, f["rho"], h=dom.h, mu=1.0
+    )
+    drho_h, acc_h = fused.force_rhs(
+        dom, ps.rc, nl, f["v"], f["m"], f["rho"],
+        c0=C0, rho0=RHO0, mu=1.0, records=records,
+    )
+    np.testing.assert_allclose(drho_h, drho_r, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(acc_h, acc_r, rtol=2e-5, atol=2e-3)
+
+
+def test_half_records_within_derived_tolerance():
+    """drho under fp16 records agrees with fp32 records within the bound
+    DERIVED from the actual quantization deltas:
+
+      |Δdrho_i| <= Σ_j [ |Δm_j| |dv·∇W| + m_j Σ_a (|Δv_i|+|Δv_j|)_a |∇W_a| ]
+
+    plus an fp32 round-off allowance."""
+    dom, cfg, ps, nl, f = _cloud_setup(seed=7)
+    v, m, rho = f["v"], f["m"], f["rho"]
+    drho32, acc32 = fused.force_rhs(
+        dom, ps.rc, nl, v, m, rho, c0=C0, rho0=RHO0, mu=1.0, records="fp32"
+    )
+    drho16, acc16 = fused.force_rhs(
+        dom, ps.rc, nl, v, m, rho, c0=C0, rho0=RHO0, mu=1.0, records="fp16"
+    )
+    # derived per-particle bound from the true quantization deltas
+    disp, r = rcll.pair_displacements(dom, ps.rc, nl)
+    gw = np.abs(np.asarray(sph.grad_w(disp, r, dom.h, dom.dim, nl.mask)))
+    idx, mask = np.asarray(nl.idx), np.asarray(nl.mask)
+    dv = np.abs(np.asarray(v)[:, None, :] - np.asarray(v)[idx])
+    dm = np.abs(np.asarray(m) - np.asarray(_quantize(m, jnp.float16)))
+    dv_err = np.abs(np.asarray(v) - np.asarray(_quantize(v, jnp.float16)))
+    pair_dv_err = dv_err[:, None, :] + dv_err[idx]
+    mj = np.where(mask, np.asarray(m)[idx], 0.0)
+    bound = (
+        np.sum(dm[idx] * mask * np.sum(dv * gw, -1), -1)
+        + np.sum(mj * np.sum(pair_dv_err * gw, -1), -1)
+    )
+    slack = 1e-5 * (1.0 + np.abs(np.asarray(drho32)))
+    err = np.abs(np.asarray(drho16) - np.asarray(drho32))
+    assert np.all(err <= bound + slack), float((err - bound).max())
+    # acc stays within the same order: quantization-dominated, bounded
+    scale = np.abs(np.asarray(acc32)).max()
+    assert np.abs(np.asarray(acc16) - np.asarray(acc32)).max() < 2e-3 * (
+        1.0 + scale
+    )
+
+
+def test_half_records_bit_exact_on_grid():
+    """Where v and m are exactly representable in fp16 the half-width
+    sweep is BIT-identical to the fp32-record sweep: both decode to the
+    same fp32 values (q = I + rel/2 is exact either way, the EOS fold is
+    the same expression) and run the same ``_pair_rhs`` arithmetic."""
+    dom, cfg, ps, nl, f = _cloud_setup(seed=9)
+    n = ps.rc.rel.shape[0]
+    rng = np.random.default_rng(9)
+    # v on the 2^-8 grid, |v| < 1; m a power of two: all fp16-exact
+    v = jnp.asarray(
+        rng.integers(-256, 257, (n, 2)).astype(np.float32) / 256.0
+    )
+    m = jnp.full((n,), 2.0**-10, jnp.float32)
+    for chunk in (0, 100):
+        drho32, acc32 = fused.force_rhs(
+            dom, ps.rc, nl, v, m, f["rho"],
+            c0=C0, rho0=RHO0, chunk=chunk, mu=1.0, records="fp32",
+        )
+        drho16, acc16 = fused.force_rhs(
+            dom, ps.rc, nl, v, m, f["rho"],
+            c0=C0, rho0=RHO0, chunk=chunk, mu=1.0, records="fp16",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(drho16), np.asarray(drho32)
+        )
+        np.testing.assert_array_equal(np.asarray(acc16), np.asarray(acc32))
+
+
+def test_half_records_survive_tiny_masses():
+    """Raw SPH masses below fp16's subnormal range (< 6e-8) would store
+    as exactly 0 and silently zero all forces; the mean-mass
+    normalization keeps full precision at any resolution scale."""
+    from repro.kernels import ops
+
+    dom, cfg, ps, nl, f = _cloud_setup(seed=13)
+    n = ps.rc.rel.shape[0]
+    m_tiny = jnp.full((n,), 2e-8, jnp.float32)  # flushes to 0 in fp16
+    assert float(m_tiny.astype(jnp.float16)[0]) == 0.0
+    drho32, acc32 = fused.force_rhs(
+        dom, ps.rc, nl, f["v"], m_tiny, f["rho"],
+        c0=C0, rho0=RHO0, mu=1.0, records="fp32",
+    )
+    drho16, acc16 = fused.force_rhs(
+        dom, ps.rc, nl, f["v"], m_tiny, f["rho"],
+        c0=C0, rho0=RHO0, mu=1.0, records="fp16",
+    )
+    assert float(jnp.max(jnp.abs(drho32))) > 0
+    # near-zero sums cancel, so tolerance scales with the field magnitude
+    atol_d = 2e-3 * float(jnp.max(jnp.abs(drho32)))
+    atol_a = 2e-3 * float(jnp.max(jnp.abs(acc32)))
+    np.testing.assert_allclose(drho16, drho32, rtol=2e-3, atol=atol_d)
+    np.testing.assert_allclose(acc16, acc32, rtol=2e-3, atol=atol_a)
+    drho_p, acc_p = ops.rcll_force_particles(
+        dom, ps.packing.binning, ps.rc, f["v"], m_tiny, f["rho"],
+        mu=1.0, c0=C0, rho0=RHO0, records_dtype=jnp.float16,
+        interpret=not ON_TPU,
+    )
+    np.testing.assert_allclose(drho_p, drho32, rtol=2e-3, atol=atol_d)
+    np.testing.assert_allclose(acc_p, acc32, rtol=2e-3, atol=atol_a)
+
+
+def test_half_records_pallas_matches_xla():
+    """Both half-width backends quantize identically and decode in fp32:
+    they agree to reduction-order round-off."""
+    from repro.kernels import ops
+
+    dom, cfg, ps, nl, f = _cloud_setup(seed=11)
+    drho_x, acc_x = fused.force_rhs(
+        dom, ps.rc, nl, f["v"], f["m"], f["rho"],
+        c0=C0, rho0=RHO0, mu=1.0, records="fp16",
+    )
+    drho_p, acc_p = ops.rcll_force_particles(
+        dom, ps.packing.binning, ps.rc, f["v"], f["m"], f["rho"],
+        mu=1.0, c0=C0, rho0=RHO0, records_dtype=jnp.float16,
+        interpret=not ON_TPU,
+    )
+    np.testing.assert_allclose(drho_p, drho_x, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(acc_p, acc_x, rtol=2e-5, atol=2e-3)
+
+
+def test_half_records_reject_huge_grids():
+    """16-bit cell anchors cap the grid per axis (fp16: 2^11) — loudly."""
+    from repro.core import nnps
+
+    dom = D.Domain(lo=(0.0, 0.0), hi=(2000.0, 1.0), h=0.2)
+    assert max(dom.ncells) >= 1 << 11
+    n = 8
+    rc = rcll.init_state(dom, jnp.zeros((n, 2)), jnp.float16)
+    nl = nnps.NeighborList(
+        idx=jnp.zeros((n, 4), jnp.int32),
+        mask=jnp.zeros((n, 4), bool),
+        count=jnp.zeros((n,), jnp.int32),
+    )
+    with pytest.raises(ValueError, match="16-bit"):
+        fused.force_rhs(
+            dom, rc, nl, jnp.zeros((n, 2)), jnp.ones((n,)), jnp.ones((n,)),
+            c0=C0, rho0=RHO0, records="fp16",
+        )
+    # the solver degrades gracefully instead: fp32 layout past the cap
+    cfg = solver.SPHConfig(domain=dom, ds=0.1, dt=1e-3, algo="rcll")
+    assert solver._resolved_records(cfg) == "fp32"
+    small = solver.SPHConfig(
+        domain=D.Domain(lo=(0.0, 0.0), hi=(1.0, 1.0), h=0.2),
+        ds=0.1, dt=1e-3, algo="rcll",
+    )
+    assert solver._resolved_records(small) == "fp16"
 
 
 # --------------------------------------------------------------------------
@@ -142,6 +323,8 @@ def test_fused_pallas_stale_binning_with_migrations():
 # --------------------------------------------------------------------------
 @pytest.mark.parametrize("skin_frac", [0.0, 0.5])
 def test_backend_trajectories_agree(skin_frac):
+    """Cross-backend EXACTNESS oracle: pinned to fp32 records (the
+    reference gather path has no record quantization to compare to)."""
     backends = ["reference", "xla", "pallas"]
     if ON_TPU is False and skin_frac > 0:
         # interpret-mode pallas is slow; the skinned pallas case is
@@ -153,7 +336,8 @@ def test_backend_trajectories_agree(skin_frac):
         # the skinned case needs cells covering r + skin AND >= 3 cells
         # on the periodic axis -> finer spacing
         cfg, st = _poiseuille(
-            be, ds=0.05 if skin_frac > 0 else 0.1, skin_frac=skin_frac
+            be, ds=0.05 if skin_frac > 0 else 0.1, skin_frac=skin_frac,
+            records="fp32",
         )
         out = solver.simulate(cfg, st, nsteps)
         outs[be] = (
@@ -166,6 +350,22 @@ def test_backend_trajectories_agree(skin_frac):
         np.testing.assert_allclose(outs[be][0], ref[0], atol=1e-6)
         np.testing.assert_allclose(outs[be][1], ref[1], atol=1e-7)
         np.testing.assert_allclose(outs[be][2], ref[2], atol=1e-6)
+
+
+def test_half_record_trajectory_tracks_fp32():
+    """End-to-end: the default (fp16-record) production path stays within
+    a small fraction of the particle spacing of the fp32-record oracle
+    over a short run — record quantization perturbs forces at the fp16
+    ulp level, it does not change the flow."""
+    cfg16, st16 = _poiseuille("xla", records="fp16")
+    cfg32, st32 = _poiseuille("xla", records="fp32")
+    out16 = solver.simulate(cfg16, st16, 40)
+    out32 = solver.simulate(cfg32, st32, 40)
+    p16 = np.asarray(solver.positions(cfg16, out16))
+    p32 = np.asarray(solver.positions(cfg32, out32))
+    assert np.abs(p16 - p32).max() < 1e-3 * cfg32.ds
+    v16, v32 = np.asarray(out16.fluid.v), np.asarray(out32.fluid.v)
+    assert np.abs(v16 - v32).max() < 1e-6 + 1e-2 * np.abs(v32).max()
 
 
 # --------------------------------------------------------------------------

@@ -5,6 +5,11 @@ import jax.numpy as jnp
 
 from repro.optim import adamw, compress
 
+# jax.shard_map is top-level only in newer jax releases.
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map
+
 
 def test_adamw_minimizes_quadratic():
     cfg = adamw.OptConfig(lr=0.1, warmup_steps=5, total_steps=200,
@@ -61,7 +66,7 @@ def test_all_reduce_compressed_single_axis(rng):
         mean, carry = compress.all_reduce_compressed(x, "d")
         return mean, carry
 
-    out, carry = jax.shard_map(
+    out, carry = shard_map(
         f, mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
         out_specs=jax.sharding.PartitionSpec())(g)
     np.testing.assert_allclose(np.asarray(out), np.asarray(g), atol=0.02)

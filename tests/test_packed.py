@@ -227,3 +227,59 @@ def test_pallas_backend_solver_matches_xla_backend():
     np.testing.assert_allclose(
         np.asarray(outx.fluid.v), np.asarray(outp.fluid.v), atol=1e-7
     )
+
+
+# --------------------------------------------------------------------------
+# Table-free window search vs the dense-table candidate search
+# --------------------------------------------------------------------------
+def test_window_search_matches_table_search():
+    """Candidates from contiguous start/count windows must reproduce the
+    (C, cap) table search's neighbor sets and counts exactly — across
+    periodicity of leading and last axes (seam handling differs)."""
+    rng = np.random.default_rng(11)
+    for dim, periodic in [
+        (2, (False, False)), (2, (True, False)),
+        (2, (False, True)), (2, (True, True)),
+        (3, (True, False, True)),
+    ]:
+        n = 600
+        dom = D.Domain(
+            lo=(0.0,) * dim, hi=(1.0,) * dim, h=0.07, cell_factor=1.4,
+            periodic=periodic,
+        )
+        x = rng.uniform(0, 1, (n, dim))
+        st = rcll.init_state(dom, dom.normalize(jnp.asarray(x)), jnp.float16)
+        cap = cells.default_capacity(dom, n, safety=5.0)
+        ps = rcll.pack_state(dom, st, cap)
+        k = 128
+        for rad in (None, 1.3 * nnps.rcll_radius_cell_units(dom)):
+            table = nnps.rcll_neighbors(
+                dom, ps.rc.rel, ps.rc.cell_xy, dtype=jnp.float16,
+                compute_dtype=jnp.float32, k=k,
+                binning=ps.packing.binning, radius_cell=rad,
+            )
+            windows = rcll.packed_neighbors(
+                dom, ps, dtype=jnp.float16, compute_dtype=jnp.float32,
+                k=k, radius_cell=rad,
+            )
+            eq = nnps.neighbor_sets_equal(table, windows)
+            assert bool(jnp.all(eq)), (dim, periodic, int(jnp.sum(~eq)))
+            np.testing.assert_array_equal(
+                np.asarray(table.count), np.asarray(windows.count)
+            )
+
+
+def test_window_truncation_flags_overflow():
+    """A too-tight window must surface through NeighborList.overflowed
+    (the k+1 count sentinel), not silently drop candidates."""
+    rng = np.random.default_rng(12)
+    dom = D.unit_square(h=0.12)
+    x = rng.uniform(0, 1, (500, 2))
+    st = rcll.init_state(dom, dom.normalize(jnp.asarray(x)), jnp.float16)
+    ps = rcll.pack_state(dom, st, 64)
+    assert not bool(
+        rcll.packed_neighbors(dom, ps, k=192).overflowed
+    )
+    assert bool(
+        rcll.packed_neighbors(dom, ps, k=192, window=4).overflowed
+    )
