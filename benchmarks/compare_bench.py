@@ -24,6 +24,7 @@ import sys
 
 def _case_key(case: dict) -> tuple:
     return (
+        case.get("case", "poiseuille"),  # pre-scenario rows were poiseuille
         case.get("n_target"),
         case.get("backend"),
         case.get("records", "fp32"),  # pre-half-record rows were fp32

@@ -62,19 +62,40 @@ def _physics_only(cfg, carry, nsteps):
     return jax.lax.scan(body, carry, None, length=nsteps)[0]
 
 
-def _build(n_target: int, backend: str, skin_frac_hc: float, records: str):
-    ds = float((1.0 / n_target) ** 0.5)
-    cell_factor = 1.0 + skin_frac_hc
-    max_neighbors = 64 if skin_frac_hc > 0 else 40
-    case = cases.PoiseuilleCase(
-        ds=ds, L=1.0, Lx=1.0, algo="rcll",
-        cell_factor=cell_factor, max_neighbors=max_neighbors,
-        backend=backend, policy=PrecisionPolicy(records=records),
+def _build(
+    n_target: int,
+    backend: str,
+    skin_frac_hc: float,
+    records: str,
+    case_name: str = "poiseuille",
+):
+    if case_name == "poiseuille":
+        # historical default: unit-square channel, skin-capable cells
+        ds = float((1.0 / n_target) ** 0.5)
+        cell_factor = 1.0 + skin_frac_hc
+        max_neighbors = 64 if skin_frac_hc > 0 else 40
+        case = cases.PoiseuilleCase(
+            ds=ds, L=1.0, Lx=1.0, algo="rcll",
+            cell_factor=cell_factor, max_neighbors=max_neighbors,
+            backend=backend, policy=PrecisionPolicy(records=records),
+        )
+        cfg, st = case.build()
+        if skin_frac_hc > 0:
+            cfg = dataclasses.replace(
+                cfg, skin=skin_frac_hc * cfg.domain.radius
+            )
+        return cfg, st, max_neighbors
+    # any registered scenario (--case): scaled to n_target via the case
+    # registry; these cases size their own cells (no Verlet skin knob),
+    # so skin_frac_hc is ignored and the rebuild runs per step.
+    case = cases.build_case(
+        case_name,
+        ds=cases.resolve_ds(case_name, n_target),
+        backend=backend,
+        policy=PrecisionPolicy(records=records),
     )
     cfg, st = case.build()
-    if skin_frac_hc > 0:
-        cfg = dataclasses.replace(cfg, skin=skin_frac_hc * cfg.domain.radius)
-    return cfg, st, max_neighbors
+    return cfg, st, cfg.max_neighbors
 
 
 def run_case(
@@ -83,8 +104,13 @@ def run_case(
     nsteps: int,
     skin_frac_hc: float = 0.5,
     records: str = "fp16",
+    case_name: str = "poiseuille",
 ) -> dict:
-    cfg, st, max_neighbors = _build(n_target, backend, skin_frac_hc, records)
+    if case_name != "poiseuille":
+        skin_frac_hc = 0.0
+    cfg, st, max_neighbors = _build(
+        n_target, backend, skin_frac_hc, records, case_name
+    )
     n = int(st.xn.shape[0])
 
     # warm the flow a little so velocities/densities are nontrivial
@@ -120,6 +146,7 @@ def run_case(
 
     k, d = max_neighbors, cfg.domain.dim
     row = {
+        "case": case_name,
         "n_target": n_target,
         "n_particles": n,
         "backend": backend,
@@ -167,9 +194,12 @@ def main(
     skin_compare: bool = True,
     append: bool = True,
     out: str | None = None,
+    case_name: str = "poiseuille",
 ):
     """``full`` selects the 8k+64k grid (benchmarks.run interface);
-    ``sizes`` overrides it with explicit (n_target, nsteps) pairs."""
+    ``sizes`` overrides it with explicit (n_target, nsteps) pairs;
+    ``case_name`` benchmarks any registered scenario (BENCH records are
+    tagged with it)."""
     if sizes is None:
         targets = [8000, 64000] if full else [8000]
         sizes = [(t, default_steps(t)) for t in targets]
@@ -177,8 +207,11 @@ def main(
     rows = []
     for n_target, nsteps in sizes:
         for backend, records in runs:
-            rows.append(run_case(n_target, backend, nsteps, records=records))
-    if skin_compare:
+            rows.append(run_case(
+                n_target, backend, nsteps, records=records,
+                case_name=case_name,
+            ))
+    if skin_compare and case_name == "poiseuille":
         # PR 1's skin-vs-none tracking metric (fused backend, 8k)
         n0 = sizes[0][0]
         rows.append(run_case(n0, "xla", sizes[0][1], skin_frac_hc=0.0))
@@ -187,7 +220,7 @@ def main(
         for r in rows:
             if (r["n_target"], r["backend"], r["records"]) == (
                 n_target, backend, records
-            ) and r["skin_frac_hc"] > 0:
+            ) and (r["skin_frac_hc"] > 0 or case_name != "poiseuille"):
                 return r
         return None
 
@@ -208,6 +241,7 @@ def main(
     n0 = rows[0]["n_particles"]
     record = {
         "label": "half_records",
+        "case": case_name,
         "backend": jax.default_backend(),
         # CPU wall-clocks are machine-sensitive: record the core count so
         # cross-record comparisons (compare_bench) can be read in context.
@@ -258,6 +292,12 @@ if __name__ == "__main__":
         help="also write this run's record to a standalone JSON file "
         "(pairs with compare_bench --candidate)",
     )
+    ap.add_argument(
+        "--case", type=str, default="poiseuille",
+        choices=cases.case_names(),
+        help="registered scenario to benchmark (BENCH records are "
+        "tagged with it); non-poiseuille cases run skinless",
+    )
     args = ap.parse_args()
     if args.n:
         targets = args.n
@@ -271,4 +311,5 @@ if __name__ == "__main__":
         skin_compare=not args.n,
         append=not args.no_append,
         out=args.out,
+        case_name=args.case,
     )

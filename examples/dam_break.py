@@ -1,0 +1,67 @@
+"""2-D dam break through the scenario API (the PR 4 showcase).
+
+Drives the registered ``dam_break`` case (Tait EOS + Monaghan
+artificial viscosity + delta-SPH density diffusion, no-slip dummy
+walls, open top) through the ``Simulation`` facade, printing in-scan
+observables and an ASCII rendering of the collapsing column — no
+plotting dependencies, runs anywhere the tests run.
+
+  PYTHONPATH=src python examples/dam_break.py [--ds 0.05] [--t 1.2]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import solver
+from repro.core.api import Simulation
+
+
+def render(cfg, state, case, gx=56, gy=14) -> str:
+    pos = np.asarray(solver.positions(cfg, state))
+    fl = ~np.asarray(state.fixed)
+    p = pos[fl]
+    grid = np.zeros((gy, gx), int)
+    ix = np.clip((p[:, 0] / case.width * gx).astype(int), 0, gx - 1)
+    iy = np.clip((p[:, 1] / case.height * gy).astype(int), 0, gy - 1)
+    np.add.at(grid, (iy, ix), 1)
+    lines = ["|" + "".join(
+        "#" if c > 2 else ("." if c > 0 else " ") for c in row
+    ) + "|" for row in grid[::-1]]
+    lines.append("+" + "-" * gx + "+")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ds", type=float, default=0.05)
+    ap.add_argument("--t", type=float, default=1.2)
+    ap.add_argument("--frames", type=int, default=4)
+    args = ap.parse_args()
+
+    sim = Simulation.from_case("dam_break", ds=args.ds)
+    case, cfg = sim.case, sim.cfg
+    nsteps = int(round(args.t / cfg.dt))
+    per_frame = max(1, nsteps // args.frames)
+    print(f"# dam_break: N={sim.n_particles} ds={case.ds} dt={cfg.dt:.2e} "
+          f"backend={cfg.resolved_backend} records={cfg.policy.records}")
+    print(render(cfg, sim.state, case))
+
+    for _ in range(args.frames):
+        res = sim.run(per_frame, observe_every=max(1, per_frame // 4))
+        obs = res.observables
+        front = case.front_position(cfg, res.state)
+        print(f"t={float(res.state.t):.2f}  front x={front:.2f}  "
+              f"ekin={float(np.asarray(obs.ekin)[-1]):.3f}  "
+              f"vmax={float(np.asarray(obs.vmax)[-1]):.2f}")
+        print(render(cfg, res.state, case))
+
+    # Martin & Moyce-style dimensionless front check: Z = x/a vs
+    # T = t sqrt(2g/a); experiments give Z ~ 1.3-2 over T ~ 1-1.5.
+    a = case.col_w
+    T = float(res.state.t) * np.sqrt(2 * case.g / a)
+    print(f"dimensionless front Z = {front / a:.2f} at T = {T:.2f} "
+          "(Martin & Moyce: Z≈1.3 at T≈1, Z≈2 at T≈1.5)")
+
+
+if __name__ == "__main__":
+    main()

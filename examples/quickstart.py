@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cases, domain as D, nnps, rcll, solver
+from repro.core.api import Simulation
 
 
 def main():
@@ -71,6 +72,18 @@ def main():
     print(f"solver [{cfg.resolved_backend} records={cfg.policy.records}]: "
           f"{st.xn.shape[0]} particles, {seg / dt_wall:.1f} steps/sec "
           f"({int(carry.rebuilds)} rebuilds over {int(carry.steps)} steps)")
+
+    # the scenario API wraps all of the above behind one facade: any
+    # registered case + in-scan observables (no host sync per sample).
+    # `python -m repro.sph list` shows the case gallery.
+    sim = Simulation.from_case("taylor_green", ds=1 / 24)
+    res = sim.run(nsteps=120, observe_every=30)
+    ekin = np.asarray(res.observables.ekin)
+    metrics = sim.case.validate(np.asarray(res.observables.t), ekin)
+    print(f"taylor_green [{sim.cfg.resolved_backend}]: "
+          f"{sim.n_particles} particles, KE {ekin[0]:.4f} -> {ekin[-1]:.4f}, "
+          f"decay rate {metrics['decay_rate_measured']:.2f} "
+          f"(analytic {metrics['decay_rate_analytic']:.2f})")
 
 
 if __name__ == "__main__":

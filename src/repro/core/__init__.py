@@ -9,7 +9,15 @@ Layout:
   rcll.py      - persistent RCLL state (Eq. 7 distances, Eq. 8 updates)
   anchored.py  - anchor+residual mixed precision, generalized
   sph.py       - B-spline kernel, gradient operators, governing equations
-  solver.py    - mixed-precision WCSPH stepper (paper Fig. 6)
-  cases.py     - Poiseuille flow + gradient-accuracy benchmark fields
+  scheme.py    - pluggable physics schemes (EOS/viscosity pair-term specs)
+  boundaries.py- dummy/wall-particle kinds + wall lattice generators
+  solver.py    - mixed-precision SPH stepper (paper Fig. 6)
+  fused.py     - fused cell-blocked force pass (record-row sweeps)
+  cases.py     - scenario case registry (poiseuille, dam_break, cavity,
+                 taylor_green) + gradient-accuracy benchmark fields
+  api.py       - Simulation facade + in-scan Observables
   precision.py - precision policies (Table 4 approaches I/II/III)
+
+``repro.sph`` re-exports the scenario layer and hosts the CLI
+(``python -m repro.sph run <case>``).
 """

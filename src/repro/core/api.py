@@ -1,0 +1,183 @@
+"""Public simulation facade: ``Simulation`` + in-scan ``Observables``.
+
+The PR 1-3 entry points (``solver.simulate`` / ``init_persistent`` +
+``run_persistent`` + ``finalize_persistent``) stay as the low-level API;
+this module wraps them behind one object that every scenario case,
+example, and the ``python -m repro.sph`` CLI drive:
+
+    sim = Simulation.from_case("taylor_green", ds=1/32)
+    res = sim.run(nsteps=600, observe_every=20)
+    res.observables.ekin  # (S,) device array, sampled IN the scan
+
+**In-scan observables.** Diagnostics sampled every ``observe_every``
+steps are computed INSIDE the jitted scan (an outer ``lax.scan`` over
+sample blocks whose body advances ``observe_every`` solver steps and
+reduces the carry to a handful of scalars). Nothing syncs to the host
+until the run returns — the observable rows cost O(S) scalars of HBM,
+not S device round-trips, preserving the donated-carry hot loop.
+
+Observables (per sample, fluid particles only — walls are excluded by
+the ``kind``/``fixed`` mask):
+
+  * ``ekin``    — total kinetic energy 0.5 Σ m |v|²;
+  * ``vmax``    — max |v|;
+  * ``rho_err`` — max |ρ/ρ0 − 1| (the weak-compressibility monitor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cases as cases_lib
+from repro.core import solver
+
+Array = jnp.ndarray
+
+
+class Observables(NamedTuple):
+    """Time series of in-scan diagnostics, one row per sample."""
+
+    t: Array  # (S,) fp32 simulation time at the sample
+    ekin: Array  # (S,) fp32 total fluid kinetic energy
+    vmax: Array  # (S,) fp32 max fluid |v|
+    rho_err: Array  # (S,) fp32 max fluid |rho/rho0 - 1|
+
+
+def observe_state(cfg: solver.SPHConfig, st: solver.SPHState):
+    """One observable row from a state (any particle ordering)."""
+    fl = st.fluid
+    fluid = ~st.fixed
+    w = fluid.astype(jnp.float32)
+    v2 = jnp.sum(fl.v * fl.v, axis=-1)
+    rho0 = cfg.resolved_scheme.rho0
+    return (
+        st.t,
+        0.5 * jnp.sum(w * fl.m * v2),
+        jnp.sqrt(jnp.max(jnp.where(fluid, v2, 0.0))),
+        jnp.max(jnp.where(fluid, jnp.abs(fl.rho / rho0 - 1.0), 0.0)),
+    )
+
+
+class SimResult(NamedTuple):
+    state: solver.SPHState  # final state, original particle indexing
+    stats: solver.SimStats
+    observables: Observables | None
+
+
+@partial(jax.jit, static_argnums=(0, 2, 3), donate_argnums=(1,))
+def _run_observed_rcll(
+    cfg: solver.SPHConfig, carry: solver.PersistentCarry,
+    nblocks: int, every: int,
+):
+    """(nblocks × every) persistent steps, one observable row per block."""
+
+    def body(c, _):
+        c = solver._scan_steps(cfg, c, every)
+        return c, observe_state(cfg, c.st)
+
+    carry, rows = jax.lax.scan(body, carry, None, length=nblocks)
+    return carry, Observables(*rows)
+
+
+@partial(jax.jit, static_argnums=(0, 2, 3))
+def _run_observed_absolute(
+    cfg: solver.SPHConfig, state: solver.SPHState, nblocks: int, every: int
+):
+    def body(s, _):
+        def inner(ss, _):
+            return solver._step_absolute(cfg, ss), None
+
+        s, _ = jax.lax.scan(inner, s, None, length=every)
+        return s, observe_state(cfg, s)
+
+    state, rows = jax.lax.scan(body, state, None, length=nblocks)
+    return state, Observables(*rows)
+
+
+@dataclasses.dataclass
+class Simulation:
+    """Stateful driver around one (SPHConfig, SPHState) pair.
+
+    ``run`` advances the held state in place and returns a
+    :class:`SimResult`; chaining runs continues the same simulation.
+    Works for every ``cfg.algo`` — the RCLL persistent pipeline is used
+    where available, the absolute-coordinate stepper otherwise.
+    """
+
+    cfg: solver.SPHConfig
+    state: solver.SPHState
+    case: object | None = None  # the CaseSpec that built this, if any
+
+    @classmethod
+    def from_case(cls, name_or_case, **overrides) -> "Simulation":
+        """Build from a registered case name (or a CaseSpec instance)."""
+        case = (
+            cases_lib.build_case(name_or_case, **overrides)
+            if isinstance(name_or_case, str)
+            else name_or_case
+        )
+        cfg, state = case.build()
+        return cls(cfg=cfg, state=state, case=case)
+
+    @property
+    def n_particles(self) -> int:
+        return int(self.state.xn.shape[0])
+
+    def run(self, nsteps: int, observe_every: int = 0) -> SimResult:
+        """Advance ``nsteps`` steps; sample observables every ``observe_every``.
+
+        ``observe_every=0`` disables sampling (``observables=None``) and
+        is then exactly ``solver.simulate_stats``. Otherwise the run
+        takes ``nsteps`` rounded DOWN to a whole number of sample blocks
+        (at least one), so every returned row has uniform spacing.
+
+        The observed RCLL path donates its scan carry (the
+        ``run_persistent`` production semantics): the SPHState this
+        Simulation previously held is invalidated — keep using
+        ``sim.state`` / the returned result, never a state captured
+        before the call.
+        """
+        cfg = self.cfg
+        if observe_every <= 0:
+            out, stats = solver.simulate_stats(cfg, self.state, nsteps)
+            self.state = out
+            return SimResult(out, stats, None)
+
+        every = min(observe_every, nsteps)
+        nblocks = max(1, nsteps // every)
+        if cfg.algo == "rcll":
+            carry = solver.init_persistent(cfg, self.state)
+            carry, obs = _run_observed_rcll(cfg, carry, nblocks, every)
+            stats = solver.SimStats(
+                rebuilds=carry.rebuilds, steps=carry.steps,
+                overflow=carry.overflow,
+            )
+            out = solver.finalize_persistent(cfg, carry)
+        else:
+            out, obs = _run_observed_absolute(
+                cfg, self.state, nblocks, every
+            )
+            n = jnp.asarray(nblocks * every, jnp.int32)
+            stats = solver.SimStats(
+                rebuilds=n, steps=n, overflow=jnp.zeros((), bool)
+            )
+        self.state = out
+        return SimResult(out, stats, obs)
+
+    def run_timed(
+        self, nsteps: int, observe_every: int = 0
+    ) -> tuple[SimResult, float]:
+        """``run`` twice (same shapes — the first call pays the compile)
+        and report steps/sec of the second; returns its SimResult."""
+        warm = self.run(nsteps, observe_every)
+        jax.block_until_ready(warm.state)
+        t0 = time.perf_counter()
+        res = self.run(nsteps, observe_every)
+        jax.block_until_ready(res.state)
+        dt_wall = time.perf_counter() - t0
+        return res, nsteps / dt_wall

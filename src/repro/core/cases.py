@@ -1,8 +1,26 @@
-"""Benchmark cases: 2D Poiseuille flow (Morris 1997 / paper refs 40,42)
-and the cubic-function gradient-accuracy field (paper Table 3).
+"""Scenario cases: the case registry plus the shipped benchmark suite.
 
-Poiseuille: flow between plates y=0 and y=L driven by body force F, no-slip
-walls, periodic in x. Analytic transient (series) solution:
+A *case* is a frozen dataclass implementing the :class:`CaseSpec`
+protocol — ``build()`` returns a ready ``(SPHConfig, SPHState)`` pair,
+and class metadata (``boundary``, ``validation``, ``default_nsteps``)
+feeds the ``python -m repro.sph`` CLI and the docs gallery. Cases are
+registered by name (:func:`register_case`) and instantiated with field
+overrides through :func:`build_case`; :func:`resolve_ds` maps a target
+particle count to a spacing so benchmarks/CI can scale any case.
+
+Shipped cases:
+
+  * ``poiseuille`` — 2-D channel flow (Morris 1997 / paper refs 40,42):
+    periodic-x, no-slip dummy walls, analytic transient profile.
+  * ``dam_break`` — 2-D collapsing water column (Tait EOS + Monaghan
+    artificial viscosity, DualSPHysics-style dynamic walls): non-periodic
+    tank, open top, surge-front position vs the shallow-water scaling.
+  * ``cavity`` — lid-driven cavity: fully enclosed box with a MOVING lid
+    (prescribed wall velocity through ``SPHState.v_wall``).
+  * ``taylor_green`` — 2-D Taylor–Green vortex: fully periodic, analytic
+    viscous kinetic-energy decay rate (the validation oracle).
+
+Poiseuille analytic transient (series) solution:
 
   v_x(y,t) = F/(2 nu) * y (L - y)
            - sum_n 4 F L^2 / (nu pi^3 (2n+1)^3) * sin(pi y (2n+1)/L)
@@ -13,10 +31,14 @@ Nondimensional defaults: L=1, nu=1, v_max = F L^2 / (8 nu).
 from __future__ import annotations
 
 import dataclasses
+from typing import Protocol, runtime_checkable
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import boundaries
+from repro.core import cells as cells_lib
+from repro.core import scheme as scheme_lib
 from repro.core import solver as solver_lib
 from repro.core.domain import Domain
 from repro.core.precision import PrecisionPolicy
@@ -24,6 +46,61 @@ from repro.core.precision import PrecisionPolicy
 Array = jnp.ndarray
 
 
+# --------------------------------------------------------------------------
+# Case registry
+# --------------------------------------------------------------------------
+@runtime_checkable
+class CaseSpec(Protocol):
+    """What the scenario layer requires of a case.
+
+    Required: ``build()``. The CLI/gallery additionally read the class
+    metadata attributes (``boundary``, ``validation``,
+    ``default_nsteps``, ``fluid_area``) and, when present, call
+    ``validate(times, ekin)`` for case-specific analytic checks.
+    """
+
+    name: str
+
+    def build(self) -> tuple["solver_lib.SPHConfig", "solver_lib.SPHState"]:
+        ...
+
+
+CASES: dict[str, type] = {}
+
+
+def register_case(name: str):
+    """Class decorator: register a CaseSpec under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        CASES[name] = cls
+        return cls
+
+    return deco
+
+
+def case_names() -> list[str]:
+    return sorted(CASES)
+
+
+def build_case(name: str, **overrides):
+    """Instantiate a registered case with dataclass-field overrides."""
+    try:
+        cls = CASES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown case {name!r}; registered: {case_names()}"
+        ) from None
+    return cls(**overrides)
+
+
+def resolve_ds(name: str, n_target: int, **overrides) -> float:
+    """Spacing that puts ~``n_target`` particles in the case's fluid body."""
+    case = build_case(name, **overrides)
+    return float(np.sqrt(case.fluid_area / max(1, n_target)))
+
+
+@register_case("poiseuille")
 @dataclasses.dataclass(frozen=True)
 class PoiseuilleCase:
     ds: float = 0.025
@@ -45,6 +122,15 @@ class PoiseuilleCase:
     backend: str | None = None  # None=auto | "reference" | "xla" | "pallas"
     force_chunk: int = 0
     check_overflow: bool = False
+
+    # --- CLI / gallery metadata ---
+    boundary = "periodic x; no-slip dummy walls y (3 layers/side)"
+    validation = "transient velocity profile vs Morris 1997 series"
+    default_nsteps = 400
+
+    @property
+    def fluid_area(self) -> float:
+        return self.L * self.Lx
 
     @property
     def F(self) -> float:
@@ -150,6 +236,401 @@ class PoiseuilleCase:
             )
             disp = disp - term
         return disp
+
+
+# --------------------------------------------------------------------------
+# Dam break (free surface, non-periodic tank, Tait EOS + artificial visc)
+# --------------------------------------------------------------------------
+@register_case("dam_break")
+@dataclasses.dataclass(frozen=True)
+class DamBreakCase:
+    """2-D collapsing water column in an open-topped tank.
+
+    The classic free-surface benchmark (Monaghan 1994; DualSPHysics,
+    arXiv:1110.3711): a column of width ``col_w`` and height ``col_h``
+    held against the left wall collapses under gravity and surges along
+    the floor. Physics follow the standard dam-break recipe: Tait EOS
+    (γ=7), Monaghan artificial viscosity (no laminar term), hydrostatic
+    density initialization, and the DualSPHysics wall-density clamp.
+
+    Validation: the surge-front position; after the initial transient
+    the front advances at ~2√(g·col_h) (the shallow-water dam-break
+    front speed — Ritter's solution), which the CLI reports against the
+    measured front trajectory.
+    """
+
+    ds: float = 0.05
+    width: float = 2.0  # tank inner width
+    height: float = 1.3  # tank inner height (open top, splash headroom)
+    col_w: float = 0.5
+    col_h: float = 1.0
+    g: float = 1.0
+    rho0: float = 1.0
+    alpha: float = 0.1  # Monaghan artificial-viscosity coefficient
+    delta: float = 0.1  # delta-SPH density diffusion
+    gamma: float = 7.0
+    n_wall: int = 3
+    algo: str = "rcll"
+    policy: PrecisionPolicy = PrecisionPolicy()
+    max_neighbors: int = 48
+    backend: str | None = None
+    check_overflow: bool = False
+
+    boundary = "no-slip walls x-lo/x-hi/y-lo (3 layers), open top"
+    validation = "surge-front speed vs 2*sqrt(g*col_h) (Ritter)"
+    default_nsteps = 600
+
+    @property
+    def c0(self) -> float:
+        # WCSPH rule: c0 >= 10 * max flow speed ~ sqrt(2 g col_h)
+        return 10.0 * float(np.sqrt(2.0 * self.g * self.col_h))
+
+    @property
+    def h(self) -> float:
+        return 1.2 * self.ds
+
+    @property
+    def dt(self) -> float:
+        dt_acoustic = 0.25 * self.h / self.c0
+        dt_force = 0.25 * float(np.sqrt(self.h / self.g))
+        return float(min(dt_acoustic, dt_force))
+
+    @property
+    def fluid_area(self) -> float:
+        return self.col_w * self.col_h
+
+    @property
+    def sides(self) -> tuple[tuple[int, int], ...]:
+        return ((0, 0), (0, 1), (1, 0))  # x-lo, x-hi, floor
+
+    def scheme(self) -> scheme_lib.Scheme:
+        return scheme_lib.Scheme(
+            c0=self.c0, rho0=self.rho0, eos="tait", gamma=self.gamma,
+            viscosity="none", alpha=self.alpha, delta=self.delta,
+            body_force=(0.0, -self.g),
+        )
+
+    def domain(self) -> Domain:
+        lo, hi = boundaries.wall_extent(
+            (0.0, 0.0), (self.width, self.height), self.ds, self.n_wall,
+            self.sides,
+        )
+        return Domain(lo=lo, hi=hi, h=self.h, periodic=(False, False))
+
+    def build(self) -> tuple[solver_lib.SPHConfig, solver_lib.SPHState]:
+        fluid = boundaries.fluid_lattice(
+            (0.0, 0.0), (self.col_w, self.col_h), self.ds
+        )
+        walls, _ = boundaries.box_wall_particles(
+            (0.0, 0.0), (self.width, self.height), self.ds, self.n_wall,
+            self.sides,
+        )
+        pos = np.concatenate([fluid, walls])
+        kind = np.concatenate([
+            np.full(len(fluid), boundaries.FLUID, np.int8),
+            np.full(len(walls), boundaries.WALL, np.int8),
+        ])
+        n = pos.shape[0]
+        sch = self.scheme()
+        # Hydrostatic column init (Tait-inverted): ρ(y) = ρ0 (1 + γ p_h /
+        # (ρ0 c0²))^(1/γ), p_h = ρ0 g (col_h − y). Starting in mechanical
+        # equilibrium removes the startup pressure shock.
+        p_h = self.rho0 * self.g * np.maximum(self.col_h - pos[:, 1], 0.0)
+        rho = self.rho0 * (
+            1.0 + self.gamma * p_h / (self.rho0 * self.c0**2)
+        ) ** (1.0 / self.gamma)
+        rho = np.where(kind == boundaries.WALL, self.rho0, rho)
+        m = np.full((n,), self.rho0 * self.ds * self.ds)
+        v = np.zeros((n, 2))
+        dom = self.domain()
+        cfg = solver_lib.SPHConfig(
+            domain=dom,
+            ds=self.ds,
+            dt=self.dt,
+            rho0=self.rho0,
+            c0=self.c0,
+            mu=0.0,
+            body_force=(0.0, -self.g),
+            max_neighbors=self.max_neighbors,
+            # the tank is mostly empty: capacity must fit the DENSE
+            # column, not the domain-mean occupancy
+            capacity=cells_lib.dense_capacity(dom, self.ds),
+            algo=self.algo,
+            policy=self.policy,
+            backend=self.backend,
+            scheme=sch,
+            wall_rho_clamp=True,
+            check_overflow=self.check_overflow,
+        )
+        state = solver_lib.init_state(cfg, pos, v, m, rho, kind=kind)
+        return cfg, state
+
+    def front_position(self, cfg, state) -> float:
+        """Surge-front x: rightmost fluid particle (the CLI's metric)."""
+        pos = np.asarray(solver_lib.positions(cfg, state))
+        fl = ~np.asarray(state.fixed)
+        return float(pos[fl, 0].max())
+
+
+# --------------------------------------------------------------------------
+# Lid-driven cavity (enclosed box, moving wall)
+# --------------------------------------------------------------------------
+@register_case("cavity")
+@dataclasses.dataclass(frozen=True)
+class LidCavityCase:
+    """Lid-driven cavity: enclosed unit box, top lid sliding at ``U``.
+
+    The standard internal-flow benchmark (Ghia et al. 1982). The lid is
+    a MOVING wall: its dummy layers carry the prescribed velocity (U, 0)
+    through ``SPHState.v_wall`` — they drag the fluid through the
+    viscous pair term via the same per-particle v array (and fused
+    record rows) as everything else, but never advect. The lid owns its
+    corners (listed first in ``sides``), matching the usual SPH cavity
+    setup.
+    """
+
+    ds: float = 0.05
+    L: float = 1.0
+    U: float = 1.0  # lid speed
+    Re: float = 100.0
+    rho0: float = 1.0
+    # delta-SPH density diffusion: the lid corners are genuine pressure
+    # singularities; continuity-integrated density drifts there and the
+    # run blows up by ~500 steps without diffusion (rho_err stays ~1%
+    # with it).
+    delta: float = 0.1
+    n_wall: int = 3
+    algo: str = "rcll"
+    policy: PrecisionPolicy = PrecisionPolicy()
+    max_neighbors: int = 48
+    backend: str | None = None
+    check_overflow: bool = False
+
+    boundary = "no-slip walls all sides; MOVING lid y-hi (v_wall=(U,0))"
+    validation = "spin-up to steady recirculation (KE plateau, |v|<=U)"
+    default_nsteps = 600
+
+    @property
+    def nu(self) -> float:
+        return self.U * self.L / self.Re
+
+    @property
+    def c0(self) -> float:
+        return 10.0 * self.U
+
+    @property
+    def h(self) -> float:
+        return 1.2 * self.ds
+
+    @property
+    def dt(self) -> float:
+        dt_acoustic = 0.25 * self.h / self.c0
+        dt_visc = 0.125 * self.h * self.h / self.nu
+        return float(min(dt_acoustic, dt_visc))
+
+    @property
+    def fluid_area(self) -> float:
+        return self.L * self.L
+
+    @property
+    def sides(self) -> tuple[tuple[int, int], ...]:
+        # lid FIRST: corner particles belong to the moving lid
+        return ((1, 1), (1, 0), (0, 0), (0, 1))
+
+    def scheme(self) -> scheme_lib.Scheme:
+        return scheme_lib.Scheme(
+            c0=self.c0, rho0=self.rho0, viscosity="morris",
+            mu=self.rho0 * self.nu, delta=self.delta,
+        )
+
+    def domain(self) -> Domain:
+        lo, hi = boundaries.wall_extent(
+            (0.0, 0.0), (self.L, self.L), self.ds, self.n_wall, self.sides
+        )
+        return Domain(lo=lo, hi=hi, h=self.h, periodic=(False, False))
+
+    def build(self) -> tuple[solver_lib.SPHConfig, solver_lib.SPHState]:
+        box = ((0.0, 0.0), (self.L, self.L))
+        fluid = boundaries.fluid_lattice(*box, self.ds)
+        walls, v_walls = boundaries.box_wall_particles(
+            *box, self.ds, self.n_wall, self.sides,
+            velocities={(1, 1): (self.U, 0.0)},
+        )
+        pos = np.concatenate([fluid, walls])
+        kind = np.concatenate([
+            np.full(len(fluid), boundaries.FLUID, np.int8),
+            np.full(len(walls), boundaries.WALL, np.int8),
+        ])
+        v_wall = np.concatenate([
+            np.zeros((len(fluid), 2), np.float32), v_walls
+        ])
+        n = pos.shape[0]
+        m = np.full((n,), self.rho0 * self.ds * self.ds)
+        rho = np.full((n,), self.rho0)
+        # walls START at their prescribed velocity so the first force
+        # evaluation already sees the moving lid
+        v = v_wall.copy()
+        cfg = solver_lib.SPHConfig(
+            domain=self.domain(),
+            ds=self.ds,
+            dt=self.dt,
+            rho0=self.rho0,
+            c0=self.c0,
+            mu=self.rho0 * self.nu,
+            body_force=(0.0, 0.0),
+            max_neighbors=self.max_neighbors,
+            algo=self.algo,
+            policy=self.policy,
+            backend=self.backend,
+            scheme=self.scheme(),
+            check_overflow=self.check_overflow,
+        )
+        state = solver_lib.init_state(
+            cfg, pos, v, m, rho, kind=kind, v_wall=v_wall
+        )
+        return cfg, state
+
+
+# --------------------------------------------------------------------------
+# Taylor–Green vortex (fully periodic, analytic viscous decay)
+# --------------------------------------------------------------------------
+@register_case("taylor_green")
+@dataclasses.dataclass(frozen=True)
+class TaylorGreenCase:
+    """2-D Taylor–Green vortex: the analytic-decay validation case.
+
+    Fully periodic box, initial field
+        u =  U sin(kx) cos(ky),  v = -U cos(kx) sin(ky),  k = 2π/L,
+    an exact Navier–Stokes solution decaying as exp(−2νk²t) in velocity,
+    i.e. kinetic energy ∝ exp(−4νk²t) (:meth:`decay_rate`). Density is
+    initialized through the linear EOS from the analytic pressure
+    p = −ρ0U²/4 (cos 2kx + cos 2ky), which suppresses the acoustic
+    startup transient that a uniform-density start would ring with.
+
+    The measured KE decay includes SPH's resolution-dependent numerical
+    dissipation, so validation windows/resolutions matter: at the
+    defaults (ds=1/32, Re=20) the log-KE slope over t ∈ [0.02, 0.1]
+    matches 4νk² within a few percent.
+    """
+
+    ds: float = 1.0 / 32.0
+    L: float = 1.0
+    U: float = 1.0
+    Re: float = 20.0
+    rho0: float = 1.0
+    algo: str = "rcll"
+    policy: PrecisionPolicy = PrecisionPolicy()
+    max_neighbors: int = 48
+    backend: str | None = None
+    check_overflow: bool = False
+
+    boundary = "fully periodic (no walls)"
+    validation = "KE decay rate vs analytic 4*nu*k^2 (<5%)"
+    default_nsteps = 600
+
+    @property
+    def nu(self) -> float:
+        return self.U * self.L / self.Re
+
+    @property
+    def c0(self) -> float:
+        return 10.0 * self.U
+
+    @property
+    def h(self) -> float:
+        return 1.2 * self.ds
+
+    @property
+    def dt(self) -> float:
+        dt_acoustic = 0.25 * self.h / self.c0
+        dt_visc = 0.125 * self.h * self.h / self.nu
+        return float(min(dt_acoustic, dt_visc))
+
+    @property
+    def fluid_area(self) -> float:
+        return self.L * self.L
+
+    @property
+    def k(self) -> float:
+        return 2.0 * np.pi / self.L
+
+    @property
+    def decay_rate(self) -> float:
+        """Analytic kinetic-energy decay rate: KE(t) = KE(0) e^{-λt}."""
+        return 4.0 * self.nu * self.k * self.k
+
+    def scheme(self) -> scheme_lib.Scheme:
+        return scheme_lib.wcsph(self.c0, self.rho0, self.rho0 * self.nu)
+
+    def domain(self) -> Domain:
+        return Domain(
+            lo=(0.0, 0.0), hi=(self.L, self.L), h=self.h,
+            periodic=(True, True),
+        )
+
+    def build(self) -> tuple[solver_lib.SPHConfig, solver_lib.SPHState]:
+        pos = boundaries.fluid_lattice((0.0, 0.0), (self.L, self.L), self.ds)
+        n = pos.shape[0]
+        kx, ky = self.k * pos[:, 0], self.k * pos[:, 1]
+        v = self.U * np.stack(
+            [np.sin(kx) * np.cos(ky), -np.cos(kx) * np.sin(ky)], axis=-1
+        )
+        p0 = -self.rho0 * self.U**2 / 4.0 * (np.cos(2 * kx) + np.cos(2 * ky))
+        rho = self.rho0 + p0 / self.c0**2  # linear-EOS-consistent init
+        m = np.full((n,), self.rho0 * self.ds * self.ds)
+        cfg = solver_lib.SPHConfig(
+            domain=self.domain(),
+            ds=self.ds,
+            dt=self.dt,
+            rho0=self.rho0,
+            c0=self.c0,
+            mu=self.rho0 * self.nu,
+            body_force=(0.0, 0.0),
+            max_neighbors=self.max_neighbors,
+            algo=self.algo,
+            policy=self.policy,
+            backend=self.backend,
+            scheme=self.scheme(),
+            check_overflow=self.check_overflow,
+        )
+        state = solver_lib.init_state(cfg, pos, v, m, rho)
+        return cfg, state
+
+    def analytic_ekin(self, ekin0: float, t) -> np.ndarray:
+        return ekin0 * np.exp(-self.decay_rate * np.asarray(t))
+
+    def fit_decay_rate(self, times, ekin, frac_window: float = 0.5) -> float:
+        """Least-squares slope of −log KE(t) over the validated window.
+
+        The window is the first KE *half-life* (samples with KE >=
+        ``frac_window`` × the back-extrapolated KE(0)): beyond it the
+        particle lattice has disordered and SPH's resolution-dependent
+        numerical dissipation steepens the decay — a real SPH property,
+        not a solver bug, so validation compares where the analytic
+        solution is the dominant physics (within ~3% at the defaults).
+        """
+        t = np.asarray(times, np.float64)
+        e = np.asarray(ekin, np.float64)
+        e0 = e[0] / np.exp(-self.decay_rate * t[0])
+        keep = (e > 0) & (e >= frac_window * e0)
+        if keep.sum() < 2:
+            # observation window starts past the first half-life (e.g. a
+            # warm-started sim): fall back to fitting every positive
+            # sample — no crash, though the fit then includes the
+            # disorder-dissipation regime.
+            keep = e > 0
+        a = np.polyfit(t[keep], np.log(e[keep]), 1)
+        return float(-a[0])
+
+    def validate(self, times, ekin) -> dict:
+        """CLI hook: measured vs analytic KE decay (first half-life)."""
+        lam = self.fit_decay_rate(times, ekin)
+        ana = self.decay_rate
+        return {
+            "decay_rate_measured": lam,
+            "decay_rate_analytic": ana,
+            "decay_rate_rel_err": abs(lam - ana) / ana,
+        }
 
 
 def gradient_test_particles(

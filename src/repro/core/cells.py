@@ -365,7 +365,24 @@ def from_cell_major(binning: CellBinning, table_vals: Array) -> Array:
 
 
 def default_capacity(domain: Domain, n_particles: int, safety: float = 3.0) -> int:
-    """Static per-cell capacity estimate: mean occupancy x safety, >= 4."""
+    """Static per-cell capacity estimate: mean occupancy x safety, >= 4.
+
+    Calibrated for particle sets that FILL the domain. A mostly-empty
+    domain (free-surface cases: a dam-break column in a large tank)
+    drags the mean far below the dense-region occupancy and silently
+    drops particles — use :func:`dense_capacity` there.
+    """
     mean = n_particles / max(1, domain.ncells_total)
     cap = int(np.ceil(mean * safety)) + 2
     return max(4, cap)
+
+
+def dense_capacity(domain: Domain, ds: float, safety: float = 1.5) -> int:
+    """Per-cell capacity for a CLOSE-PACKED region at lattice spacing ds.
+
+    Upper-bounds a cell's occupancy by the lattice count of its largest
+    edge plus one straddle row per axis, times a compression safety —
+    independent of how much of the domain the fluid occupies.
+    """
+    edge = max(domain.cell_sizes) / ds + 1.0
+    return max(4, int(np.ceil(edge**domain.dim * safety)))

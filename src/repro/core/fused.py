@@ -81,6 +81,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bspline, rcll, sph
+from repro.core import scheme as scheme_lib
 from repro.core.domain import Domain
 from repro.core.nnps import NeighborList
 from repro.core.precision import dtype_of
@@ -199,7 +200,7 @@ def _pair_rhs(
     por2_i, por2_j,  # (...,) fp32 p/ρ²
     inv_i, inv_j,  # (...,) fp32 reciprocal densities 1/ρ
     *,
-    mu: float,
+    scheme: scheme_lib.Scheme,
 ):
     """(drho, acc) pair sums over the trailing K axis.
 
@@ -208,19 +209,37 @@ def _pair_rhs(
     pair-coefficient, then s * disp_a / s * dv_a), an exact regrouping
     of ``sph.momentum_rhs_terms`` / ``continuity_rhs_pairs`` — same
     terms, fewer per-axis multiplies. Densities enter as reciprocals
-    (see ``sph.eos_tait_por2_inv``).
+    (see ``sph.eos_tait_por2_inv``). The physics terms themselves come
+    from the static ``scheme`` (core/scheme.py): the ∇W channel
+    (pressure + optional artificial viscosity) and the dv channel
+    (Morris viscosity), each skipped entirely at trace time when the
+    scheme disables it.
     """
     disp, r2, coef = _pair_geometry(domain, q_i, q_j)
     dv = v_i - v_j
+    dv_dot_disp = jnp.sum(dv * disp, axis=-1)
     # Σ m_j (dv·∇W): ∇W_a = coef·disp_a -> fold coef out of the dot.
-    drho = jnp.sum(mj * coef * jnp.sum(dv * disp, axis=-1), axis=-1)
-    # Pressure: -Σ [m_j (p/ρ²_i + p/ρ²_j) coef] disp_a.
-    pc = sph.pressure_pair_coef(mj, por2_i, por2_j) * coef
-    # Viscosity: x·∇W = coef·r2 (already folded in the shared coef).
-    vc = sph.viscosity_pair_coef_inv(
-        mj, coef * r2, inv_i, inv_j, r2, h=domain.h, mu=mu
-    )
-    acc = jnp.sum(vc[..., None] * dv - pc[..., None] * disp, axis=-2)
+    drho = jnp.sum(mj * coef * dv_dot_disp, axis=-1)
+    if scheme.has_delta_term:
+        # continuity channel: delta-SPH diffusion (x·∇W = coef·r2)
+        drho = drho + jnp.sum(
+            scheme.drho_pair_term(
+                mj, inv_i, inv_j, coef * r2, r2, h=domain.h
+            ),
+            axis=-1,
+        )
+    # ∇W channel: -Σ [C_ij coef] disp_a (pressure + artificial visc).
+    gc = scheme.gradw_pair_coef(
+        mj, por2_i, por2_j, inv_i, inv_j, dv_dot_disp, r2, h=domain.h
+    ) * coef
+    if scheme.has_dv_term:
+        # dv channel: x·∇W = coef·r2 (already folded in the shared coef).
+        vc = scheme.dv_pair_coef(
+            mj, coef * r2, inv_i, inv_j, r2, h=domain.h
+        )
+        acc = jnp.sum(vc[..., None] * dv - gc[..., None] * disp, axis=-2)
+    else:
+        acc = -jnp.sum(gc[..., None] * disp, axis=-2)
     return drho, acc
 
 
@@ -322,7 +341,9 @@ def _sanitized_idx(nl: NeighborList, n: int) -> Array:
 
 @partial(
     jax.jit,
-    static_argnames=("domain", "chunk", "mu", "c0", "rho0", "records"),
+    static_argnames=(
+        "domain", "chunk", "mu", "c0", "rho0", "records", "scheme"
+    ),
 )
 def force_rhs(
     domain: Domain,
@@ -332,22 +353,28 @@ def force_rhs(
     m: Array,  # (N,) f32
     rho: Array,  # (N,) f32 current density
     *,
-    c0: float,  # EOS speed of sound (p and p/ρ² are derived in here)
+    c0: float | None = None,  # legacy WCSPH shorthand (see ``scheme``)
     rho0: float = 1.0,
     chunk: int = 0,
     mu: float = 0.0,
     records: str = "fp32",
     idx_dummy: Array | None = None,
+    scheme: scheme_lib.Scheme | None = None,
 ) -> tuple[Array, Array]:
-    """The full WCSPH pair RHS in ONE cell-blocked pass.
+    """The full SPH pair RHS in ONE cell-blocked pass.
 
     Returns (drho (N,), acc (N, d)): the continuity sum and the momentum
-    sum (pressure + Morris viscosity), both at the current state. One
-    record gather (plus, in the half-width layout, one fp32 rho gather)
-    and one geometry decode feed both sums; no (N, K) intermediate
-    exists outside the live chunk. Body force and the fixed-particle
-    mask are applied by the caller (per-particle terms — nothing
-    pairwise about them).
+    sum (∇W channel + dv channel of the ``scheme``), both at the current
+    state. One record gather (plus, in the half-width layout, one fp32
+    rho gather) and one geometry decode feed both sums; no (N, K)
+    intermediate exists outside the live chunk. Body force and the
+    wall-particle mask are applied by the caller (per-particle terms —
+    nothing pairwise about them).
+
+    ``scheme`` (static) selects the physics terms (core/scheme.py).
+    The legacy ``c0``/``rho0``/``mu`` kwargs build the PR 2/3 WCSPH
+    scheme (linear Tait + Morris) when ``scheme`` is omitted — existing
+    callers are unchanged.
 
     ``records`` selects the record layout (see module docstring):
     "fp32" is the full-width accuracy oracle, "fp16"/"bf16" the
@@ -360,6 +387,11 @@ def force_rhs(
     The persistent solver computes them once per REBUILD (the list is
     static between rebuilds) instead of once per step.
     """
+    if scheme is None:
+        if c0 is None:
+            raise ValueError("pass either scheme= or the legacy c0=")
+        scheme = scheme_lib.wcsph(c0, rho0, mu)
+    rho0 = scheme.rho0
     d = domain.dim
     n = rc.rel.shape[0]
     rdt = dtype_of(records)
@@ -379,7 +411,7 @@ def force_rhs(
     inv = (1.0 / rho).astype(jnp.float32)
 
     if not half:
-        rec = _records(rc, v, m, inv, sph.eos_tait_por2_inv(inv, rho0, c0))
+        rec = _records(rc, v, m, inv, scheme.por2_inv(inv))
         rec = rec.at[n, 2 * d + 2].set(0.0)  # dummy p/ρ² (1/ρ stays 1)
 
         def body(args):
@@ -392,7 +424,7 @@ def force_rhs(
                 rec_j[..., 2 * d],  # m_j: 0 on the dummy row
                 rec_i[:, None, 2 * d + 2], rec_j[..., 2 * d + 2],
                 rec_i[:, None, 2 * d + 1], rec_j[..., 2 * d + 1],
-                mu=mu,
+                scheme=scheme,
             )
 
         pad_rows = (jnp.full((idx.shape[1],), n, jnp.int32), rec[n])
@@ -443,10 +475,10 @@ def force_rhs(
             q_i[:, None, :], q_j,
             v_i[:, None, :], v_j,
             m_j,
-            sph.eos_tait_por2_inv(inv_i, rho0, c0)[:, None],
-            sph.eos_tait_por2_inv(inv_j, rho0, c0),
+            scheme.por2_inv(inv_i)[:, None],
+            scheme.por2_inv(inv_j),
             inv_i[:, None], inv_j,
-            mu=mu,
+            scheme=scheme,
         )
 
     pad_rows = (

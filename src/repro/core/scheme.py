@@ -1,0 +1,215 @@
+"""Pluggable physics schemes: the declarative pair-term layer.
+
+Through PR 3 the WCSPH right-hand side (linear Tait EOS + Morris
+viscosity + constant body force) was hardwired three times over — in the
+reference gather path (``solver._force_rhs_reference``), the fused XLA
+sweep (``core/fused.py``), and the Pallas force kernel
+(``kernels/rcll_force.py``). A :class:`Scheme` factors those physics
+choices out into ONE static (trace-time) specification that every
+backend consumes, so adding an EOS or a viscosity model is a change to
+this module alone.
+
+Design constraints, inherited from the fused force pass:
+
+  * a Scheme is a frozen dataclass of floats/strings — hashable, so it
+    rides through ``jax.jit`` as a static argument exactly like Domain;
+  * every pair term is expressed through two coefficient channels (the
+    shape the single-sweep algebra supports):
+
+      - the **∇W channel** (:meth:`gradw_pair_coef`): terms of the form
+        ``-Σ_j C_ij ∇W_ij`` — symmetric pressure, Monaghan artificial
+        viscosity;
+      - the **dv channel** (:meth:`dv_pair_coef`): terms of the form
+        ``+Σ_j C_ij (v_i - v_j)`` — Morris laminar viscosity;
+
+    both channels are elementwise over pair-shaped arrays of ANY leading
+    shape — an (N, K) neighbor matrix, a (chunk, K) fused slab, or a
+    (cap, cap) Pallas tile — which is what lets one definition serve all
+    three backends;
+  * densities enter as RECIPROCALS (the PR 3 bandwidth decision): the
+    fused layouts gather one fp32 ``1/ρ`` field and recompute ``p/ρ²``
+    division-free per pair (:meth:`por2_inv`).
+
+The default scheme (:func:`wcsph`) reproduces the PR 2/3 physics term
+for term — for ``eos="linear"`` the EOS/viscosity expressions delegate
+to the exact ``core/sph.py`` primitives the backends used before, so
+the refactor is bit-preserving on the existing test suite.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import sph
+
+Array = jnp.ndarray
+
+EOS_KINDS = ("linear", "tait")
+VISCOSITY_KINDS = ("morris", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheme:
+    """Static description of the SPH physics terms of one simulation.
+
+    Attributes:
+      c0: speed of sound of the weakly-compressible EOS.
+      rho0: reference density.
+      eos: ``"linear"`` — p = c0²(ρ − ρ0) (the PR 2/3 EOS) — or
+        ``"tait"`` — p = B[(ρ/ρ0)^γ − 1], B = c0²ρ0/γ (the classic
+        dam-break EOS).
+      gamma: Tait exponent (ignored for the linear EOS).
+      viscosity: ``"morris"`` — Morris et al. 1997 laminar viscosity
+        with dynamic viscosity ``mu`` — or ``"none"``.
+      mu: dynamic viscosity (rho0 * nu) of the Morris term.
+      alpha: Monaghan artificial-viscosity coefficient (0 disables the
+        term). Standard for shock/impact flows (dam break); rides the
+        ∇W channel next to the pressure term.
+      delta: delta-SPH density-diffusion coefficient (Molteni &
+        Colagrossi 2009; 0 disables). A CONTINUITY-channel pair term
+        that diffuses the density field along density differences —
+        without it, continuity-integrated density drifts under particle
+        disorder and the stiff Tait pressure amplifies the drift into
+        blowup on free-surface flows. Typical value 0.1.
+      body_force: constant acceleration vector, () = zeros.
+    """
+
+    c0: float
+    rho0: float = 1.0
+    eos: str = "linear"
+    gamma: float = 7.0
+    viscosity: str = "morris"
+    mu: float = 0.0
+    alpha: float = 0.0
+    delta: float = 0.0
+    body_force: tuple[float, ...] = ()
+
+    def __post_init__(self):
+        if self.eos not in EOS_KINDS:
+            raise ValueError(
+                f"unknown eos {self.eos!r}; one of {EOS_KINDS}")
+        if self.viscosity not in VISCOSITY_KINDS:
+            raise ValueError(
+                f"unknown viscosity {self.viscosity!r}; one of "
+                f"{VISCOSITY_KINDS}")
+
+    # ---- per-particle EOS -------------------------------------------------
+    def pressure(self, rho: Array) -> Array:
+        """p(ρ) — the per-particle EOS (diagnostics / legacy callers)."""
+        if self.eos == "linear":
+            return sph.eos_tait(rho, self.rho0, self.c0)
+        B = self.c0 * self.c0 * self.rho0 / self.gamma
+        return B * ((rho / self.rho0) ** self.gamma - 1.0)
+
+    def por2_inv(self, inv_rho: Array) -> Array:
+        """p/ρ² from the RECIPROCAL density (the fused layouts' density
+        field — see ``sph.eos_tait_por2_inv`` for why)."""
+        if self.eos == "linear":
+            return sph.eos_tait_por2_inv(inv_rho, self.rho0, self.c0)
+        B = self.c0 * self.c0 * self.rho0 / self.gamma
+        ratio = self.rho0 * inv_rho  # ρ0/ρ
+        return B * (ratio ** -self.gamma - 1.0) * inv_rho * inv_rho
+
+    # ---- pair-term channels ----------------------------------------------
+    @property
+    def has_dv_term(self) -> bool:
+        """Trace-time: does the dv channel contribute at all?"""
+        return self.viscosity == "morris" and self.mu != 0.0
+
+    @property
+    def has_av_term(self) -> bool:
+        return self.alpha != 0.0
+
+    @property
+    def has_delta_term(self) -> bool:
+        return self.delta != 0.0
+
+    def gradw_pair_coef(
+        self,
+        mj: Array,  # (...,) neighbor mass, 0 on invalid slots
+        por2_i: Array,  # (...,) p_i/ρ_i² (layouts precompute or fold this)
+        por2_j: Array,
+        inv_i: Array,  # (...,) reciprocal densities
+        inv_j: Array,
+        dv_dot_disp: Array,  # (...,) (v_i - v_j)·(x_i - x_j)
+        r2: Array,  # (...,) squared pair distance
+        *,
+        h: float,
+    ) -> Array:
+        """Coefficient of ∇W in the momentum sum: acc -= Σ C ∇W.
+
+        Pressure (always) + Monaghan artificial viscosity (alpha > 0):
+          Π_ij = -α c0 h (dv·dx) / [ρ̄_ij (r² + 0.01 h²)]  for dv·dx < 0
+        with 1/ρ̄ = 2 inv_i inv_j / (inv_i + inv_j) — reciprocal form,
+        finite on the dummy row (inv > 0) and killed there by mj = 0.
+        """
+        coef = sph.pressure_pair_coef(mj, por2_i, por2_j)
+        if self.has_av_term:
+            mu_ij = dv_dot_disp / (r2 + 0.01 * h * h)
+            rho_bar_inv = 2.0 * inv_i * inv_j / (inv_i + inv_j)
+            pi_ij = -self.alpha * self.c0 * h * mu_ij * rho_bar_inv
+            coef = coef + mj * jnp.where(dv_dot_disp < 0.0, pi_ij, 0.0)
+        return coef
+
+    def dv_pair_coef(
+        self,
+        mj: Array,
+        x_dot_gw: Array,  # (...,) (x_i - x_j)·∇W
+        inv_i: Array,
+        inv_j: Array,
+        r2: Array,
+        *,
+        h: float,
+    ) -> Array:
+        """Coefficient of (v_i − v_j) in the momentum sum: acc += Σ C dv.
+
+        Only call when :attr:`has_dv_term` (callers skip the whole
+        channel at trace time otherwise — no zero-multiplied work).
+        """
+        return sph.viscosity_pair_coef_inv(
+            mj, x_dot_gw, inv_i, inv_j, r2, h=h, mu=self.mu
+        )
+
+    def drho_pair_term(
+        self,
+        mj: Array,
+        inv_i: Array,
+        inv_j: Array,
+        x_dot_gw: Array,  # (...,) (x_i - x_j)·∇W  (= coef·r² unfolded)
+        r2: Array,
+        *,
+        h: float,
+    ) -> Array:
+        """Extra continuity-channel pair term: delta-SPH diffusion.
+
+        dρ_i/dt += δ h c0 Σ_j 2(ρ_j − ρ_i) (x_ji·∇W)/(r² + 0.01h²) V_j
+        with V_j = m_j/ρ_j and x_ji·∇W = −x_dot_gw. Reciprocal form:
+        ρ_j − ρ_i = (inv_i − inv_j)/(inv_i inv_j), V_j = m_j inv_j.
+        Only call when :attr:`has_delta_term`.
+        """
+        rho_diff = (inv_i - inv_j) / (inv_i * inv_j)  # ρ_j − ρ_i
+        return (2.0 * self.delta * h * self.c0) * mj * inv_j * rho_diff * (
+            -x_dot_gw
+        ) / (r2 + 0.01 * h * h)
+
+    def body_force_vec(self, dim: int) -> Array:
+        bf = self.body_force or (0.0,) * dim
+        if len(bf) != dim:
+            raise ValueError(
+                f"body_force {self.body_force} has {len(bf)} components; "
+                f"domain is {dim}-D")
+        return jnp.asarray(bf, jnp.float32)
+
+
+def wcsph(
+    c0: float,
+    rho0: float = 1.0,
+    mu: float = 0.0,
+    body_force: tuple[float, ...] = (),
+) -> Scheme:
+    """The PR 2/3 hardwired physics as a Scheme (linear EOS + Morris)."""
+    return Scheme(
+        c0=c0, rho0=rho0, eos="linear", viscosity="morris", mu=mu,
+        body_force=tuple(body_force),
+    )

@@ -63,6 +63,7 @@ import jax.numpy as jnp
 
 from repro.core import cells as cells_lib
 from repro.core import fused, nnps, rcll, sph
+from repro.core import scheme as scheme_lib
 from repro.core.domain import Domain
 from repro.core.precision import PrecisionPolicy
 
@@ -82,6 +83,17 @@ class SPHConfig:
     capacity: int | None = None
     algo: str = "rcll"  # "all" | "cell" | "rcll"
     policy: PrecisionPolicy = PrecisionPolicy()
+    # Physics-term specification (core/scheme.py). None builds the
+    # legacy WCSPH scheme from rho0/c0/mu/body_force above, so every
+    # pre-scheme call site keeps its exact behavior; cases that want a
+    # different EOS / viscosity model pass a Scheme directly (the
+    # legacy scalar fields are then ignored by the solver).
+    scheme: scheme_lib.Scheme | None = None
+    # Clamp wall-particle density at >= rho0 after the continuity
+    # update (the DualSPHysics dummy-particle treatment): free-surface
+    # cases (dam break) otherwise develop tensile wall underpressure
+    # that sticks fluid to the walls.
+    wall_rho_clamp: bool = False
     # --- persistent-pipeline knobs (RCLL path only) ---
     skin: float = 0.0  # physical Verlet-skin width added to the search radius
     rebuild_every: int | None = None  # static rebuild cadence (overrides skin)
@@ -121,6 +133,15 @@ class SPHConfig:
         )
 
     @property
+    def resolved_scheme(self) -> scheme_lib.Scheme:
+        """The physics-term spec the force backends consume (static)."""
+        if self.scheme is not None:
+            return self.scheme
+        return scheme_lib.wcsph(
+            self.c0, self.rho0, self.mu, self.body_force
+        )
+
+    @property
     def resolved_backend(self) -> str:
         if self.backend is not None:
             if self.backend not in ("reference", "xla", "pallas"):
@@ -152,13 +173,24 @@ class SPHState(NamedTuple):
     """Particle system state. ``xn`` is the normalized-absolute position
     (source of truth for algos all/cell); ``rc`` is the RCLL state (source
     of truth for algo rcll). The inactive representation is frozen at its
-    initial value and never read."""
+    initial value and never read.
+
+    Boundary fields (core/boundaries.py): ``fixed`` marks wall/dummy
+    particles — they ride every pair sum (density, pressure, viscosity)
+    through the same arrays/record rows as fluid particles but are never
+    advected, and their velocity is PRESCRIBED: ``v_wall`` where given
+    (moving lids), 0 otherwise. ``kind`` is the int8 classification the
+    mask derives from (boundaries.FLUID/WALL), carried for observables
+    and future kinds; None on legacy states (then fixed is authoritative).
+    """
 
     xn: Array  # (N, d) fp32 normalized absolute positions
     rc: rcll.RCLLState
     fluid: sph.FluidState
-    fixed: Array  # (N,) bool - wall/dummy particles (v pinned to 0)
+    fixed: Array  # (N,) bool - wall/dummy particles (never advected)
     t: Array  # () fp32 simulation time
+    kind: Array | None = None  # (N,) int8 boundaries.FLUID / WALL
+    v_wall: Array | None = None  # (N, d) fp32 prescribed wall velocity
 
 
 class PersistentCarry(NamedTuple):
@@ -199,7 +231,7 @@ class SimStats(NamedTuple):
 
 
 def init_state(
-    cfg: SPHConfig, x_phys, v, m, rho, fixed=None
+    cfg: SPHConfig, x_phys, v, m, rho, fixed=None, kind=None, v_wall=None
 ) -> SPHState:
     xn = cfg.domain.normalize(jnp.asarray(x_phys), dtype=jnp.float32)
     rc = rcll.init_state(cfg.domain, xn, dtype=cfg.policy.coords_dtype)
@@ -209,10 +241,19 @@ def init_state(
         rho=jnp.asarray(rho, jnp.float32),
         m=jnp.asarray(m, jnp.float32),
     )
+    if kind is not None:
+        kind = jnp.asarray(kind, jnp.int8)
+        if fixed is None:
+            fixed = kind != 0  # boundaries.FLUID
     if fixed is None:
         fixed = jnp.zeros((n,), bool)
+    fixed = jnp.asarray(fixed, bool)
+    if kind is None:
+        kind = fixed.astype(jnp.int8)  # boundaries.WALL == 1
+    if v_wall is not None:
+        v_wall = jnp.asarray(v_wall, jnp.float32)
     return SPHState(xn=xn, rc=rc, fluid=fluid, fixed=fixed,
-                    t=jnp.zeros((), jnp.float32))
+                    t=jnp.zeros((), jnp.float32), kind=kind, v_wall=v_wall)
 
 
 def positions(cfg: SPHConfig, state: SPHState, dtype=jnp.float32) -> Array:
@@ -237,6 +278,8 @@ def _permute_state(st: SPHState, perm: Array, rc: rcll.RCLLState) -> SPHState:
         ),
         fixed=st.fixed[perm],
         t=st.t,
+        kind=None if st.kind is None else st.kind[perm],
+        v_wall=None if st.v_wall is None else st.v_wall[perm],
     )
 
 
@@ -376,6 +419,53 @@ def _needs_rebuild(cfg: SPHConfig, carry: PersistentCarry) -> Array:
     return max_disp > 0.5 * cfg.skin_norm
 
 
+def _gathered_pair_rhs(
+    sch: scheme_lib.Scheme,
+    dom: Domain,
+    fl: sph.FluidState,
+    nl: nnps.NeighborList,
+    disp: Array,  # (N, K, d) x_i - x_j
+    r: Array,  # (N, K)
+    gw: Array,  # (N, K, d) masked kernel gradient
+):
+    """(drho, acc) pair sums of ``sch`` on gathered (N, K) pair arrays.
+
+    The gather-path evaluation of the scheme's two momentum channels —
+    the same ∇W/dv split as ``fused._pair_rhs`` and the Pallas force
+    kernel, on the materialized pair arrays. Shared by the reference
+    RCLL backend and the absolute-coordinate step, so every path in the
+    solver consumes ONE scheme definition. Densities enter as
+    reciprocals exactly like the fused layouts (N divisions, none per
+    pair).
+    """
+    # Gather pair fields ONCE; continuity + momentum share them.
+    pf = sph.gather_pair_fields(fl.v, fl.m, nl.idx, nl.mask)
+    drho = sph.continuity_rhs_pairs(pf, gw)
+    inv = (1.0 / fl.rho).astype(jnp.float32)
+    por2 = sch.por2_inv(inv)
+    inv_i, inv_j = inv[:, None], inv[nl.idx]
+    r2 = r * r
+    dv_dot_disp = jnp.sum(pf.dv * disp, axis=-1)
+    gc = sch.gradw_pair_coef(
+        pf.mj, por2[:, None], por2[nl.idx], inv_i, inv_j,
+        dv_dot_disp, r2, h=dom.h,
+    )
+    acc = -jnp.sum(gc[..., None] * gw, axis=-2)
+    if sch.has_dv_term or sch.has_delta_term:
+        x_dot_gw = jnp.sum(disp * gw, axis=-1)
+    if sch.has_dv_term:
+        vc = sch.dv_pair_coef(pf.mj, x_dot_gw, inv_i, inv_j, r2, h=dom.h)
+        acc = acc + jnp.sum(vc[..., None] * pf.dv, axis=-2)
+    if sch.has_delta_term:
+        drho = drho + jnp.sum(
+            sch.drho_pair_term(
+                pf.mj, inv_i, inv_j, x_dot_gw, r2, h=dom.h
+            ),
+            axis=-1,
+        )
+    return drho, acc
+
+
 def _force_rhs_reference(cfg: SPHConfig, carry: PersistentCarry):
     """Gather path: per-pair arrays materialized in HBM (the oracle).
 
@@ -388,17 +478,9 @@ def _force_rhs_reference(cfg: SPHConfig, carry: PersistentCarry):
     st, nl = carry.st, carry.nl
     disp, r = rcll.pair_displacements(dom, st.rc, nl, dtype=pol.physics_dtype)
     gw = sph.grad_w(disp, r, cfg.h, dom.dim, nl.mask)
-
-    fl = st.fluid
-    # Gather pair fields ONCE; continuity + momentum share them.
-    pf = sph.gather_pair_fields(fl.v, fl.m, nl.idx, nl.mask)
-    drho = sph.continuity_rhs_pairs(pf, gw)
-    p = sph.eos_tait(fl.rho, cfg.rho0, cfg.c0)
-    acc = sph.momentum_rhs_pairs(
-        pf, fl.rho, p, nl.idx, gw, disp, r, h=cfg.h, mu=cfg.mu,
-        body_force=jnp.zeros((dom.dim,), jnp.float32),
+    return _gathered_pair_rhs(
+        cfg.resolved_scheme, dom, st.fluid, nl, disp, r, gw
     )
-    return drho, acc
 
 
 def _resolved_records(cfg: SPHConfig) -> str:
@@ -422,7 +504,7 @@ def _force_rhs_fused_xla(cfg: SPHConfig, carry: PersistentCarry):
     st, nl, fl = carry.st, carry.nl, carry.st.fluid
     return fused.force_rhs(
         cfg.domain, st.rc, nl, fl.v, fl.m, fl.rho,
-        c0=cfg.c0, rho0=cfg.rho0, chunk=cfg.force_chunk, mu=cfg.mu,
+        scheme=cfg.resolved_scheme, chunk=cfg.force_chunk,
         records=_resolved_records(cfg), idx_dummy=carry.idx_dummy,
     )
 
@@ -435,7 +517,7 @@ def _force_rhs_fused_pallas(cfg: SPHConfig, carry: PersistentCarry):
     st, fl = carry.st, carry.st.fluid
     return ops.rcll_force_particles(
         dom, carry.binning, st.rc, fl.v, fl.m, fl.rho,
-        mu=cfg.mu, c0=cfg.c0, rho0=cfg.rho0,
+        scheme=cfg.resolved_scheme,
         records_dtype=cfg.policy.records_dtype,
     )
 
@@ -458,15 +540,24 @@ def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
     per-particle and shared.
     """
     dom, pol = cfg.domain, cfg.policy
+    sch = cfg.resolved_scheme
     st, fl = carry.st, carry.st.fluid
     drho, acc = _FORCE_BACKENDS[cfg.resolved_backend](cfg, carry)
     rho = fl.rho + cfg.dt * drho
+    if cfg.wall_rho_clamp:
+        rho = jnp.where(st.fixed, jnp.maximum(rho, sch.rho0), rho)
 
-    bf = jnp.asarray(cfg.body_force, jnp.float32)
+    bf = sch.body_force_vec(dom.dim)
     v = fl.v + cfg.dt * (acc + bf)
-    v = jnp.where(st.fixed[:, None], 0.0, v)
+    # Walls: prescribed velocity (0 or v_wall), never advected. The
+    # prescribed values flow into the next step's pair sums through the
+    # same v array (and thus the fused record rows) as fluid velocities.
+    vw = 0.0 if st.v_wall is None else st.v_wall
+    v = jnp.where(st.fixed[:, None], vw, v)
 
-    dxn = (v * cfg.dt * (2.0 / dom.h_d)).astype(jnp.float32)
+    dxn = jnp.where(
+        st.fixed[:, None], 0.0, v * cfg.dt * (2.0 / dom.h_d)
+    ).astype(jnp.float32)
     rc = rcll.advance(dom, st.rc, dxn, dtype=pol.coords_dtype)
     st2 = SPHState(
         xn=st.xn,
@@ -474,6 +565,8 @@ def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
         fluid=sph.FluidState(v=v, rho=rho, m=fl.m),
         fixed=st.fixed,
         t=st.t + cfg.dt,
+        kind=st.kind,
+        v_wall=st.v_wall,
     )
     return PersistentCarry(
         st=st2,
@@ -611,23 +704,21 @@ def _step_absolute(cfg: SPHConfig, state: SPHState) -> SPHState:
     every algo integrates the identical scheme.
     """
     dom = cfg.domain
+    sch = cfg.resolved_scheme
     nl, disp, r = _neighbors_and_pairs(cfg, state)
     gw = sph.grad_w(disp, r, cfg.h, dom.dim, nl.mask)
 
     fl = state.fluid
-    pf = sph.gather_pair_fields(fl.v, fl.m, nl.idx, nl.mask)
-    drho = sph.continuity_rhs_pairs(pf, gw)
-    p = sph.eos_tait(fl.rho, cfg.rho0, cfg.c0)
+    drho, acc = _gathered_pair_rhs(sch, dom, fl, nl, disp, r, gw)
     rho = fl.rho + cfg.dt * drho
+    if cfg.wall_rho_clamp:
+        rho = jnp.where(state.fixed, jnp.maximum(rho, sch.rho0), rho)
 
-    bf = jnp.asarray(cfg.body_force, jnp.float32)
-    acc = sph.momentum_rhs_pairs(
-        pf, fl.rho, p, nl.idx, gw, disp, r, h=cfg.h, mu=cfg.mu, body_force=bf
-    )
-    v = fl.v + cfg.dt * acc
-    v = jnp.where(state.fixed[:, None], 0.0, v)
+    v = fl.v + cfg.dt * (acc + sch.body_force_vec(dom.dim))
+    vw = 0.0 if state.v_wall is None else state.v_wall
+    v = jnp.where(state.fixed[:, None], vw, v)
 
-    dxn = v * cfg.dt * (2.0 / dom.h_d)
+    dxn = jnp.where(state.fixed[:, None], 0.0, v * cfg.dt * (2.0 / dom.h_d))
     xn = state.xn + dxn
     # wrap periodic axes back into the box
     span = jnp.asarray(
@@ -640,6 +731,7 @@ def _step_absolute(cfg: SPHConfig, state: SPHState) -> SPHState:
         xn=xn, rc=state.rc,
         fluid=sph.FluidState(v=v, rho=rho, m=fl.m),
         fixed=state.fixed, t=state.t + cfg.dt,
+        kind=state.kind, v_wall=state.v_wall,
     )
 
 

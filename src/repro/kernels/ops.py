@@ -270,18 +270,21 @@ def rcll_force_particles(
     m: Array,  # (N,) f32
     rho: Array,  # (N,) f32 current density
     *,
-    mu: float,
-    c0: float,
+    mu: float = 0.0,
+    c0: float | None = None,
     rho0: float = 1.0,
     records_dtype=jnp.float32,
     interpret: bool | None = None,
+    scheme=None,
 ) -> tuple[Array, Array]:
-    """The full WCSPH pair RHS via the fused Pallas kernel.
+    """The full SPH pair RHS via the fused Pallas kernel.
 
-    Returns (drho (N,), acc (N, d)); body force / fixed-particle masking
-    are per-particle terms applied by the caller. Pressure is derived
-    in-kernel from rho through the linearized Tait EOS (c0, rho0) — no
-    p/ρ² table is streamed.
+    Returns (drho (N,), acc (N, d)); body force / wall-particle masking
+    are per-particle terms applied by the caller. The physics terms come
+    from the static ``scheme`` (core/scheme.py) — the legacy
+    ``c0``/``rho0``/``mu`` kwargs build the WCSPH scheme (linear Tait +
+    Morris) when ``scheme`` is omitted. Pressure is derived in-kernel
+    from the streamed reciprocal density — no p/ρ² table.
 
     ``records_dtype`` is the storage dtype of the v/m tile streams
     (``PrecisionPolicy.records``): fp16/bf16 is the half-width
@@ -298,7 +301,12 @@ def rcll_force_particles(
     keeps every true pair within the stale 3^dim neighborhood.
     """
     from repro.core import fused  # shared mass normalizer
+    from repro.core import scheme as scheme_lib
 
+    if scheme is None:
+        if c0 is None:
+            raise ValueError("pass either scheme= or the legacy c0=")
+        scheme = scheme_lib.wcsph(c0, rho0, mu)
     interpret = default_interpret() if interpret is None else interpret
     delta = domain.wrap_cell_delta(rc.cell_xy - binning.cell_xy)
     rel_t, _, _ = pack_cells(binning, rc.rel)
@@ -316,7 +324,7 @@ def rcll_force_particles(
     # Reciprocal density: one division per particle here, none per pair
     # in the kernel (sph.eos_tait_por2_inv / viscosity_pair_coef_inv).
     inv_t = _row_table(
-        binning, (1.0 / rho).astype(jnp.float32), fill=1.0 / rho0
+        binning, (1.0 / rho).astype(jnp.float32), fill=1.0 / scheme.rho0
     )
     offs = tuple(map(tuple, cells_lib.neighbor_cell_offsets(domain.dim)))
     drho_t, acc_t = rcll_force.rcll_force(
@@ -325,9 +333,7 @@ def rcll_force_particles(
         hc_phys=tuple(domain.cell_sizes),
         h=domain.h,
         dim=domain.dim,
-        mu=float(mu),
-        c0=float(c0),
-        rho0=float(rho0),
+        scheme=scheme,
         interpret=interpret,
     )
     drho = unpack_per_particle(drho_t, binning) * m_scale

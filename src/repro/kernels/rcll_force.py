@@ -27,10 +27,15 @@ inputs are sized by ``PrecisionPolicy.records``:
     oracle) and upcast to fp32 in-register;
   * the density tier streams fp32 as the RECIPROCAL 1/ρ (full fp32
     density information, one reciprocal per particle at pack time):
-    p/ρ² is recomputed division-free in-register through the linearized
-    Tait EOS (``sph.eos_tait_por2_inv``) and the viscosity ρ-product
-    division disappears — no p/ρ² table, no occupancy table (see
-    below). 2-D bytes per slot per tile: 16 vs 32 for the PR 2 layout.
+    p/ρ² is recomputed division-free in-register through the scheme's
+    EOS (``Scheme.por2_inv`` — linear or Tait) and the viscosity
+    ρ-product division disappears — no p/ρ² table, no occupancy table
+    (see below). 2-D bytes per slot per tile: 16 vs 32 for PR 2.
+
+The physics terms themselves (EOS, viscosity channels, delta-SPH) come
+from the static ``Scheme`` (core/scheme.py) — the same declarative spec
+the reference and fused-XLA backends consume, so the kernel cannot
+drift from them.
 
 No neighbor list is consumed: the B-spline derivative vanishes
 identically beyond the support 2h and at r = 0, so every out-of-support
@@ -56,7 +61,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import bspline, sph
+from repro.core import bspline
+from repro.core import scheme as scheme_lib
 from repro.kernels import tiling
 
 Array = jnp.ndarray
@@ -83,9 +89,7 @@ def _force_kernel(
     hc_phys: tuple,
     h: float,
     dim: int,
-    mu: float,
-    c0: float,
-    rho0: float,
+    scheme: scheme_lib.Scheme,
 ):
     _, k = pl.program_id(0), pl.program_id(1)
     d = rel_i_ref.shape[1]
@@ -102,25 +106,39 @@ def _force_kernel(
     coef = bspline.dw_over_r(jnp.sqrt(r2), h, dim)
 
     mj = m_j_ref[0].astype(jnp.float32)[None, :]
-    por2_i = sph.eos_tait_por2_inv(inv_i_ref[0], rho0, c0)
-    por2_j = sph.eos_tait_por2_inv(inv_j_ref[0], rho0, c0)
-    pc = sph.pressure_pair_coef(mj, por2_i[:, None], por2_j[None, :])
-    # x·∇W = coef * Σ disp² = coef * r2 (the gw tiles are coef * disp_a).
-    vc = sph.viscosity_pair_coef_inv(
-        mj, coef * r2,
-        inv_i_ref[0][:, None], inv_j_ref[0][None, :],
-        r2, h=h, mu=mu,
-    )
-    dv_dot_gw = jnp.zeros_like(r2)
+    inv_i = inv_i_ref[0][:, None]
+    inv_j = inv_j_ref[0][None, :]
+    por2_i = scheme.por2_inv(inv_i_ref[0])
+    por2_j = scheme.por2_inv(inv_j_ref[0])
+    # Pair velocity deltas and dv·disp first: the scheme's ∇W-channel
+    # coefficient (pressure + optional artificial viscosity) needs the
+    # full dot product before the per-axis accumulation loop.
+    dv = [
+        v_i_ref[0, a].astype(jnp.float32)[:, None]
+        - v_j_ref[0, a].astype(jnp.float32)[None, :]
+        for a in range(d)
+    ]
+    dv_dot_disp = jnp.zeros_like(r2)
     for a in range(d):
-        gw_a = coef * disp[a]
-        dv_a = (
-            v_i_ref[0, a].astype(jnp.float32)[:, None]
-            - v_j_ref[0, a].astype(jnp.float32)[None, :]
+        dv_dot_disp += dv[a] * disp[a]
+    gc = scheme.gradw_pair_coef(
+        mj, por2_i[:, None], por2_j[None, :], inv_i, inv_j,
+        dv_dot_disp, r2, h=h,
+    ) * coef
+    if scheme.has_dv_term:
+        # x·∇W = coef * Σ disp² = coef * r2 (gw tiles are coef * disp_a).
+        vc = scheme.dv_pair_coef(mj, coef * r2, inv_i, inv_j, r2, h=h)
+    for a in range(d):
+        contrib = -gc * disp[a]
+        if scheme.has_dv_term:
+            contrib += vc * dv[a]
+        acc_ref[0, a] += jnp.sum(contrib, axis=1)
+    dterm = mj * coef * dv_dot_disp
+    if scheme.has_delta_term:
+        dterm += scheme.drho_pair_term(
+            mj, inv_i, inv_j, coef * r2, r2, h=h
         )
-        dv_dot_gw += dv_a * gw_a
-        acc_ref[0, a] += jnp.sum(-pc * gw_a + vc * dv_a, axis=1)
-    drho_ref[...] += jnp.sum(mj * dv_dot_gw, axis=1)[None]
+    drho_ref[...] += jnp.sum(dterm, axis=1)[None]
 
 
 def _cell_block(d, cap):
@@ -142,7 +160,7 @@ def _nbcell_row(cap):
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "offs", "hc_phys", "h", "dim", "mu", "c0", "rho0", "interpret"
+        "offs", "hc_phys", "h", "dim", "scheme", "interpret"
     ),
 )
 def rcll_force(
@@ -157,12 +175,15 @@ def rcll_force(
     hc_phys: tuple,  # (d,) physical cell edges (static)
     h: float,
     dim: int,
-    mu: float,
-    c0: float,
-    rho0: float,
+    scheme: scheme_lib.Scheme,
     interpret: bool = True,
 ) -> tuple[Array, Array]:
-    """Fused WCSPH RHS: (drho (C, cap), acc (C, d, cap)), one tile pass."""
+    """Fused SPH RHS: (drho (C, cap), acc (C, d, cap)), one tile pass.
+
+    The physics terms (EOS, viscosity channels) come from the static
+    ``scheme`` — the same declarative spec the XLA and reference
+    backends consume (core/scheme.py).
+    """
     C, d, cap = rel.shape
     M = nb_ids.shape[1]
     offs_arr = jnp.asarray(np.asarray(offs, np.float32).reshape(M, d))
@@ -171,9 +192,7 @@ def rcll_force(
         hc_phys=tuple(float(x) for x in hc_phys),
         h=float(h),
         dim=int(dim),
-        mu=float(mu),
-        c0=float(c0),
-        rho0=float(rho0),
+        scheme=scheme,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

@@ -1,0 +1,27 @@
+"""``repro.sph`` — the user-facing SPH scenario entry point.
+
+Re-exports the scenario API (cases registry, Simulation facade, physics
+schemes, boundary builders) and hosts the CLI:
+
+    python -m repro.sph list
+    python -m repro.sph run taylor_green --nsteps 600 --observe-every 20
+    python -m repro.sph run dam_break --n 2000 --backend xla
+
+See ``repro/sph/__main__.py`` for the command surface.
+"""
+from repro.core.api import Observables, SimResult, Simulation  # noqa: F401
+from repro.core.boundaries import (  # noqa: F401
+    FLUID,
+    WALL,
+    box_wall_particles,
+    fluid_lattice,
+)
+from repro.core.cases import (  # noqa: F401
+    CASES,
+    CaseSpec,
+    build_case,
+    case_names,
+    register_case,
+    resolve_ds,
+)
+from repro.core.scheme import Scheme, wcsph  # noqa: F401

@@ -1,0 +1,146 @@
+"""CLI driver for the scenario layer.
+
+    python -m repro.sph list [--names]
+    python -m repro.sph run <case> [--nsteps N] [--observe-every K]
+                                   [--ds DS | --n N_TARGET]
+                                   [--backend reference|xla|pallas]
+                                   [--records fp32|fp16|bf16]
+                                   [--set field=value ...]
+
+``run`` builds the registered case, advances it under the production
+persistent pipeline with in-scan observables, prints the observable
+table, the final diagnostics, measured steps/sec, and the case's
+analytic validation metrics where it defines them (e.g. the
+Taylor–Green KE decay rate).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import sys
+
+import numpy as np
+
+from repro.core import cases as cases_lib
+from repro.core.api import Simulation
+from repro.core.precision import PrecisionPolicy
+
+
+def _case_overrides(args) -> dict:
+    over: dict = {}
+    if args.ds is not None:
+        over["ds"] = args.ds
+    elif args.n is not None:
+        over["ds"] = cases_lib.resolve_ds(args.case, args.n)
+    if args.backend is not None:
+        over["backend"] = args.backend
+    if args.records is not None:
+        over["policy"] = PrecisionPolicy(records=args.records)
+    for item in args.set or []:
+        key, _, val = item.partition("=")
+        if not val:
+            raise SystemExit(f"--set wants field=value, got {item!r}")
+        try:
+            over[key] = ast.literal_eval(val)
+        except (ValueError, SyntaxError):
+            over[key] = val
+    return over
+
+
+def cmd_list(args) -> int:
+    if args.names:
+        print("\n".join(cases_lib.case_names()))
+        return 0
+    print(f"{'case':14s} {'boundary':58s} validation")
+    for name in cases_lib.case_names():
+        cls = cases_lib.CASES[name]
+        print(f"{name:14s} {getattr(cls, 'boundary', '-'):58s} "
+              f"{getattr(cls, 'validation', '-')}")
+    return 0
+
+
+def cmd_run(args) -> int:
+    sim = Simulation.from_case(args.case, **_case_overrides(args))
+    case, cfg = sim.case, sim.cfg
+    nsteps = args.nsteps or getattr(case, "default_nsteps", 400)
+    every = args.observe_every or max(1, nsteps // 20)
+    print(f"# {args.case}: N={sim.n_particles} ds={case.ds:.4g} "
+          f"dt={cfg.dt:.3e} backend={cfg.resolved_backend} "
+          f"records={cfg.policy.records} nsteps={nsteps} "
+          f"observe_every={every}")
+
+    if args.time:
+        res, sps = sim.run_timed(nsteps, observe_every=every)
+    else:
+        res, sps = sim.run(nsteps, observe_every=every), None
+
+    obs = res.observables
+    t = np.asarray(obs.t)
+    ekin = np.asarray(obs.ekin)
+    vmax = np.asarray(obs.vmax)
+    rho_err = np.asarray(obs.rho_err)
+    print(f"{'t':>10s} {'ekin':>12s} {'vmax':>10s} {'rho_err':>10s}")
+    for row in zip(t, ekin, vmax, rho_err):
+        print(f"{row[0]:10.4f} {row[1]:12.6e} {row[2]:10.4f} {row[3]:10.4f}")
+
+    stats = res.stats
+    print(f"# steps={int(stats.steps)} rebuilds={int(stats.rebuilds)} "
+          f"overflow={bool(stats.overflow)}"
+          + (f" steps/sec={sps:.1f}" if sps is not None else ""))
+    bad = (
+        np.isnan(ekin).any() or np.isnan(vmax).any()
+        or not np.isfinite(ekin[-1])
+    )
+    if bad:
+        print("# FAILED: non-finite observables", file=sys.stderr)
+        return 1
+    if bool(stats.overflow):
+        # dropped neighbor pairs = silently wrong physics — fail loudly
+        print("# FAILED: neighbor/cell-capacity overflow (raise "
+              "max_neighbors / capacity for this resolution)",
+              file=sys.stderr)
+        return 1
+
+    if hasattr(case, "validate"):
+        metrics = case.validate(t, ekin)
+        for k, v in metrics.items():
+            print(f"# {k} = {v:.4g}")
+    if hasattr(case, "front_position"):
+        print(f"# surge front x = {case.front_position(cfg, res.state):.4f} "
+              f"(tank width {case.width})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.sph")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    lp = sub.add_parser("list", help="list registered cases")
+    lp.add_argument("--names", action="store_true",
+                    help="bare case names only (for scripting)")
+    lp.set_defaults(fn=cmd_list)
+
+    rp = sub.add_parser("run", help="run a registered case")
+    rp.add_argument("case", choices=cases_lib.case_names())
+    rp.add_argument("--nsteps", type=int, default=None)
+    rp.add_argument("--observe-every", type=int, default=None)
+    rp.add_argument("--ds", type=float, default=None)
+    rp.add_argument("--n", type=int, default=None,
+                    help="target fluid particle count (sets ds)")
+    rp.add_argument("--backend", default=None,
+                    choices=["reference", "xla", "pallas"])
+    rp.add_argument("--records", default=None,
+                    choices=["fp32", "fp16", "bf16"])
+    rp.add_argument("--time", action="store_true",
+                    help="run twice and report steps/sec (compile excluded)")
+    rp.add_argument("--set", action="append", metavar="FIELD=VALUE",
+                    help="override any case dataclass field")
+    rp.set_defaults(fn=cmd_run)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

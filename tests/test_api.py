@@ -1,0 +1,265 @@
+"""Scenario-layer API: case registry, Scheme plumbing across backends,
+wall boundaries (no-advection + moving lid), Taylor-Green analytic
+decay, in-scan observables, and back-compat shim equivalence."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import boundaries, cases, fused, scheme as scheme_lib, solver
+from repro.core.api import Simulation, observe_state
+from repro.core.precision import FP32_RECORDS
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+def test_registry_ships_the_case_suite():
+    names = cases.case_names()
+    for required in ("poiseuille", "dam_break", "cavity", "taylor_green"):
+        assert required in names
+    for name in names:
+        case = cases.build_case(name)
+        assert isinstance(case, cases.CaseSpec)
+        assert case.name == name
+        assert case.fluid_area > 0
+
+
+def test_build_case_overrides_and_unknown():
+    case = cases.build_case("dam_break", ds=0.1, alpha=0.3)
+    assert case.ds == 0.1 and case.alpha == 0.3
+    with pytest.raises(ValueError, match="unknown case"):
+        cases.build_case("nope")
+
+
+def test_resolve_ds_targets_particle_count():
+    ds = cases.resolve_ds("taylor_green", 400)
+    cfg, st = cases.build_case("taylor_green", ds=ds).build()
+    assert 300 <= st.xn.shape[0] <= 500
+
+
+# --------------------------------------------------------------------------
+# scheme plumbing
+# --------------------------------------------------------------------------
+def test_default_scheme_matches_legacy_kwargs_bitwise():
+    """force_rhs(scheme=wcsph(...)) must be the identical computation to
+    the legacy c0/rho0/mu kwargs (the back-compat contract)."""
+    rng = np.random.default_rng(2)
+    case = cases.PoiseuilleCase(ds=0.1, Lx=0.8, algo="rcll")
+    cfg, st = case.build()
+    carry = solver.init_persistent(cfg, st)
+    fl = carry.st.fluid
+    legacy = fused.force_rhs(
+        cfg.domain, carry.st.rc, carry.nl, fl.v, fl.m, fl.rho,
+        c0=cfg.c0, rho0=cfg.rho0, mu=cfg.mu,
+    )
+    via_scheme = fused.force_rhs(
+        cfg.domain, carry.st.rc, carry.nl, fl.v, fl.m, fl.rho,
+        scheme=scheme_lib.wcsph(cfg.c0, cfg.rho0, cfg.mu),
+    )
+    for a, b in zip(legacy, via_scheme):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scheme_validation():
+    with pytest.raises(ValueError, match="unknown eos"):
+        scheme_lib.Scheme(c0=1.0, eos="stiffened")
+    with pytest.raises(ValueError, match="unknown viscosity"):
+        scheme_lib.Scheme(c0=1.0, viscosity="sutherland")
+
+
+def test_tait_por2_inv_consistent_with_pressure():
+    sch = scheme_lib.Scheme(c0=10.0, rho0=1.0, eos="tait", gamma=7.0)
+    rho = jnp.asarray(np.linspace(0.9, 1.1, 11), jnp.float32)
+    want = sch.pressure(rho) / (rho * rho)
+    got = sch.por2_inv(1.0 / rho)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# backend agreement on the new cases (fp32 records: the exactness regime)
+# --------------------------------------------------------------------------
+def _agreement_case(name, nsteps, ds, backends):
+    outs = {}
+    for be in backends:
+        case = cases.build_case(
+            name, ds=ds, backend=be, policy=FP32_RECORDS
+        )
+        cfg, st = case.build()
+        out = solver.simulate(cfg, st, nsteps)
+        outs[be] = (
+            np.asarray(solver.positions(cfg, out)),
+            np.asarray(out.fluid.v),
+            np.asarray(out.fluid.rho),
+        )
+    ref = outs[backends[0]]
+    for be in backends[1:]:
+        np.testing.assert_allclose(outs[be][0], ref[0], atol=1e-6,
+                                   err_msg=f"{name}:{be} positions")
+        np.testing.assert_allclose(outs[be][1], ref[1], atol=1e-6,
+                                   err_msg=f"{name}:{be} velocities")
+        np.testing.assert_allclose(outs[be][2], ref[2], atol=1e-6,
+                                   err_msg=f"{name}:{be} densities")
+
+
+def test_backends_agree_on_dam_break():
+    """Tait EOS + artificial viscosity + delta-SPH through all three
+    backends (pallas in interpret mode on CPU) — the scheme channels
+    cannot drift between implementations."""
+    backends = ["reference", "xla", "pallas"]
+    _agreement_case("dam_break", nsteps=10, ds=0.1, backends=backends)
+
+
+def test_backends_agree_on_taylor_green():
+    _agreement_case(
+        "taylor_green", nsteps=10, ds=1.0 / 16.0,
+        backends=["reference", "xla", "pallas"],
+    )
+
+
+def test_backends_agree_on_cavity():
+    _agreement_case(
+        "cavity", nsteps=10, ds=0.1, backends=["reference", "xla"]
+    )
+
+
+# --------------------------------------------------------------------------
+# wall boundaries
+# --------------------------------------------------------------------------
+def test_walls_never_advect_and_lid_keeps_speed():
+    case = cases.build_case("cavity", ds=0.1)
+    cfg, st0 = case.build()
+    wall = np.asarray(st0.fixed)
+    p0 = np.asarray(solver.positions(cfg, st0))
+    out = solver.simulate(cfg, st0, 30)
+    p1 = np.asarray(solver.positions(cfg, out))
+    # walls: bitwise-frozen positions, fluid: must actually move
+    np.testing.assert_array_equal(p1[wall], p0[wall])
+    assert np.abs(p1[~wall] - p0[~wall]).max() > 0
+    # lid rows keep their prescribed velocity exactly; other walls 0
+    v = np.asarray(out.fluid.v)
+    vw = np.asarray(st0.v_wall)
+    np.testing.assert_array_equal(v[wall], vw[wall])
+    lid = wall & (np.asarray(st0.v_wall)[:, 0] > 0)
+    assert lid.sum() > 0
+    np.testing.assert_array_equal(v[lid, 0], case.U)
+
+
+def test_moving_lid_drags_fluid():
+    """The lid's prescribed velocity must reach the fluid through the
+    viscous pair term (i.e. through the shared v array / record rows)."""
+    case = cases.build_case("cavity", ds=0.1)
+    cfg, st0 = case.build()
+    out = solver.simulate(cfg, st0, 150)
+    pos = np.asarray(solver.positions(cfg, out))
+    fl = ~np.asarray(out.fixed)
+    # top fluid row: inside the lid's kernel support
+    near_lid = fl & (pos[:, 1] > case.L - 1.5 * case.ds)
+    assert near_lid.sum() > 0
+    vx = np.asarray(out.fluid.v)[:, 0]
+    assert vx[near_lid].mean() > 0.05 * case.U
+
+
+def test_wall_generator_covers_corners_once():
+    pos, v_wall = boundaries.box_wall_particles(
+        (0.0, 0.0), (1.0, 1.0), 0.1, 2,
+        sides=((1, 1), (1, 0), (0, 0), (0, 1)),
+        velocities={(1, 1): (2.0, 0.0)},
+    )
+    # no duplicate particles (corners classified exactly once)
+    assert len(np.unique(np.round(pos / 0.05).astype(int), axis=0)) == len(pos)
+    # lid band (y > 1) moves, including its corners; floor band does not
+    lid = pos[:, 1] > 1.0
+    assert lid.sum() > 0 and np.all(v_wall[lid, 0] == 2.0)
+    assert np.all(v_wall[pos[:, 1] < 0.0] == 0.0)
+    # corner coverage: wall nodes exist outside both x and y bounds
+    assert np.any((pos[:, 0] > 1.0) & (pos[:, 1] > 1.0))
+
+
+# --------------------------------------------------------------------------
+# Taylor-Green analytic decay
+# --------------------------------------------------------------------------
+def test_taylor_green_decay_matches_analytic():
+    """KE decay rate within 5% of the analytic 4 nu k^2 over the
+    validated window (first half-life) — the acceptance criterion."""
+    sim = Simulation.from_case("taylor_green")
+    res = sim.run(300, observe_every=10)
+    obs = res.observables
+    metrics = sim.case.validate(np.asarray(obs.t), np.asarray(obs.ekin))
+    assert metrics["decay_rate_rel_err"] < 0.05, metrics
+    # pointwise: KE tracks the analytic curve through the window too
+    t = np.asarray(obs.t)
+    e = np.asarray(obs.ekin)
+    e0 = e[0] / np.exp(-sim.case.decay_rate * t[0])
+    win = e >= 0.5 * e0
+    ana = sim.case.analytic_ekin(e0, t[win])
+    assert np.abs(e[win] / ana - 1.0).max() < 0.05
+
+
+# --------------------------------------------------------------------------
+# Simulation facade + observables
+# --------------------------------------------------------------------------
+def test_simulation_run_matches_simulate_shim():
+    """Back-compat: Simulation.run == solver.simulate on Poiseuille."""
+    case = cases.PoiseuilleCase(ds=0.05, Lx=0.4)
+    cfg, st = case.build()
+    want = solver.simulate(cfg, st, 50)
+    sim = Simulation(cfg=cfg, state=st)
+    res = sim.run(50)
+    np.testing.assert_allclose(
+        np.asarray(solver.positions(cfg, res.state)),
+        np.asarray(solver.positions(cfg, want)), atol=1e-7,
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.state.fluid.v), np.asarray(want.fluid.v), atol=1e-7
+    )
+    assert int(res.stats.steps) == 50
+
+
+def test_observed_run_matches_unobserved():
+    """In-scan sampling must not perturb the trajectory: same steps with
+    and without observables -> same final state."""
+    case = cases.build_case("taylor_green", ds=1.0 / 16.0)
+    cfg, st = case.build()
+    plain = solver.simulate(cfg, st, 40)
+    sim = Simulation(cfg=cfg, state=st)
+    res = sim.run(40, observe_every=10)
+    np.testing.assert_allclose(
+        np.asarray(res.state.fluid.v), np.asarray(plain.fluid.v), atol=1e-7
+    )
+    obs = res.observables
+    assert obs.t.shape == (4,)
+    # the last observable row equals recomputing from the final state
+    last = observe_state(cfg, res.state)
+    np.testing.assert_allclose(float(obs.ekin[-1]), float(last[1]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(obs.vmax[-1]), float(last[2]),
+                               rtol=1e-6)
+    # time advances uniformly
+    np.testing.assert_allclose(
+        np.diff(np.asarray(obs.t)), 10 * cfg.dt, rtol=1e-4
+    )
+
+
+def test_observables_exclude_walls():
+    """Wall kinetic energy (the moving lid!) must not leak into ekin."""
+    case = cases.build_case("cavity", ds=0.1)
+    cfg, st = case.build()
+    t, ekin, vmax, rho_err = observe_state(cfg, st)
+    # initial fluid is at rest; lid moves at U=1 — fluid-only ekin is 0
+    assert float(ekin) == 0.0
+    assert float(vmax) == 0.0
+
+
+def test_absolute_algo_through_facade():
+    case = cases.PoiseuilleCase(ds=0.1, Lx=0.8, algo="cell")
+    sim = Simulation.from_case(case)
+    res = sim.run(20, observe_every=5)
+    assert res.observables.t.shape == (4,)
+    assert not bool(res.stats.overflow)
+    assert np.isfinite(np.asarray(res.observables.ekin)).all()
