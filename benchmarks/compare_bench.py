@@ -4,9 +4,15 @@ The perf history file accumulates one record per ``nnps_throughput``
 run, oldest first. This tool compares the two most recent records —
 or an out-of-history candidate record (``--candidate``, produced by
 ``nnps_throughput --no-append --out FILE``) against the newest history
-record — matching cases by (n_target, backend, records, skin_frac_hc)
-and flagging every case whose steps/sec dropped by more than
-``--threshold`` (default 15%).
+record — matching cases by (case, dynamic, n_target, backend, records,
+skin_frac_hc) and flagging, beyond ``--threshold`` (default 15%):
+
+  * any steps/sec DROP (for dynamic rows this is the amortized
+    physics+rebuild throughput — the metric the steady rows' rebuilds=0
+    blind spot cannot see);
+  * any rebuild_ms RISE — the rebuild cost is invisible to steady
+    steps/sec, which is exactly how it grew 8x steps-worth before the
+    rebuild round.
 
 Exit status: 1 if any regression was flagged, else 0. CI runs this as a
 NON-blocking step (``continue-on-error``): CPU runner timings are noisy
@@ -24,7 +30,10 @@ import sys
 
 def _case_key(case: dict) -> tuple:
     return (
-        case.get("case", "poiseuille"),  # pre-scenario rows were poiseuille
+        # pre-scenario rows were poiseuille (older records carry no
+        # "case" key, or an explicit None)
+        case.get("case") or "poiseuille",
+        bool(case.get("dynamic", False)),
         case.get("n_target"),
         case.get("backend"),
         case.get("records", "fp32"),  # pre-half-record rows were fp32
@@ -39,7 +48,13 @@ def _load_history(path: str) -> list[dict]:
 
 
 def compare(old: dict, new: dict, threshold: float) -> tuple[list, list]:
-    """Returns (comparison rows, flagged regressions)."""
+    """Returns (comparison rows, flagged regressions).
+
+    Each comparison row is (key, metric, before, after, change,
+    regressed): one row per watched metric — steps/sec (drop is bad;
+    amortized throughput for dynamic cases) and rebuild_ms (rise is
+    bad).
+    """
     old_cases = {_case_key(c): c for c in old.get("cases", [])}
     rows, flagged = [], []
     for case in new.get("cases", []):
@@ -47,12 +62,18 @@ def compare(old: dict, new: dict, threshold: float) -> tuple[list, list]:
         prev = old_cases.get(key)
         if prev is None:
             continue
-        before, after = prev["steps_per_sec"], case["steps_per_sec"]
-        change = (after - before) / before if before else 0.0
-        regressed = change < -threshold
-        rows.append((key, before, after, change, regressed))
-        if regressed:
-            flagged.append((key, before, after, change))
+        watched = [("steps/sec", "steps_per_sec", -1.0)]
+        if case.get("rebuild_ms") and prev.get("rebuild_ms"):
+            watched.append(("rebuild_ms", "rebuild_ms", +1.0))
+        for label, field, bad_sign in watched:
+            before, after = prev.get(field), case.get(field)
+            if not before or after is None:
+                continue
+            change = (after - before) / before
+            regressed = change * bad_sign > threshold
+            rows.append((key, label, before, after, change, regressed))
+            if regressed:
+                flagged.append((key, label, before, after, change))
     return rows, flagged
 
 
@@ -86,17 +107,18 @@ def main(argv=None) -> int:
               "(different sizes/backends) — nothing to compare")
         return 0
 
-    print(f"{'case (n, backend, records, skin)':<44} "
-          f"{'before':>10} {'after':>10} {'change':>8}")
-    for key, before, after, change, regressed in rows:
+    print(f"{'case (name, dyn, n, backend, records, skin)':<52} "
+          f"{'metric':>11} {'before':>10} {'after':>10} {'change':>8}")
+    for key, label, before, after, change, regressed in rows:
         mark = "  << REGRESSION" if regressed else ""
-        print(f"{str(key):<44} {before:>10.3f} {after:>10.3f} "
-              f"{change:>+7.1%}{mark}")
+        print(f"{str(key):<52} {label:>11} {before:>10.3f} "
+              f"{after:>10.3f} {change:>+7.1%}{mark}")
     if flagged:
-        print(f"\n{len(flagged)} case(s) regressed more than "
-              f"{args.threshold:.0%} in steps/sec")
+        print(f"\n{len(flagged)} metric(s) regressed more than "
+              f"{args.threshold:.0%} (steps/sec drop or rebuild_ms "
+              "rise)")
         return 1
-    print("\nno steps/sec regressions beyond the threshold")
+    print("\nno steps/sec or rebuild_ms regressions beyond the threshold")
     return 0
 
 

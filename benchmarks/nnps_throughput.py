@@ -31,7 +31,13 @@ pass ``--no-append`` (optionally with ``--out FILE``) so they never
 pollute the history.
 
 ``--n 1000000`` reaches the paper's 1M-particle case (expect minutes per
-backend on CPU); ``--quick`` runs the 8k case only.
+backend on CPU; tiers above 200k run the production xla/fp16 combo only,
+and a tier that OOMs is recorded as a skipped row with the reason);
+``--quick`` runs the 8k case only. ``--dynamic`` adds dam-break rows
+with a Verlet skin — the collapse keeps the rebuild ``lax.cond`` firing
+inside the timed scan, so their steps/sec is the AMORTIZED physics +
+rebuild throughput the steady poiseuille rows (rebuilds=0) cannot see,
+reported alongside rebuilds_per_100_steps.
 """
 from __future__ import annotations
 
@@ -68,6 +74,7 @@ def _build(
     skin_frac_hc: float,
     records: str,
     case_name: str = "poiseuille",
+    dynamic: bool = False,
 ):
     if case_name == "poiseuille":
         # historical default: unit-square channel, skin-capable cells
@@ -85,6 +92,25 @@ def _build(
                 cfg, skin=skin_frac_hc * cfg.domain.radius
             )
         return cfg, st, max_neighbors
+    if dynamic and case_name == "dam_break":
+        # The --dynamic mode: a dam-break column started at a
+        # collapse-representative fall speed (v0) so the Verlet
+        # criterion fires rebuilds INSIDE the short timed window (a
+        # quiescent column needs O(sqrt(col_h/g)) of physical time —
+        # thousands of steps at fine ds — before anything moves a
+        # cell). Skin-capable cells sized like the poiseuille rows.
+        ds = cases.resolve_ds(case_name, n_target)
+        radius = 2.0 * cases.build_case(case_name, ds=ds).h  # support 2h
+        case = cases.build_case(
+            case_name, ds=ds, backend=backend,
+            policy=PrecisionPolicy(records=records),
+            cell_factor=1.0 + max(skin_frac_hc, 0.5),
+            skin=max(skin_frac_hc, 0.5) * radius,
+            max_neighbors=64,
+            v0=1.0,  # ~sqrt(g * col_h)
+        )
+        cfg, st = case.build()
+        return cfg, st, cfg.max_neighbors
     # any registered scenario (--case): scaled to n_target via the case
     # registry; these cases size their own cells (no Verlet skin knob),
     # so skin_frac_hc is ignored and the rebuild runs per step.
@@ -105,11 +131,12 @@ def run_case(
     skin_frac_hc: float = 0.5,
     records: str = "fp16",
     case_name: str = "poiseuille",
+    dynamic: bool = False,
 ) -> dict:
-    if case_name != "poiseuille":
+    if case_name != "poiseuille" and not dynamic:
         skin_frac_hc = 0.0
     cfg, st, max_neighbors = _build(
-        n_target, backend, skin_frac_hc, records, case_name
+        n_target, backend, skin_frac_hc, records, case_name, dynamic
     )
     n = int(st.xn.shape[0])
 
@@ -147,6 +174,7 @@ def run_case(
     k, d = max_neighbors, cfg.domain.dim
     row = {
         "case": case_name,
+        "dynamic": dynamic,
         "n_target": n_target,
         "n_particles": n,
         "backend": backend,
@@ -155,11 +183,14 @@ def run_case(
         "skin": float(cfg.skin),
         "max_neighbors": k,
         "nsteps": nsteps,
+        # the donated-scan steps/sec INCLUDES every in-scan rebuild: in
+        # --dynamic mode this IS the amortized throughput
         "steps_per_sec": round(nsteps / t_run, 3),
         "physics_ms_per_step": round(t_phys * 1e3, 3),
         "rebuild_ms": round(t_rebuild * 1e3, 3),
         "rebuilds": rebuilds,
         "rebuild_frequency": round(rebuild_frequency, 4),
+        "rebuilds_per_100_steps": round(100.0 * rebuild_frequency, 1),
         "overflow": overflow,
         "hbm_model_bytes_per_step_gather": fused.estimate_hbm_bytes_per_step(
             n, k, d, fused=False
@@ -168,6 +199,10 @@ def run_case(
             n, k, d, fused=True, records=records
         ),
     }
+    if dynamic:
+        # alias, emitted only where it means something (rebuilds fired
+        # inside the timed scan)
+        row["amortized_steps_per_sec"] = row["steps_per_sec"]
     emit("step_throughput", row)
     return row
 
@@ -188,6 +223,12 @@ def default_steps(n: int) -> int:
     return max(8, min(48, int(3_000_000 / max(n, 1))))
 
 
+#: Above this particle count only the production combo (xla, fp16) runs:
+#: the gather/full-width A/Bs would triple a multi-minute CPU tier for a
+#: ratio the smaller tiers already establish.
+BIG_TIER = 200_000
+
+
 def main(
     full: bool = True,
     sizes: list[tuple[int, int]] | None = None,
@@ -195,29 +236,75 @@ def main(
     append: bool = True,
     out: str | None = None,
     case_name: str = "poiseuille",
+    dynamic_sizes: list[tuple[int, int]] | None = None,
 ):
     """``full`` selects the 8k+64k grid (benchmarks.run interface);
     ``sizes`` overrides it with explicit (n_target, nsteps) pairs;
     ``case_name`` benchmarks any registered scenario (BENCH records are
-    tagged with it)."""
+    tagged with it); ``dynamic_sizes`` adds dam-break rows with a
+    Verlet skin — rebuilds fire inside the timed scan, so their
+    steps/sec is the amortized (physics + rebuild) throughput. Tiers
+    that fail to build or run (e.g. an OOM at the 1M tier) are recorded
+    as skipped rows with the reason, never crash the run."""
     if sizes is None:
         targets = [8000, 64000] if full else [8000]
         sizes = [(t, default_steps(t)) for t in targets]
     runs = [("reference", "fp32"), ("xla", "fp32"), ("xla", "fp16")]
-    rows = []
+    rows, skipped = [], []
+
+    def attempt(n_target, backend, nsteps, **kw):
+        try:
+            rows.append(run_case(n_target, backend, nsteps, **kw))
+        except Exception as e:  # best-effort tiers: record, don't crash
+            reason = f"{type(e).__name__}: {e}"[:300]
+            skipped.append({
+                "case": kw.get("case_name", case_name),
+                "dynamic": kw.get("dynamic", False),
+                "n_target": n_target, "backend": backend,
+                "records": kw.get("records", "fp16"), "skipped": reason,
+            })
+            emit("step_throughput_skipped", skipped[-1])
+
     for n_target, nsteps in sizes:
-        for backend, records in runs:
-            rows.append(run_case(
-                n_target, backend, nsteps, records=records,
-                case_name=case_name,
-            ))
+        combos = runs if n_target <= BIG_TIER else [("xla", "fp16")]
+        for backend, records in combos:
+            attempt(n_target, backend, nsteps, records=records,
+                    case_name=case_name)
+    for n_target, nsteps in dynamic_sizes or []:
+        combos = (
+            [("reference", "fp32"), ("xla", "fp16")]
+            if n_target <= BIG_TIER else [("xla", "fp16")]
+        )
+        for backend, records in combos:
+            attempt(n_target, backend, nsteps, records=records,
+                    case_name="dam_break", dynamic=True)
     if skin_compare and case_name == "poiseuille":
         # PR 1's skin-vs-none tracking metric (fused backend, 8k)
-        n0 = sizes[0][0]
-        rows.append(run_case(n0, "xla", sizes[0][1], skin_frac_hc=0.0))
+        attempt(sizes[0][0], "xla", sizes[0][1], skin_frac_hc=0.0)
+
+    if not rows:
+        # every tier was skipped (e.g. a 1M-only invocation that OOMed):
+        # the skip rows ARE the record — never crash past them
+        record = {
+            "label": "rebuild_round",
+            "case": case_name,
+            "backend": jax.default_backend(),
+            "cpu_count": os.cpu_count(),
+            "cases": [],
+            "skipped": skipped,
+        }
+        if append:
+            _append_record(record)
+        if out:
+            with open(out, "w") as f:
+                json.dump(record, f, indent=2)
+        emit("step_throughput_summary", {"skipped": len(skipped)})
+        return record
 
     def pick(n_target, backend, records):
         for r in rows:
+            if r.get("dynamic"):
+                continue
             if (r["n_target"], r["backend"], r["records"]) == (
                 n_target, backend, records
             ) and (r["skin_frac_hc"] > 0 or case_name != "poiseuille"):
@@ -240,7 +327,7 @@ def main(
     k, d = rows[0]["max_neighbors"], 2
     n0 = rows[0]["n_particles"]
     record = {
-        "label": "half_records",
+        "label": "rebuild_round",
         "case": case_name,
         "backend": jax.default_backend(),
         # CPU wall-clocks are machine-sensitive: record the core count so
@@ -261,6 +348,8 @@ def main(
             2,
         ),
     }
+    if skipped:
+        record["skipped"] = skipped
     if append:
         _append_record(record)
     if out:
@@ -298,6 +387,17 @@ if __name__ == "__main__":
         help="registered scenario to benchmark (BENCH records are "
         "tagged with it); non-poiseuille cases run skinless",
     )
+    ap.add_argument(
+        "--dynamic", action="store_true",
+        help="also run dam-break rows with a Verlet skin at the same "
+        "tiers: rebuilds fire inside the timed scan, so steps/sec is "
+        "the amortized physics+rebuild throughput (reported with "
+        "rebuilds_per_100_steps)",
+    )
+    ap.add_argument(
+        "--dynamic-n", type=int, action="append", default=None,
+        help="override the --dynamic tier list (repeatable)",
+    )
     args = ap.parse_args()
     if args.n:
         targets = args.n
@@ -306,10 +406,21 @@ if __name__ == "__main__":
     else:
         targets = [8000, 64000]
     sizes = [(t, args.nsteps or default_steps(t)) for t in targets]
+    dynamic_sizes = None
+    if args.dynamic or args.dynamic_n:
+        dyn_targets = args.dynamic_n or targets
+        # dynamic rows need enough steps for the Verlet criterion to
+        # fire several rebuilds inside the timed segments (~1 rebuild
+        # per ~25-30 steps at the v0 drop speed)
+        dynamic_sizes = [
+            (t, max(32, args.nsteps or default_steps(t)))
+            for t in dyn_targets
+        ]
     main(
         sizes=sizes,
         skin_compare=not args.n,
         append=not args.no_append,
         out=args.out,
         case_name=args.case,
+        dynamic_sizes=dynamic_sizes,
     )

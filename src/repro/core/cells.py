@@ -386,3 +386,21 @@ def dense_capacity(domain: Domain, ds: float, safety: float = 1.5) -> int:
     """
     edge = max(domain.cell_sizes) / ds + 1.0
     return max(4, int(np.ceil(edge**domain.dim * safety)))
+
+
+def robust_capacity(domain: Domain, ds: float, n_particles: int) -> int:
+    """THE per-cell capacity rule for solver configs (single source).
+
+    The larger of the two estimates: :func:`default_capacity` (domain-
+    mean occupancy x 3 — right for domain-filling flows, catastrophic
+    for mostly-empty ones) and :func:`dense_capacity` (the close-packed
+    lattice bound at spacing ``ds`` — right for free-surface cases like
+    the dam break, whose dense column sits in a mostly-empty tank).
+    Taking the max means a new case cannot silently re-introduce the
+    dam-break under-sizing by forgetting to pick the dense estimate;
+    for the shipped domain-filling cases the mean estimate dominates,
+    so their capacities are unchanged.
+    """
+    return max(
+        default_capacity(domain, n_particles), dense_capacity(domain, ds)
+    )

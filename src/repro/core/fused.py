@@ -360,6 +360,7 @@ def force_rhs(
     records: str = "fp32",
     idx_dummy: Array | None = None,
     scheme: scheme_lib.Scheme | None = None,
+    m_scale: Array | None = None,
 ) -> tuple[Array, Array]:
     """The full SPH pair RHS in ONE cell-blocked pass.
 
@@ -385,7 +386,13 @@ def force_rhs(
 
     ``idx_dummy``: optional pre-sanitized neighbor ids (invalid -> N).
     The persistent solver computes them once per REBUILD (the list is
-    static between rebuilds) instead of once per step.
+    static between rebuilds) instead of once per step — and the window
+    search emits this layout directly.
+
+    ``m_scale``: optional precomputed half-record mass normalizer
+    (``mass_scale(m)``). Masses are constant over a run, so the
+    persistent solver computes it ONCE at init instead of reducing m
+    every step.
     """
     if scheme is None:
         if c0 is None:
@@ -430,7 +437,8 @@ def force_rhs(
         pad_rows = (jnp.full((idx.shape[1],), n, jnp.int32), rec[n])
         return _map_chunks(body, (idx, rec[:n]), pad_rows, n, chunk)
 
-    m_scale = mass_scale(m)
+    if m_scale is None:
+        m_scale = mass_scale(m)
     rec16 = _records_half(rc, v, m.astype(jnp.float32) / m_scale, rdt)
     # Dummy 1/ρ = 1/ρ0: p/ρ² decodes to ~0 and denominators stay
     # positive; m = 0 on the dummy row kills every pair term regardless.

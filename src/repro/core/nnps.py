@@ -346,6 +346,55 @@ def rcll_neighbors(
     return NeighborList(idx, mask, jnp.sum(ok, axis=1).astype(jnp.int32))
 
 
+#: Rows per chunk of the mapped window search (the lax.map tile that
+#: keeps every (chunk, window) candidate intermediate cache-resident
+#: instead of materializing (N, window) slabs in HBM).
+SEARCH_CHUNK = 4096
+
+
+def auto_window(
+    domain: Domain,
+    ds: float | None = None,
+    capacity: int | None = None,
+    safety: float = 1.25,
+) -> int:
+    """Static merged-candidate budget for :func:`rcll_neighbors_windows`.
+
+    With the particle spacing ``ds`` known, bound the 3^dim-cell
+    neighborhood occupancy by its lattice count — ``prod_a (3 hc_a / ds
+    + 1)`` — times a compression safety. This is the 3^dim-block
+    analogue of :func:`cells.dense_capacity`: it is independent of how
+    much of the domain the fluid fills (the mean-occupancy estimate that
+    burned the dam break) and much tighter than summing per-cell
+    capacities, because a whole 3x3(x3) block cannot straddle an extra
+    lattice row per cell per axis. Without ``ds``, fall back to
+    ``ceil(4/3 * 3^(dim-1)) * capacity`` (~1.33x the mean 3^dim-block
+    occupancy when capacity carries the default 3x per-cell safety).
+
+    Truncation is always flagged loudly (the ``k + 1`` count sentinel),
+    so an underestimate surfaces through the overflow plumbing instead
+    of silently dropping pairs.
+    """
+    if ds is not None:
+        est = 1.0
+        for c in domain.cell_sizes:
+            est *= 3.0 * c / ds + 1.0
+        return max(8, int(np.ceil(safety * est)))
+    if capacity is None:
+        raise ValueError("auto_window needs ds or capacity")
+    return max(8, int(np.ceil(4 / 3 * 3 ** (domain.dim - 1))) * capacity)
+
+
+def _bits_dtype(dtype):
+    """Unsigned carrier of a storage dtype's bit width (u16 / u32)."""
+    size = jnp.dtype(dtype).itemsize
+    if size == 2:
+        return jnp.uint16
+    if size == 4:
+        return jnp.uint32
+    raise ValueError(f"unsupported search storage dtype {dtype}")
+
+
 def rcll_neighbors_windows(
     domain: Domain,
     rel: Array,  # (N, d) CELL-SORTED relative coords (storage dtype)
@@ -358,95 +407,201 @@ def rcll_neighbors_windows(
     window: int,
     radius_cell: float | None = None,
     include_self: bool = False,
+    chunk: int = 0,
 ) -> NeighborList:
     """Table-free RCLL search over cell-SORTED particle arrays.
 
-    The counting-sort byproducts are the whole data structure: because
-    packed ids are contiguous per cell (and row-major cell order makes
-    runs of last-axis-adjacent cells contiguous too), every particle's
-    candidate set is 3^(d-1) contiguous index ranges
-    ``starts[c_lo] .. starts[c_hi] + counts[c_hi]`` — no (C, cap) table
-    is built and no candidate-id gather happens: candidate ids are
-    ``begin + iota`` arithmetic, and the coordinate gather reads
-    near-contiguous memory. (A periodic LAST axis breaks the 3-cell run
-    contiguity at the seam, so that case falls back to 3^d single-cell
-    ranges; leading-axis periodicity only changes which runs are read.)
+    The counting-sort byproducts are the whole data structure: packed
+    ids are contiguous per cell (and row-major cell order makes runs of
+    last-axis-adjacent cells contiguous too), so every particle's
+    candidate set is 3^(d-1) contiguous index ranges. The ranges are
+    MERGED arithmetically into one front-packed block of ``window``
+    candidate slots per particle — slot t maps to run r(t) and candidate
+    id ``begin_r + t - B_r`` (B_r = exclusive prefix of the run
+    lengths), so padding never exceeds ``window - total`` regardless of
+    how occupancy splits across runs, and no (C, cap) table or
+    candidate-id gather exists anywhere. (A periodic LAST axis breaks
+    3-cell contiguity at the seam; those runs degrade to 3^d single-cell
+    ranges, where every axis' cell delta is a known per-run constant.)
 
-    window: static candidate slots per contiguous range. ``3 * capacity``
-    preserves the dense-table guarantee exactly; tighter windows trade
-    guarantee for bandwidth and are flagged: a range longer than
-    ``window`` marks the particle's ``count`` with the ``k + 1`` sentinel
-    so ``NeighborList.overflowed`` (and the solver's overflow plumbing)
-    reports the truncation.
+    Three structural costs are gone relative to a table search:
+
+      * ONE row gather per candidate: the distance test needs rel
+        (storage bits) and, when the last axis is aperiodic, the
+        last-axis cell coordinate — lead-axis deltas are per-run
+        constants, never gathered. Both ride in a single bit-packed row
+        (u16 columns for 16-bit storage), gathered once per candidate.
+      * chunked evaluation: a ``lax.map`` over row chunks keeps the
+        (chunk, window) candidate intermediates cache-resident instead
+        of materializing (N, window, d) slabs in HBM.
+      * sort compaction: valid candidates are compacted by an ascending
+        keyed sort (invalid slots key to the dummy id N) — measurably
+        cheaper than top_k selection on CPU, emits neighbor ids in
+        ascending order (near-contiguous record gathers for the
+        consuming force sweep), and yields DUMMY-PADDED ids: invalid
+        slots hold exactly N, so the fused force pass consumes ``idx``
+        directly with no per-slot sanitize.
+
+    The Eq. (7) arithmetic (subtract, halve, add exact integer cell
+    delta, weight, square — all in ``compute_dtype``) is operation-for-
+    operation the one :func:`rcll_r2_cell_units` runs, so boundary
+    decisions agree with the dense-table oracle bit-for-bit.
+
+    window: static merged candidate budget per particle (see
+    :func:`auto_window`). ``3^dim * capacity`` reproduces the dense
+    table's coverage guarantee exactly; a particle whose 3^dim
+    neighborhood holds more candidates than ``window`` is flagged with
+    the ``k + 1`` count sentinel through ``NeighborList.overflowed``.
     """
     n, dim = rel.shape
     cdt = compute_dtype or dtype
     starts = cells_lib.exclusive_cumsum(counts)
     nc = domain.ncells
-    # Static run descriptors: (leading-axes offset, lo/hi last-axis offset).
-    if dim > 1:
-        lead_offs = cells_lib.neighbor_cell_offsets(dim - 1)
-    else:
-        lead_offs = np.zeros((1, 0), np.int32)
-    if domain.periodic[-1]:
-        runs = [(lo, dy, dy) for lo in lead_offs for dy in (-1, 0, 1)]
-    else:
-        runs = [(lo, -1, 1) for lo in lead_offs]
-
-    n_lead = jnp.asarray(nc[:-1], jnp.int32)
-    per_lead = jnp.asarray(np.asarray(domain.periodic[:-1]))
     ncy = nc[-1]
-    cy = cell_xy[:, -1]
-
-    def run_flat(lead_xy, y):
-        flat = lead_xy[..., 0] if dim > 1 else jnp.zeros_like(y)
-        for a in range(1, dim - 1):
-            flat = flat * nc[a] + lead_xy[..., a]
-        return flat * ncy + y if dim > 1 else y
-
-    cand_parts, okw_parts = [], []
-    trunc = jnp.zeros((n,), bool)
-    for lead, ylo_off, yhi_off in runs:
-        if dim > 1:
-            lead_xy = cell_xy[:, :-1] + jnp.asarray(lead, jnp.int32)
-            wrapped = jnp.where(per_lead, lead_xy % n_lead, lead_xy)
-            valid = jnp.all((wrapped >= 0) & (wrapped < n_lead), axis=-1)
-            lead_xy = jnp.clip(wrapped, 0, n_lead - 1)
-        else:
-            lead_xy = None
-            valid = jnp.ones((n,), bool)
-        if domain.periodic[-1]:
-            ylo = yhi = (cy + ylo_off) % ncy
-        else:
-            ylo = jnp.clip(cy + ylo_off, 0, ncy - 1)
-            yhi = jnp.clip(cy + yhi_off, 0, ncy - 1)
-        c_lo = run_flat(lead_xy, ylo)
-        c_hi = run_flat(lead_xy, yhi)
-        begin = starts[c_lo]
-        end = starts[c_hi] + counts[c_hi]
-        ids = begin[:, None] + jnp.arange(window, dtype=jnp.int32)[None, :]
-        okw = valid[:, None] & (ids < end[:, None])
-        trunc = trunc | (valid & (end - begin > window))
-        cand_parts.append(jnp.clip(ids, 0, n - 1))
-        okw_parts.append(okw)
-    cand = jnp.concatenate(cand_parts, axis=1)  # (N, runs * window)
-    cmask = jnp.concatenate(okw_parts, axis=1)
-
-    delta = cell_xy[:, None, :] - cell_xy[cand]
-    delta = domain.wrap_cell_delta(delta)
-    w = jnp.asarray(domain.cell_weights)
-    rel = rel.astype(dtype)
-    d2 = rcll_r2_cell_units(rel[:, None, :], rel[cand], delta, w, dtype=cdt)
     if radius_cell is None:
         radius_cell = rcll_radius_cell_units(domain)
     rcell = jnp.asarray(radius_cell, dtype=cdt)
-    ok = cmask & (d2 <= rcell * rcell)
-    if not include_self:
-        ok = ok & (cand != jnp.arange(n, dtype=jnp.int32)[:, None])
-    idx, mask = select_k(cand, ok, k)
-    count = jnp.sum(ok, axis=1).astype(jnp.int32)
-    count = jnp.where(trunc, jnp.maximum(count, k + 1), count)
-    return NeighborList(idx, mask, count)
+    r2 = rcell * rcell
+    w = np.asarray(domain.cell_weights)
+
+    # Runs: contiguous 3-cell bands on an aperiodic last axis (the seam
+    # would break contiguity), single cells otherwise. Banded runs read
+    # the candidate's last-axis cell coordinate from the gathered row;
+    # single-cell runs know every axis' delta statically.
+    banded = not domain.periodic[-1]
+    if banded:
+        offs = (cells_lib.neighbor_cell_offsets(dim - 1)
+                if dim > 1 else np.zeros((1, 0), np.int32))
+    else:
+        offs = cells_lib.neighbor_cell_offsets(dim)
+    nrun = offs.shape[0]
+    naxes = offs.shape[1]  # axes with a statically known delta
+    per = jnp.asarray(np.asarray(domain.periodic[:naxes]))
+    n_ax = jnp.asarray(nc[:naxes], jnp.int32)
+    cy = cell_xy[:, -1]
+
+    begins, lengths = [], []
+    for off in offs:
+        if naxes:
+            nb = cell_xy[:, :naxes] + jnp.asarray(off, jnp.int32)
+            wrapped = jnp.where(per, nb % n_ax, nb)
+            valid = jnp.all((wrapped >= 0) & (wrapped < n_ax), axis=-1)
+            nb = jnp.clip(wrapped, 0, n_ax - 1)
+            flat = nb[..., 0]
+            for a in range(1, naxes):
+                flat = flat * nc[a] + nb[..., a]
+        else:
+            valid = jnp.ones((n,), bool)
+            flat = jnp.zeros_like(cy)
+        if banded:
+            ylo = jnp.clip(cy - 1, 0, ncy - 1)
+            yhi = jnp.clip(cy + 1, 0, ncy - 1)
+            c_lo = flat * ncy + ylo if dim > 1 else ylo
+            c_hi = flat * ncy + yhi if dim > 1 else yhi
+        else:
+            c_lo = c_hi = flat  # offs covered all axes: full flat id
+        begin = starts[c_lo]
+        end = starts[c_hi] + counts[c_hi]
+        begins.append(begin)
+        lengths.append(jnp.where(valid, end - begin, 0))
+    begin = jnp.stack(begins, axis=1)  # (N, R)
+    # Exclusive prefix of run lengths: B[:, r] = merged-slot base of run r.
+    bounds = jnp.concatenate(
+        [jnp.zeros((n, 1), jnp.int32),
+         jnp.cumsum(jnp.stack(lengths, axis=1), axis=1).astype(jnp.int32)],
+        axis=1,
+    )  # (N, R + 1)
+    total = bounds[:, -1]
+
+    # Statically known per-run deltas I - J = -off (min-image exact: a
+    # periodic axis has >= 3 cells, so wrapping I - (I + off) gives -off
+    # itself; invalid aperiodic runs carry length 0 and are never read).
+    dlt = jnp.asarray(-offs.astype(np.float32))  # (R, naxes)
+
+    # Bit-packed search row: [rel bits (d) | last-axis cell (banded)].
+    bits = _bits_dtype(dtype)
+    rel_lo = rel.astype(dtype)
+    cols = [jax.lax.bitcast_convert_type(rel_lo, bits)]
+    if banded:
+        if ncy >= jnp.iinfo(bits).max:
+            raise ValueError(
+                f"last axis has {ncy} cells; the packed search row "
+                f"caps it at {jnp.iinfo(bits).max}"
+            )
+        cols.append(cy.astype(bits)[:, None])
+    srow = jnp.concatenate(cols, axis=1)
+    rows_all = jnp.arange(n, dtype=jnp.int32)
+
+    def body(args):
+        b, bb, tot, ri, cyi, rows = args
+        c = b.shape[0]
+        t = jnp.arange(window, dtype=jnp.int32)[None, :]  # (1, S)
+        # Source run of merged slot t: r = #(runs whose base <= t).
+        rsel = jnp.zeros((c, window), jnp.int32)
+        for r in range(1, nrun):
+            rsel = rsel + (t >= bb[:, r:r + 1]).astype(jnp.int32)
+        ids = (jnp.take_along_axis(b, rsel, axis=1) + t
+               - jnp.take_along_axis(bb[:, :nrun], rsel, axis=1))
+        okw = t < tot[:, None]
+        idsc = jnp.clip(ids, 0, n - 1)
+        sj = srow[idsc]  # ONE row gather: (c, S, d [+1])
+        rjc = jax.lax.bitcast_convert_type(sj[..., :dim], dtype).astype(cdt)
+        ric = ri.astype(cdt)
+        half = jnp.asarray(0.5, cdt)
+        d2 = jnp.zeros((c, window), cdt)
+        for a in range(naxes):  # per-run constant deltas
+            da = dlt[:, a].astype(cdt)[rsel]
+            du = (ric[:, a:a + 1] - rjc[..., a]) * half + da
+            du = du * jnp.asarray(w[a], cdt)
+            d2 = d2 + du * du
+        if banded:  # last axis: exact integer cell delta, gathered
+            cyj = sj[..., dim].astype(jnp.int32)
+            dy = (cyi[:, None] - cyj).astype(cdt)
+            du = (ric[:, dim - 1:dim] - rjc[..., dim - 1]) * half + dy
+            du = du * jnp.asarray(w[dim - 1], cdt)
+            d2 = d2 + du * du
+        ok = okw & (d2 <= r2)
+        if not include_self:
+            ok = ok & (idsc != rows[:, None])
+        count = jnp.sum(ok, axis=1).astype(jnp.int32)
+        count = jnp.where(tot > window, jnp.maximum(count, k + 1), count)
+        # Keyed-sort compaction: ascending ids first, dummy id N padding.
+        key = jnp.where(ok, idsc, n)
+        key = jnp.sort(key, axis=1)
+        if window < k:
+            key = jnp.pad(key, ((0, 0), (0, k - window)),
+                          constant_values=n)
+        idx = key[:, :k]
+        return idx, idx < n, count
+
+    chunk = chunk if chunk > 0 else SEARCH_CHUNK
+    row_args = (begin, bounds, total, rel_lo, cy, rows_all)
+    nchunk = -(-n // min(n, chunk))
+    csize = -(-n // nchunk)
+    nchunk = -(-n // csize)
+    if nchunk == 1:
+        idx, mask, count = body(row_args)
+        return NeighborList(idx, mask, count)
+    pad = nchunk * csize - n
+
+    def padded(x, fill):
+        if pad == 0:
+            return x
+        return jnp.concatenate(
+            [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)], axis=0
+        )
+
+    fills = (0, 0, 0, jnp.asarray(0, rel_lo.dtype), 0, n)
+    chunked = tuple(
+        padded(x, f).reshape((nchunk, csize) + x.shape[1:])
+        for x, f in zip(row_args, fills)
+    )
+    idx, mask, count = jax.lax.map(body, chunked)
+
+    def unpad(x):
+        return x.reshape((nchunk * csize,) + x.shape[2:])[:n]
+
+    return NeighborList(unpad(idx), unpad(mask), unpad(count))
 
 
 def refilter(nl: NeighborList, d2: Array, r2: Array | float) -> NeighborList:

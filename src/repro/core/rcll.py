@@ -214,27 +214,34 @@ def packed_neighbors(
     include_self: bool = False,
     radius_cell: float | None = None,
     window: int | None = None,
+    ds: float | None = None,
+    chunk: int = 0,
 ) -> nnps.NeighborList:
     """Neighbor search on the packed arrays (returns packed indexing).
 
     Packed ids are consecutive per cell, so the search runs table-free
-    over contiguous index windows computed from the counting-sort
-    starts/counts (``nnps.rcll_neighbors_windows``): no candidate-id
-    gather at all, and the coordinate gather reads near-contiguous
-    memory — this is where the paper's 2.7x locality win comes from.
+    over contiguous index ranges computed from the counting-sort
+    starts/counts, merged into one front-packed candidate block per
+    particle (``nnps.rcll_neighbors_windows``): no candidate-id gather
+    at all, one bit-packed row gather per candidate, and the coordinate
+    gather reads near-contiguous memory — this is where the paper's
+    2.7x locality win comes from. Invalid slots of the returned ``idx``
+    hold exactly the dummy id N (sort compaction), so the fused force
+    pass consumes it with no per-slot sanitize.
 
-    window: candidate slots per contiguous cell-run. The default
-    ``2 * capacity`` bounds each 3-cell run to ~6x its mean occupancy —
-    statistically stronger than the per-cell 3x the capacity heuristic
-    applies (adjacent-cell sums concentrate) and ~1.5x less candidate
-    bandwidth; a run that still exceeds it is flagged loudly through
-    ``NeighborList.overflowed``/the solver overflow plumbing.
-    ``3 * capacity`` reproduces the dense-table coverage guarantee (and
-    its neighbor sets) exactly. NOTE: unlike the dense table, the window
-    search never drops particles at per-CELL capacity — coverage is
-    bounded per run of 3 cells instead.
+    window: static MERGED candidate budget per particle across the
+    whole 3^dim neighborhood (see ``nnps.auto_window``). The default
+    derives from the lattice spacing ``ds`` when given (the tight
+    3^dim-block occupancy bound), else ``4 * capacity``;
+    ``3^dim * capacity`` reproduces the dense-table coverage guarantee
+    exactly. Truncation is flagged loudly through
+    ``NeighborList.overflowed``/the solver overflow plumbing. NOTE:
+    unlike the dense table, the window search never drops particles at
+    per-CELL capacity — coverage is bounded by the merged budget only.
     """
     cap = pstate.packing.binning.table.shape[1]
+    if window is None:
+        window = nnps.auto_window(domain, ds=ds, capacity=cap)
     return nnps.rcll_neighbors_windows(
         domain,
         pstate.rc.rel,
@@ -243,9 +250,10 @@ def packed_neighbors(
         dtype=dtype,
         compute_dtype=compute_dtype,
         k=k,
-        window=2 * cap if window is None else window,
+        window=window,
         include_self=include_self,
         radius_cell=radius_cell,
+        chunk=chunk,
     )
 
 

@@ -62,7 +62,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cells as cells_lib
-from repro.core import fused, nnps, rcll, sph
+from repro.core import fused, nnps, rcll, sph, statepack
 from repro.core import scheme as scheme_lib
 from repro.core.domain import Domain
 from repro.core.precision import PrecisionPolicy
@@ -100,12 +100,15 @@ class SPHConfig:
     backend: str | None = None  # None=auto | "reference" | "xla" | "pallas"
     # Rows per chunk of the fused XLA force pass (0 = auto). Static.
     force_chunk: int = 0
-    # Candidate slots per contiguous cell-run of the table-free packed
-    # search (None = 2 * capacity; 3 * capacity reproduces the dense-
-    # table coverage guarantee exactly). Tighter windows cut search
-    # bandwidth; truncation is flagged through the overflow plumbing.
-    # Static.
-    window: int | None = None
+    # Merged candidate budget per particle of the table-free window
+    # search (the production rebuild path). 0 = auto: the 3^dim-block
+    # lattice bound from ``ds`` (``nnps.auto_window``);
+    # ``3^dim * capacity`` reproduces the dense-table coverage
+    # guarantee exactly. Tighter windows cut search bandwidth;
+    # truncation is flagged through the overflow plumbing. ``None``
+    # selects the dense-table candidate search (``nnps.rcll_neighbors``
+    # over the (C, cap) table) as the oracle path. Static.
+    window: int | None = 0
     # Raise (via jax.debug.callback -> XlaRuntimeError) from simulate /
     # simulate_stats when any cell-table or neighbor-list capacity
     # overflowed during the run. Off by default: the check is a host
@@ -118,7 +121,23 @@ class SPHConfig:
         return self.domain.h
 
     def cap(self, n: int) -> int:
-        return self.capacity or cells_lib.default_capacity(self.domain, n)
+        """Per-cell table capacity: explicit override or the robust
+        estimate (``cells.robust_capacity`` — covers BOTH the
+        domain-mean occupancy and the close-packed lattice bound, so a
+        mostly-empty free-surface domain cannot silently under-size its
+        cells; see the dam-break post-mortem in cells.py)."""
+        return self.capacity or cells_lib.robust_capacity(
+            self.domain, self.ds, n
+        )
+
+    def resolved_window(self) -> int:
+        """The window search's merged candidate budget (window == 0 ->
+        the ds-derived 3^dim-block lattice bound)."""
+        if self.window is None:
+            raise ValueError("window=None selects the table oracle path")
+        if self.window > 0:
+            return self.window
+        return nnps.auto_window(self.domain, ds=self.ds)
 
     @property
     def skin_norm(self) -> float:
@@ -217,9 +236,22 @@ class PersistentCarry(NamedTuple):
     # rank (cells.pack_particles prev=...).
     binning: cells_lib.CellBinning | None = None
     # XLA fused backend only (None otherwise): neighbor ids with invalid
-    # slots redirected to the dummy row N. Static between rebuilds, so
-    # sanitized once per rebuild instead of once per step.
+    # slots redirected to the dummy row N. The production window search
+    # emits this layout directly (sort compaction pads with N); the
+    # table-oracle path sanitizes once per rebuild. Static between
+    # rebuilds either way.
     idx_dummy: Array | None = None
+    # Half-record mass normalizer (fused.mass_scale), computed ONCE at
+    # init: masses never change during a run, so the per-step O(N)
+    # reduction (a sync point in the chunked sweep) is hoisted out of
+    # the scan entirely. None on paths that don't consume it.
+    m_scale: Array | None = None
+    # Pallas backend only: the static cell-major mass tile
+    # (ops.mass_table). Masses never change, so it is rebuilt only when
+    # the packed ORDER changes (i.e. at rebuild) — the per-step tile
+    # refresh then touches exactly the coordinate/velocity/density
+    # halves of the record stream.
+    m_table: Array | None = None
 
 
 class SimStats(NamedTuple):
@@ -269,7 +301,12 @@ def positions(cfg: SPHConfig, state: SPHState, dtype=jnp.float32) -> Array:
 # Persistent cell-packed RCLL pipeline
 # --------------------------------------------------------------------------
 def _permute_state(st: SPHState, perm: Array, rc: rcll.RCLLState) -> SPHState:
-    """Reorder every per-particle array by ``perm`` (rc supplied pre-sorted)."""
+    """Reorder every per-particle array by ``perm`` (rc supplied pre-sorted).
+
+    One gather per field — the readable oracle form, used at the API
+    boundary (``finalize_persistent``) and as the test reference for the
+    fused row permutation the hot rebuild runs (``_permute_state_fused``).
+    """
     return SPHState(
         xn=st.xn[perm],
         rc=rc,
@@ -283,24 +320,53 @@ def _permute_state(st: SPHState, perm: Array, rc: rcll.RCLLState) -> SPHState:
     )
 
 
+def _permute_state_fused(
+    st: SPHState, perm: Array, rc: rcll.RCLLState, order: Array
+) -> tuple[SPHState, Array]:
+    """Reorder the whole per-particle state (and ``order``) by ONE gather.
+
+    All fields are bit-packed into one contiguous u32 row buffer and
+    permuted together (``statepack.permute_fields``) — bit-identical to
+    :func:`_permute_state` plus ``order[perm]``, at a single row gather
+    instead of ~8 strided per-field gathers. ``rc`` arrives pre-sorted
+    from the counting-sort pack (its gathers live inside
+    ``rcll.pack_state``).
+    """
+    xn, v, rho, m, fixed, kind, v_wall, order = statepack.permute_fields(
+        (st.xn, st.fluid.v, st.fluid.rho, st.fluid.m, st.fixed,
+         st.kind, st.v_wall, order),
+        perm,
+    )
+    st2 = SPHState(
+        xn=xn, rc=rc, fluid=sph.FluidState(v=v, rho=rho, m=m),
+        fixed=fixed, t=st.t, kind=kind, v_wall=v_wall,
+    )
+    return st2, order
+
+
 def _packed_neighbor_list(
     cfg: SPHConfig, ps: rcll.PackedState
 ) -> nnps.NeighborList:
-    """Produce the (packed-indexing) neighbor list via the chosen backend."""
-    # One arithmetic dtype for both backends (and for the exact-set
-    # refilter below): backend choice must never change neighbor sets.
-    pol = cfg.policy
-    if cfg.resolved_backend == "pallas":
-        from repro.kernels import ops  # deferred: core stays kernel-free
+    """Produce the (packed-indexing) neighbor list at rebuild time.
 
-        return ops.rcll_neighbor_lists(
+    Production (``cfg.window`` int): the table-free merged-window search
+    (``nnps.rcll_neighbors_windows``) — no (C, cap, K) candidate table,
+    no candidate-id gather, dummy-padded ids. Oracle (``window=None``):
+    the dense-table candidate search over the (C, cap) cell table.
+    One arithmetic dtype either way: the path choice must never change
+    neighbor sets (asserted by the window-vs-table suite).
+    """
+    pol = cfg.policy
+    if cfg.window is None:  # dense-table oracle
+        return nnps.rcll_neighbors(
             cfg.domain,
-            ps.packing.binning,
             ps.rc.rel,
-            k=cfg.max_neighbors,
-            radius_cell=cfg.search_radius_cell,
-            nnps_dtype=pol.nnps_dtype,
+            ps.rc.cell_xy,
+            dtype=pol.nnps_dtype,
             compute_dtype=pol.nnps_compute_dtype,
+            k=cfg.max_neighbors,
+            binning=ps.packing.binning,
+            radius_cell=cfg.search_radius_cell,
         )
     return rcll.packed_neighbors(
         cfg.domain,
@@ -309,7 +375,7 @@ def _packed_neighbor_list(
         compute_dtype=pol.nnps_compute_dtype,
         k=cfg.max_neighbors,
         radius_cell=cfg.search_radius_cell,
-        window=cfg.window,
+        window=cfg.resolved_window(),
     )
 
 
@@ -325,40 +391,65 @@ def _empty_neighbor_list(n: int) -> nnps.NeighborList:
 def _rebuild(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
     """Re-sort by cell, re-bin, and re-search with the inflated radius.
 
-    The re-sort is the counting-sort pack: the carried binning describes
-    the run structure the arrays are currently in (the previous
-    rebuild's), which turns the stable re-sort into O(N) bincount +
-    exclusive-scan + rank passes (``cells.pack_particles``) — no argsort
-    on the hot path (a ``lax.cond`` falls back to it if any particle
-    out-ran the 3^dim neighborhood since the last rebuild).
+    The minimal-bandwidth rebuild pipeline: counting-sort pack -> ONE
+    fused state permutation -> merged-window search.
+
+      * The re-sort is the counting-sort pack: the carried binning
+        describes the run structure the arrays are currently in (the
+        previous rebuild's), which turns the stable re-sort into O(N)
+        bincount + exclusive-scan + rank passes
+        (``cells.pack_particles``) — no argsort on the hot path (a
+        ``lax.cond`` falls back to it if any particle out-ran the 3^dim
+        neighborhood since the last rebuild).
+      * The whole per-particle state rides one bit-packed u32 row
+        buffer through a SINGLE gather (``_permute_state_fused``)
+        instead of one strided gather per field.
+      * The search is the table-free merged-window search: candidate
+        ids are counting-sort range arithmetic (never gathered), the
+        distance filter gathers one bit-packed row per candidate, and
+        the sort compaction emits dummy-padded ids — so the fused force
+        pass needs no per-slot sanitize (``idx_dummy`` is the list
+        itself). The dense-table oracle (``window=None``) still
+        sanitizes its select_k output.
 
     The pallas force path walks the 3^dim cell neighborhood directly and
-    never reads a neighbor list, so its rebuild skips the K-compaction
-    kernel entirely and carries a zero-capacity list; its overflow flag
-    then means exactly "cell table dropped particles" (K truncation
-    cannot happen - the fused kernel sees every in-support pair).
+    never reads a neighbor list, so its rebuild skips the search
+    entirely and carries a zero-capacity list; its overflow flag then
+    means exactly "cell table dropped particles" (K truncation cannot
+    happen - the fused kernel sees every in-support pair).
     """
     n = carry.order.shape[0]
     ps = rcll.pack_state(
         cfg.domain, carry.st.rc, cfg.cap(n), prev=carry.binning
     )
     perm = ps.packing.order  # current-packed -> new-packed
-    st = _permute_state(carry.st, perm, ps.rc)
+    st, order = _permute_state_fused(carry.st, perm, ps.rc, carry.order)
     overflow = carry.overflow | (ps.packing.binning.overflow > 0)
     binning = ps.packing.binning
+    m_table = carry.m_table
     if cfg.resolved_backend == "pallas":
+        from repro.kernels import ops  # deferred: core stays kernel-free
+
         nl = _empty_neighbor_list(n)
         idx_dummy = None
+        m_table = ops.mass_table(
+            binning, st.fluid.m, cfg.policy.records_dtype, carry.m_scale
+        )
     else:
         nl = _packed_neighbor_list(cfg, ps)
         overflow = overflow | nl.overflowed
+        # The window search already pads invalid slots with the dummy
+        # id N — the fused sweep reads nl.idx directly (idx_dummy stays
+        # None: carrying nl.idx twice would alias two donated buffers).
+        # Only the table-oracle list (garbage invalid slots) sanitizes.
         idx_dummy = (
             fused._sanitized_idx(nl, n)
-            if cfg.resolved_backend == "xla" else None
+            if cfg.resolved_backend == "xla" and cfg.window is None
+            else None
         )
     return PersistentCarry(
         st=st,
-        order=carry.order[perm],
+        order=order,
         nl=nl,
         disp_acc=jnp.zeros_like(carry.disp_acc),
         rebuilds=carry.rebuilds + 1,
@@ -366,6 +457,8 @@ def _rebuild(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
         overflow=overflow,
         binning=binning,
         idx_dummy=idx_dummy,
+        m_scale=carry.m_scale,
+        m_table=m_table,
     )
 
 
@@ -373,6 +466,13 @@ def init_persistent(cfg: SPHConfig, state: SPHState) -> PersistentCarry:
     """Pack the state and build the first skin-inflated neighbor list."""
     cfg.validate_skin()
     n = state.xn.shape[0]
+    # Masses are constant over a run: the half-record normalizer is
+    # computed once here and carried, never re-reduced inside the scan.
+    m_scale = (
+        fused.mass_scale(state.fluid.m)
+        if cfg.policy.half_records and cfg.resolved_backend != "reference"
+        else None
+    )
     carry = PersistentCarry(
         st=state,
         order=jnp.arange(n, dtype=jnp.int32),
@@ -385,6 +485,7 @@ def init_persistent(cfg: SPHConfig, state: SPHState) -> PersistentCarry:
         rebuilds=jnp.zeros((), jnp.int32),
         steps=jnp.zeros((), jnp.int32),
         overflow=jnp.zeros((), bool),
+        m_scale=m_scale,
     )
     carry = _rebuild(cfg, carry)
     # _rebuild hands the SAME array to st.rc.cell_xy and binning.cell_xy
@@ -502,10 +603,16 @@ def _resolved_records(cfg: SPHConfig) -> str:
 def _force_rhs_fused_xla(cfg: SPHConfig, carry: PersistentCarry):
     """Fused cell-blocked force pass over packed row chunks (core/fused)."""
     st, nl, fl = carry.st, carry.nl, carry.st.fluid
+    idx_dummy = carry.idx_dummy
+    if idx_dummy is None and cfg.window is not None:
+        # Window-search lists are dummy-padded by construction: the
+        # list IS the sanitized id array, no extra buffer carried.
+        idx_dummy = nl.idx
     return fused.force_rhs(
         cfg.domain, st.rc, nl, fl.v, fl.m, fl.rho,
         scheme=cfg.resolved_scheme, chunk=cfg.force_chunk,
-        records=_resolved_records(cfg), idx_dummy=carry.idx_dummy,
+        records=_resolved_records(cfg), idx_dummy=idx_dummy,
+        m_scale=carry.m_scale,
     )
 
 
@@ -519,6 +626,8 @@ def _force_rhs_fused_pallas(cfg: SPHConfig, carry: PersistentCarry):
         dom, carry.binning, st.rc, fl.v, fl.m, fl.rho,
         scheme=cfg.resolved_scheme,
         records_dtype=cfg.policy.records_dtype,
+        m_scale=carry.m_scale,
+        m_table=carry.m_table,
     )
 
 
@@ -578,6 +687,8 @@ def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
         overflow=carry.overflow,
         binning=carry.binning,
         idx_dummy=carry.idx_dummy,
+        m_scale=carry.m_scale,
+        m_table=carry.m_table,
     )
 
 

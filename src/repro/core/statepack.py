@@ -1,0 +1,105 @@
+"""Fused per-particle state permutation (the rebuild's record-row trick).
+
+A rebuild reorders EVERY per-particle array by the same permutation.
+Done per field, that is one strided gather per array (x, v, rho, m,
+kind, v_wall, order, ...) — each a separate walk over the permutation
+with its own kernel launch. Mirroring the PR 3 record-row trick, all
+fields are instead bit-packed into one contiguous u32 row buffer,
+permuted by a SINGLE gather (rows are contiguous, cache-line friendly),
+and unbundled back to their original dtypes — bitcasts and integer
+widening only, no value ever rounds.
+
+Column mapping per field (trailing dims flattened into columns):
+
+  * 4-byte dtypes (f32 / i32 / u32): one bitcast column per component.
+  * 2-byte dtypes (f16 / bf16): bitcast to u16, widened to one u32
+    column (zero-extend; exact round trip via truncation).
+  * 1-byte dtypes (bool / i8 / u8): widened to one u32 column
+    (modular; exact round trip via truncation).
+
+The pack/unpack pair is exact for every supported dtype — asserted by
+the round-trip test — so a fused permutation is bit-identical to the
+per-field one. The buffer is transient inside the jitted rebuild: XLA
+fuses the pack into the gather, and the donated scan carry reuses the
+old field buffers for the unbundled outputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def _ncols(x: Array) -> int:
+    """u32 columns a field occupies (one per trailing component)."""
+    comps = 1
+    for s in x.shape[1:]:
+        comps *= s
+    return comps
+
+
+def _to_u32_cols(x: Array) -> Array:
+    """(N, comps) u32 view of a per-particle field (exact, see module doc)."""
+    n = x.shape[0]
+    flat = x.reshape(n, -1)
+    size = jnp.dtype(x.dtype).itemsize
+    if size == 4:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    if size == 2:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint16).astype(
+            jnp.uint32
+        )
+    if size == 1:
+        if x.dtype == jnp.dtype(bool):
+            return flat.astype(jnp.uint32)
+        return jax.lax.bitcast_convert_type(flat, jnp.uint8).astype(
+            jnp.uint32
+        )
+    raise ValueError(f"unsupported statepack dtype {x.dtype}")
+
+
+def _from_u32_cols(cols: Array, like: Array) -> Array:
+    """Inverse of :func:`_to_u32_cols` for a field shaped/typed as ``like``."""
+    shape = (cols.shape[0],) + like.shape[1:]
+    size = jnp.dtype(like.dtype).itemsize
+    if size == 4:
+        out = jax.lax.bitcast_convert_type(cols, like.dtype)
+    elif size == 2:
+        out = jax.lax.bitcast_convert_type(
+            cols.astype(jnp.uint16), like.dtype
+        )
+    elif size == 1:
+        if like.dtype == jnp.dtype(bool):
+            out = cols != 0
+        else:
+            out = jax.lax.bitcast_convert_type(
+                cols.astype(jnp.uint8), like.dtype
+            )
+    else:
+        raise ValueError(f"unsupported statepack dtype {like.dtype}")
+    return out.reshape(shape)
+
+
+def permute_fields(fields: tuple, perm: Array) -> tuple:
+    """Permute every per-particle array in ``fields`` by ONE fused gather.
+
+    ``fields`` may contain ``None`` entries (optional state fields);
+    they pass through as ``None``. Equivalent to ``tuple(f[perm] for f
+    in fields)`` bit-for-bit, at one row gather instead of one gather
+    per field.
+    """
+    present = [f for f in fields if f is not None]
+    if not present:
+        return fields
+    buf = jnp.concatenate([_to_u32_cols(f) for f in present], axis=1)
+    buf = buf[perm]
+    out, col = [], 0
+    for f in fields:
+        if f is None:
+            out.append(None)
+            continue
+        c = _ncols(f)
+        out.append(_from_u32_cols(buf[:, col:col + c], f))
+        col += c
+    return tuple(out)

@@ -262,6 +262,29 @@ def _typed_row_table(
     )
 
 
+def mass_table(
+    binning: cells_lib.CellBinning,
+    m: Array,
+    records_dtype,
+    m_scale: Array | None = None,
+) -> Array:
+    """(C+1, cap) static cell-major mass table for the force kernel.
+
+    Masses never change during a run, so the persistent solver builds
+    this once per REBUILD (packed order changes there) instead of once
+    per step; half-width layouts store ``m / m_scale``
+    (``fused.mass_scale`` — see the subnormal-mass note there).
+    """
+    from repro.core import fused
+
+    half = jnp.dtype(records_dtype).itemsize == 2
+    if half:
+        if m_scale is None:
+            m_scale = fused.mass_scale(m)
+        m = m.astype(jnp.float32) / m_scale
+    return _typed_row_table(binning, m, records_dtype)
+
+
 def rcll_force_particles(
     domain: Domain,
     binning: cells_lib.CellBinning,
@@ -276,6 +299,8 @@ def rcll_force_particles(
     records_dtype=jnp.float32,
     interpret: bool | None = None,
     scheme=None,
+    m_scale: Array | None = None,
+    m_table: Array | None = None,
 ) -> tuple[Array, Array]:
     """The full SPH pair RHS via the fused Pallas kernel.
 
@@ -291,9 +316,20 @@ def rcll_force_particles(
     production layout, fp32 the accuracy oracle. The coordinate tiles
     always stream the raw storage-dtype rel (lossless).
 
+    REQUIRES the persistent pipeline's PACKED binning (the per-particle
+    arrays are cell-sorted and ``binning.table`` holds consecutive
+    packed ids): the cell-major tiles are then contiguous row slices,
+    built by the one-sweep cell-pack kernel (``kernels/cell_pack.py``)
+    from two record slabs — one 16-bit row ``[rel | shift | v]`` and
+    one fp32 row ``[1/ρ]`` — instead of one id-table gather per field.
+    ``m_table``/``m_scale``: optionally precomputed static mass tile
+    (:func:`mass_table`) — the solver rebuilds it only when the packed
+    order changes, so the per-step refresh touches exactly the
+    coordinate/velocity/density halves.
+
     Between Verlet-skin rebuilds the binning is STALE: a particle may
     have migrated to an adjacent cell while still occupying its old slot.
-    The decode stays exact by streaming the int8 cell shift
+    The decode stays exact by streaming the small-int cell shift
     cell_now - cell_stale (minimum-image wrapped) next to the raw rel
     and re-anchoring rel' = rel + 2·shift in fp32 registers — the shift
     is an exact small integer, so rel' decodes to the identical fp32
@@ -302,30 +338,72 @@ def rcll_force_particles(
     """
     from repro.core import fused  # shared mass normalizer
     from repro.core import scheme as scheme_lib
+    from repro.kernels import cell_pack
 
     if scheme is None:
         if c0 is None:
             raise ValueError("pass either scheme= or the legacy c0=")
         scheme = scheme_lib.wcsph(c0, rho0, mu)
     interpret = default_interpret() if interpret is None else interpret
+    d = rc.rel.shape[1]
     delta = domain.wrap_cell_delta(rc.cell_xy - binning.cell_xy)
-    rel_t, _, _ = pack_cells(binning, rc.rel)
-    shift_t, _, _ = pack_cells(binning, delta.astype(jnp.int8))
-    v_t, _, _ = pack_cells(binning, v.astype(records_dtype))
-    # Mass normalized to O(1) for the 16-bit stream (fused.mass_scale:
-    # raw SPH masses go subnormal in fp16 at fine ds); every pair term
-    # is linear in m_j, so the outputs are rescaled once below. The fp32
-    # oracle stream stays un-normalized (bit-stable vs the reference).
     half = jnp.dtype(records_dtype).itemsize == 2
-    m_scale = fused.mass_scale(m) if half else jnp.float32(1.0)
-    m_t = _typed_row_table(
-        binning, m.astype(jnp.float32) / m_scale, records_dtype
+    if not half:
+        m_scale = jnp.float32(1.0)
+    elif m_scale is None:
+        m_scale = fused.mass_scale(m)
+    if m_table is None:
+        m_table = mass_table(binning, m, records_dtype, m_scale)
+
+    def u16(x):
+        return jax.lax.bitcast_convert_type(x, jnp.uint16)
+
+    # One 16-bit record slab + one fp32 slab: the dynamic halves of the
+    # step, packed cell-major in ONE sweep (contiguous slices — the
+    # arrays are cell-sorted). Each field rides the slab of its OWN
+    # storage width: rel keeps its raw storage bits (fp16/bf16 in the
+    # 16-bit slab, fp32-coords policies like APPROACH_I in the fp32
+    # slab — never quantized), shift is always an exact small int16,
+    # v follows the records dtype.
+    rel_half = jnp.dtype(rc.rel.dtype).itemsize == 2
+    cols16 = [u16(delta.astype(jnp.int16))]
+    cols32 = [(1.0 / rho).astype(jnp.float32)[:, None]]
+    fill32 = [1.0 / scheme.rho0]
+    if rel_half:
+        cols16.insert(0, u16(rc.rel))
+    else:
+        cols32.append(rc.rel.astype(jnp.float32))
+        fill32 += [0.0] * d
+    if half:
+        cols16.append(u16(v.astype(records_dtype)))
+    else:
+        cols32.append(v.astype(jnp.float32))
+        fill32 += [0.0] * d
+    starts = cells_lib.exclusive_cumsum(binning.counts)
+    t16, t32, _ = cell_pack.cell_tables(
+        jnp.concatenate(cols16, axis=1),
+        jnp.concatenate(cols32, axis=1),
+        starts,
+        binning.counts,
+        jnp.asarray(fill32, jnp.float32),
+        cap=binning.table.shape[1],
+        interpret=interpret,
     )
-    # Reciprocal density: one division per particle here, none per pair
-    # in the kernel (sph.eos_tait_por2_inv / viscosity_pair_coef_inv).
-    inv_t = _row_table(
-        binning, (1.0 / rho).astype(jnp.float32), fill=1.0 / scheme.rho0
-    )
+    o16 = d if rel_half else 0  # 16-bit slab offset past rel
+    o32 = 1 + (0 if rel_half else d)  # fp32 slab offset past inv, rel
+    if rel_half:
+        rel_t = jax.lax.bitcast_convert_type(t16[:, :d], rc.rel.dtype)
+    else:
+        rel_t = t32[:, 1:1 + d]
+    shift_t = jax.lax.bitcast_convert_type(t16[:, o16:o16 + d], jnp.int16)
+    if half:
+        v_t = jax.lax.bitcast_convert_type(
+            t16[:, o16 + d:o16 + 2 * d], records_dtype
+        )
+    else:
+        v_t = t32[:, o32:o32 + d]
+    inv_t = t32[:, 0]
+    m_t = m_table
     offs = tuple(map(tuple, cells_lib.neighbor_cell_offsets(domain.dim)))
     drho_t, acc_t = rcll_force.rcll_force(
         rel_t, shift_t, v_t, m_t, inv_t, nb_with_sentinel(domain),

@@ -139,3 +139,38 @@ def test_fused_gradient_matches_two_pass():
     g_two = sph.gradient_normalized_pairs(f, disp, r, nl.idx, nl.mask,
                                           dom.h, 2)
     np.testing.assert_allclose(g_fused, g_two, rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------------
+# One-sweep cell-pack kernel vs its jnp oracle
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n,dim,seed", [(500, 2, 0), (300, 3, 1)])
+def test_cell_pack_kernel_matches_ref(n, dim, seed):
+    from repro.kernels import cell_pack
+
+    rng = np.random.default_rng(seed)
+    ds = (1.0 / n) ** (1.0 / dim)
+    dom = (D.unit_square(h=1.2 * ds) if dim == 2
+           else D.unit_cube(h=1.2 * ds))
+    x = rng.uniform(0, 1, (n, dim))
+    st = rcll.init_state(dom, dom.normalize(jnp.asarray(x)), jnp.float16)
+    cap = cells.default_capacity(dom, n, safety=6.0)
+    ps = rcll.pack_state(dom, st, cap)
+    b = ps.packing.binning
+    starts = cells.exclusive_cumsum(b.counts)
+    rows16 = jax.lax.bitcast_convert_type(ps.rc.rel, jnp.uint16)
+    rows32 = jnp.asarray(rng.normal(size=(n, 2)), jnp.float32)
+    fill32 = jnp.asarray([1.0, 0.0], jnp.float32)
+    out_k = cell_pack.cell_tables(
+        rows16, rows32, starts, b.counts, fill32, cap=cap, interpret=True
+    )
+    out_r = cell_pack.cell_tables_ref(
+        rows16, rows32, starts, b.counts, fill32, cap=cap
+    )
+    for a, c in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    # the emitted id table IS the counting-sort packed table (+ sentinel)
+    np.testing.assert_array_equal(
+        np.asarray(out_k[2][:-1]), np.asarray(b.table)
+    )
+    assert np.all(np.asarray(out_k[2][-1]) == -1)

@@ -91,9 +91,13 @@ def test_simulate_returns_original_indexing():
 # Verlet-skin reuse: exact neighbor sets at every step
 # --------------------------------------------------------------------------
 def _to_original(nl: nnps.NeighborList, packed_to_orig) -> nnps.NeighborList:
-    """Re-index a packed neighbor list into original particle indexing."""
+    """Re-index a packed neighbor list into original particle indexing.
+
+    Invalid slots may hold the dummy id N (the window search's padding
+    convention); they are masked, so clip before the numpy gather.
+    """
     p2o = np.asarray(packed_to_orig)
-    idx = p2o[np.asarray(nl.idx)]
+    idx = p2o[np.minimum(np.asarray(nl.idx), p2o.shape[0] - 1)]
     inv = np.argsort(p2o)
     return nnps.NeighborList(
         idx=jnp.asarray(idx)[inv],
@@ -282,4 +286,167 @@ def test_window_truncation_flags_overflow():
     )
     assert bool(
         rcll.packed_neighbors(dom, ps, k=192, window=4).overflowed
+    )
+
+
+# --------------------------------------------------------------------------
+# Fused state permutation (the rebuild's one-gather row buffer)
+# --------------------------------------------------------------------------
+def test_statepack_roundtrip_exact(rng):
+    from repro.core import statepack
+
+    n = 257
+    fields = (
+        jnp.asarray(rng.normal(size=(n, 2)), jnp.float32),
+        jnp.asarray(rng.normal(size=(n, 2)), jnp.float16),
+        jnp.asarray(rng.integers(-5, 5, (n, 2)), jnp.int32),
+        jnp.asarray(rng.integers(0, 2, (n,)), bool),
+        jnp.asarray(rng.integers(-128, 127, (n,)), jnp.int8),
+        None,
+        jnp.asarray(rng.normal(size=(n,)), jnp.float32),
+    )
+    perm = jnp.asarray(rng.permutation(n), jnp.int32)
+    out = statepack.permute_fields(fields, perm)
+    for f, o in zip(fields, out):
+        if f is None:
+            assert o is None
+            continue
+        assert o.dtype == f.dtype and o.shape == f.shape
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(f[perm]))
+
+
+def test_fused_permute_matches_per_field(rng):
+    """The one-gather row permutation must be bit-identical to the
+    per-field oracle — including optional fields (kind/v_wall) and the
+    order array — for every backend's rebuild."""
+    for case in (
+        cases.PoiseuilleCase(ds=0.1, Lx=0.8, algo="rcll"),
+        cases.build_case("cavity", ds=0.12),  # kind + v_wall present
+    ):
+        cfg, st = case.build()
+        n = st.xn.shape[0]
+        st = solver.simulate(cfg, st, 3)  # nontrivial v/rho
+        ps = rcll.pack_state(cfg.domain, st.rc, cfg.cap(n))
+        perm = ps.packing.order
+        order = jnp.asarray(rng.permutation(n), jnp.int32)
+        oracle = solver._permute_state(st, perm, ps.rc)
+        fused_st, fused_order = solver._permute_state_fused(
+            st, perm, ps.rc, order
+        )
+        np.testing.assert_array_equal(
+            np.asarray(fused_order), np.asarray(order[perm])
+        )
+        for a, b in zip(jax.tree_util.tree_leaves(oracle),
+                        jax.tree_util.tree_leaves(fused_st)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# Window-as-default vs the dense-table oracle on every registered case
+# --------------------------------------------------------------------------
+def test_window_default_matches_table_oracle_on_all_cases():
+    """Acceptance criterion: the production window search (the default)
+    must produce neighbor sets identical to the (C, cap) table path
+    (SPHConfig.window=None) on every registered case."""
+    import dataclasses as dc
+
+    for name in cases.case_names():
+        case = cases.build_case(
+            name, ds=cases.resolve_ds(name, 400), backend="xla"
+        )
+        cfg, st = case.build()
+        assert cfg.window == 0  # auto window IS the default
+        carry_w = solver.init_persistent(cfg, st)
+        carry_t = solver.init_persistent(
+            dc.replace(cfg, window=None), st
+        )
+        eq = nnps.neighbor_sets_equal(carry_w.nl, carry_t.nl)
+        assert bool(jnp.all(eq)), (name, int(jnp.sum(~eq)))
+        np.testing.assert_array_equal(
+            np.asarray(carry_w.nl.count), np.asarray(carry_t.nl.count)
+        )
+        assert not bool(carry_w.overflow), name
+
+
+# --------------------------------------------------------------------------
+# Window truncation: raised loudly, recovered by a wider budget
+# --------------------------------------------------------------------------
+def test_window_truncation_raised_and_recovered():
+    """A too-tight merged window must flag overflow end-to-end through
+    the full simulate scan (and raise under check_overflow); widening
+    the budget must recover table-oracle-identical neighbor sets."""
+    import dataclasses as dc
+    import pytest
+
+    case = cases.PoiseuilleCase(ds=0.05, Lx=0.8, algo="rcll",
+                                backend="xla")
+    cfg, st = case.build()
+    tight = dc.replace(cfg, window=8)
+    _, stats = solver.simulate_stats(tight, st, 3)
+    assert bool(stats.overflow)
+    with pytest.raises(Exception, match="overflow"):
+        out, stats = jax.block_until_ready(
+            solver.simulate_stats(
+                dc.replace(tight, check_overflow=True), st, 3
+            )
+        )
+    # recovery: the default (auto) budget is truncation-free and equals
+    # the dense-table oracle's sets
+    carry_w = solver.init_persistent(cfg, st)
+    carry_t = solver.init_persistent(dc.replace(cfg, window=None), st)
+    assert not bool(carry_w.overflow)
+    assert bool(jnp.all(nnps.neighbor_sets_equal(carry_w.nl, carry_t.nl)))
+
+
+# --------------------------------------------------------------------------
+# Counting-sort argsort fallback under >1-cell movers, through simulate
+# --------------------------------------------------------------------------
+def test_counting_sort_fallback_through_simulate(rng):
+    """A particle that out-runs the 3^dim neighborhood between rebuilds
+    violates the counting-sort precondition; the in-scan lax.cond must
+    take the argsort branch and keep the permutation (and physics)
+    exact. Oracle: the stateless per-step solver.step, whose cold pack
+    always argsorts from scratch."""
+    ds = 1.0 / 16
+    dom = D.Domain(lo=(0.0, 0.0), hi=(1.0, 1.0), h=1.2 * ds,
+                   periodic=(True, True))
+    x = D.lattice_positions(dom, ds, jitter=0.05, seed=3)
+    n = x.shape[0]
+    cfg = solver.SPHConfig(
+        domain=dom, ds=ds, dt=1e-3, c0=1.0, mu=0.0, body_force=(0.0, 0.0),
+        max_neighbors=48, algo="rcll", backend="xla",
+    )
+    v = np.zeros((n, 2), np.float32)
+    # particle 0 crosses ~2.5 cells per step: dxn = v dt 2/h_d,
+    # cells/step = dxn / hc
+    hc = dom.hc_norm_axes[0]
+    v[0, 0] = 2.5 * hc * dom.h_d / (2.0 * cfg.dt)
+    m = np.full((n,), ds * ds, np.float32)
+    # massless tracer: the mover still violates the pack precondition
+    # every step, but exerts no force — so the two runs' only
+    # difference is the packing code path, not chaos amplification of
+    # its (enormous) velocity through the pair sums
+    m[0] = 0.0
+    rho = np.ones((n,), np.float32)
+    st = solver.init_state(cfg, x, v, m, rho)
+    # sanity: the mover really violates the 1-cell precondition
+    assert v[0, 0] * cfg.dt * 2.0 / dom.h_d / hc > 2.0
+
+    nsteps = 8
+    out = solver.simulate(cfg, st, nsteps)  # scan: prev-binning pack
+    ref = st
+    for _ in range(nsteps):  # stateless: cold argsort pack every step
+        ref = solver.step(cfg, ref)
+    p_out = np.asarray(solver.positions(cfg, out))
+    p_ref = np.asarray(solver.positions(cfg, ref))
+    assert np.all(np.isfinite(p_out))
+    # identical permutation handling => identical physics to round-off
+    np.testing.assert_allclose(p_out, p_ref, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(out.fluid.rho), np.asarray(ref.fluid.rho),
+        rtol=0, atol=1e-5,
+    )
+    # particles come back in original indexing (permutation validity)
+    np.testing.assert_array_equal(
+        np.asarray(out.fluid.m), np.asarray(st.fluid.m)
     )
