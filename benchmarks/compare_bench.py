@@ -1,18 +1,25 @@
 """Diff consecutive BENCH_nnps.json run records and flag regressions.
 
-The perf history file accumulates one record per ``nnps_throughput``
-run, oldest first. This tool compares the two most recent records —
-or an out-of-history candidate record (``--candidate``, produced by
-``nnps_throughput --no-append --out FILE``) against the newest history
-record — matching cases by (case, dynamic, n_target, backend, records,
-skin_frac_hc) and flagging, beyond ``--threshold`` (default 15%):
+The perf history file accumulates one record per benchmark run, oldest
+first — ``nnps_throughput`` records (label "rebuild_round") interleaved
+with ``guard_overhead`` records (label "health_guard"). This tool
+compares the newest record against the newest EARLIER record of the
+same label — or an out-of-history candidate record (``--candidate``,
+produced by ``--no-append --out FILE``) against its label's newest
+history record — matching cases by (case, dynamic, n_target, backend,
+records, skin_frac_hc, guarded) and flagging, beyond ``--threshold``
+(default 15%):
 
   * any steps/sec DROP (for dynamic rows this is the amortized
     physics+rebuild throughput — the metric the steady rows' rebuilds=0
     blind spot cannot see);
   * any rebuild_ms RISE — the rebuild cost is invisible to steady
     steps/sec, which is exactly how it grew 8x steps-worth before the
-    rebuild round.
+    rebuild round;
+  * for health_guard records additionally the ABSOLUTE bound: guarded
+    throughput within ``--guard-limit`` (default 5%) of unguarded at
+    every tier — this one needs no history and flags even the first
+    record.
 
 Exit status: 1 if any regression was flagged, else 0. CI runs this as a
 NON-blocking step (``continue-on-error``): CPU runner timings are noisy
@@ -38,7 +45,24 @@ def _case_key(case: dict) -> tuple:
         case.get("backend"),
         case.get("records", "fp32"),  # pre-half-record rows were fp32
         case.get("skin_frac_hc"),
+        bool(case.get("guarded", False)),  # health_guard A/B rows
     )
+
+
+def _label(record: dict) -> str:
+    # pre-label records are all the throughput benchmark's
+    return record.get("label", "rebuild_round")
+
+
+def check_guard_overhead(record: dict, limit: float) -> list:
+    """The health_guard records' ABSOLUTE acceptance check: guarded
+    throughput must stay within ``limit`` of unguarded at every tier
+    (the ISSUE's 5% bound) — no history needed."""
+    flagged = []
+    for size, frac in (record.get("guard_overhead_frac") or {}).items():
+        if frac > limit:
+            flagged.append((size, frac))
+    return flagged
 
 
 def _load_history(path: str) -> list[dict]:
@@ -87,21 +111,51 @@ def main(argv=None) -> int:
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="relative steps/sec drop that counts as a "
                     "regression (default 0.15)")
+    ap.add_argument("--guard-limit", type=float, default=0.05,
+                    help="max health-guard overhead (guarded vs "
+                    "unguarded steps/sec) before a health_guard record "
+                    "is flagged (default 0.05)")
     args = ap.parse_args(argv)
 
     history = _load_history(args.file)
     if args.candidate:
         with open(args.candidate) as f:
             new = json.load(f)
-        old = history[-1]
+        matches = [r for r in history if _label(r) == _label(new)]
     else:
         if len(history) < 2:
             print("compare_bench: fewer than two run records — nothing "
                   "to compare")
             return 0
-        old, new = history[-2], history[-1]
+        new = history[-1]
+        matches = [r for r in history[:-1] if _label(r) == _label(new)]
+
+    # health_guard records carry their own absolute acceptance bound
+    guard_flagged = []
+    if _label(new) == "health_guard":
+        guard_flagged = check_guard_overhead(new, args.guard_limit)
+        for size, frac in guard_flagged:
+            print(f"health_guard n={size}: guarded run is {frac:+.1%} "
+                  f"slower than unguarded (limit {args.guard_limit:.0%})"
+                  "  << OVERHEAD")
+
+    if not matches:
+        # first record of its label: nothing historical to diff against
+        print(f"compare_bench: no earlier {_label(new)!r} record — "
+              "history comparison skipped")
+        if guard_flagged:
+            print(f"\n{len(guard_flagged)} tier(s) exceed the guard "
+                  "overhead limit")
+            return 1
+        return 0
+    old = matches[-1]
 
     rows, flagged = compare(old, new, args.threshold)
+    if guard_flagged:
+        flagged.extend(
+            (("health_guard", s), "overhead", 0.0, f, f)
+            for s, f in guard_flagged
+        )
     if not rows:
         print("compare_bench: no matching cases between the two records "
               "(different sizes/backends) — nothing to compare")

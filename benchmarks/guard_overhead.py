@@ -1,0 +1,153 @@
+"""Health-guard overhead: guarded vs unguarded steps/sec (8k / 64k).
+
+The guard's cost has three parts, all measured here together as the
+end-to-end throughput delta:
+
+  * the fused in-scan health reduction at each block boundary
+    (``health.check_carry`` — a handful of O(N) reductions);
+  * the per-block host read of the HealthWord scalars (the sync the
+    driver pauses at anyway between donated segments);
+  * the host snapshot of the carry after each healthy block (the
+    rollback point — the dominant term, tunable via
+    ``GuardPolicy.snapshot_every``).
+
+Both sides run the SAME segmentation (one donated scan per block) so
+the comparison isolates the guard work, not scan-length effects: the
+unguarded side chains ``solver.run_persistent`` in ``block``-step
+segments; the guarded side is ``recovery.run_guarded`` with the same
+block. Appends a ``label: "health_guard"`` record to BENCH_nnps.json;
+``compare_bench`` flags these records whenever overhead exceeds 5%.
+
+  PYTHONPATH=src python -m benchmarks.guard_overhead [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import emit
+from benchmarks.nnps_throughput import _append_record, _build, default_steps
+from repro.core import recovery, solver
+
+#: steps per guarded block for the benchmark (the GuardPolicy default).
+BLOCK = 32
+
+
+def _time_unguarded(cfg, st, nsteps: int, block: int) -> float:
+    nblocks = max(1, nsteps // block)
+
+    def run_once():
+        # same structure as one run_guarded call: eager init + nblocks
+        # donated block scans — everything except the guard work. The
+        # init carry aliases st.t; sever it so the donated chain leaves
+        # ``st`` reusable across timed runs.
+        carry = solver.init_persistent(cfg, st)
+        carry = carry._replace(
+            st=carry.st._replace(t=jnp.copy(carry.st.t))
+        )
+        for _ in range(nblocks):
+            carry = solver.run_persistent(cfg, carry, block)
+        return jax.block_until_ready(carry)
+
+    run_once()  # compile
+    times = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        run_once()
+        times.append(time.perf_counter() - t0)
+    return (nblocks * block) / min(times)
+
+
+def _time_guarded(cfg, st, nsteps: int, block: int) -> float:
+    nblocks = max(1, nsteps // block)
+    n = nblocks * block
+    policy = recovery.GuardPolicy(block=block)
+    # one throwaway run pays the compile; timed runs restart from st
+    # (run_guarded never donates its ``state`` argument's buffers — it
+    # snapshots to host before the first donated block)
+    out, _, rep, _ = recovery.run_guarded(cfg, st, block, policy)
+    assert not rep.recovered, "benchmark case must be healthy"
+    times = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        out, _, _, _ = recovery.run_guarded(cfg, st, n, policy)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return n / min(times)
+
+
+def run_tier(n_target: int, nsteps: int) -> list[dict]:
+    # Amortize the eager init (inside every run_guarded call, but paid
+    # once per RUN, not per block) over enough blocks that the measured
+    # delta is the steady per-block guard cost — the number that scales.
+    nsteps = max(nsteps, 10 * BLOCK)
+    cfg, st, max_neighbors = _build(
+        n_target, "xla", skin_frac_hc=0.5, records="fp16"
+    )
+    st = jax.block_until_ready(solver.simulate(cfg, st, 10))
+    rows = []
+    sps_plain = _time_unguarded(cfg, st, nsteps, BLOCK)
+    sps_guard = _time_guarded(cfg, st, nsteps, BLOCK)
+    overhead = sps_plain / sps_guard - 1.0
+    for guarded, sps in ((False, sps_plain), (True, sps_guard)):
+        rows.append({
+            "case": "poiseuille",
+            "dynamic": False,
+            "guarded": guarded,
+            "n_target": n_target,
+            "n_particles": int(st.xn.shape[0]),
+            "backend": "xla",
+            "records": "fp16",
+            "skin_frac_hc": 0.5,
+            "max_neighbors": max_neighbors,
+            "block": BLOCK,
+            "nsteps": nsteps,
+            "steps_per_sec": round(sps, 3),
+        })
+    rows[-1]["overhead_frac"] = round(overhead, 4)
+    emit("guard_overhead", {
+        "n_target": n_target, "unguarded": round(sps_plain, 2),
+        "guarded": round(sps_guard, 2), "overhead": round(overhead, 4),
+    })
+    return rows
+
+
+def main(full: bool = True, append: bool = True, out: str | None = None):
+    targets = [8000, 64000] if full else [8000]
+    rows, overhead = [], {}
+    for n_target in targets:
+        tier = run_tier(n_target, default_steps(n_target))
+        rows.extend(tier)
+        overhead[str(n_target)] = tier[-1]["overhead_frac"]
+    record = {
+        "label": "health_guard",
+        "case": "poiseuille",
+        "backend": jax.default_backend(),
+        "cpu_count": os.cpu_count(),
+        "cases": rows,
+        "guard_overhead_frac": overhead,
+    }
+    if append:
+        _append_record(record)
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+    emit("guard_overhead_summary", overhead)
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="8k only")
+    ap.add_argument("--no-append", action="store_true",
+                    help="do not append to BENCH_nnps.json")
+    ap.add_argument("--out", type=str, default=None,
+                    help="also write the record to a standalone file")
+    a = ap.parse_args()
+    main(full=not a.quick, append=not a.no_append, out=a.out)

@@ -32,6 +32,11 @@ SEP = "/"
 
 def _flatten(tree, prefix=""):
     out = {}
+    if tree is None:
+        # Empty subtree (e.g. a PersistentCarry's unused optional
+        # fields): nothing to persist — restore rebuilds it from the
+        # template's matching None.
+        return out
     if isinstance(tree, dict):
         it = tree.items()
     elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
@@ -48,6 +53,8 @@ def _flatten(tree, prefix=""):
 
 def _unflatten_into(template, flat, prefix=""):
     """Rebuild a pytree shaped like `template` from the flat dict."""
+    if template is None:
+        return None
     if isinstance(template, dict):
         return {
             k: _unflatten_into(v, flat, f"{prefix}{SEP}{k}" if prefix else k)

@@ -34,7 +34,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cases as cases_lib
-from repro.core import solver
+from repro.core import recovery, solver
+from repro.core.health import observe_state  # noqa: F401  (public re-export)
 
 Array = jnp.ndarray
 
@@ -48,25 +49,13 @@ class Observables(NamedTuple):
     rho_err: Array  # (S,) fp32 max fluid |rho/rho0 - 1|
 
 
-def observe_state(cfg: solver.SPHConfig, st: solver.SPHState):
-    """One observable row from a state (any particle ordering)."""
-    fl = st.fluid
-    fluid = ~st.fixed
-    w = fluid.astype(jnp.float32)
-    v2 = jnp.sum(fl.v * fl.v, axis=-1)
-    rho0 = cfg.resolved_scheme.rho0
-    return (
-        st.t,
-        0.5 * jnp.sum(w * fl.m * v2),
-        jnp.sqrt(jnp.max(jnp.where(fluid, v2, 0.0))),
-        jnp.max(jnp.where(fluid, jnp.abs(fl.rho / rho0 - 1.0), 0.0)),
-    )
-
-
 class SimResult(NamedTuple):
     state: solver.SPHState  # final state, original particle indexing
     stats: solver.SimStats
     observables: Observables | None
+    # GuardReport of a guarded run (recovery actions taken, final
+    # escalated config); None on unguarded runs.
+    report: recovery.GuardReport | None = None
 
 
 @partial(jax.jit, static_argnums=(0, 2, 3), donate_argnums=(1,))
@@ -128,13 +117,23 @@ class Simulation:
     def n_particles(self) -> int:
         return int(self.state.xn.shape[0])
 
-    def run(self, nsteps: int, observe_every: int = 0) -> SimResult:
+    def run(
+        self, nsteps: int, observe_every: int = 0, guard=None
+    ) -> SimResult:
         """Advance ``nsteps`` steps; sample observables every ``observe_every``.
 
         ``observe_every=0`` disables sampling (``observables=None``) and
         is then exactly ``solver.simulate_stats``. Otherwise the run
         takes ``nsteps`` rounded DOWN to a whole number of sample blocks
         (at least one), so every returned row has uniform spacing.
+
+        ``guard`` enables the self-healing health guard (RCLL only):
+        ``True`` for the default :class:`recovery.GuardPolicy`, or a
+        policy instance. The run then detects divergence in-scan,
+        recovers by rollback + escalation (dt backoff, capacity regrow,
+        precision degrade), updates ``self.cfg`` to the escalated config,
+        and raises :class:`recovery.SimulationDiverged` only when the
+        policy is exhausted. The report rides ``SimResult.report``.
 
         The observed RCLL path donates its scan carry (the
         ``run_persistent`` production semantics): the SPHState this
@@ -143,6 +142,25 @@ class Simulation:
         before the call.
         """
         cfg = self.cfg
+        if guard:
+            if cfg.algo != "rcll":
+                raise ValueError(
+                    "guard requires the persistent rcll pipeline"
+                )
+            policy = guard if isinstance(guard, recovery.GuardPolicy) \
+                else None
+            every = min(observe_every, nsteps) if observe_every > 0 else 0
+            n = max(1, nsteps // every) * every if every else nsteps
+            out, stats, report, rows = recovery.run_guarded(
+                cfg, self.state, n, policy, observe_every=every
+            )
+            obs = None
+            if every:
+                cols = [jnp.stack(c) for c in zip(*rows)]
+                obs = Observables(*cols)
+            self.cfg = report.cfg  # keep escalations for chained runs
+            self.state = out
+            return SimResult(out, stats, obs, report)
         if observe_every <= 0:
             out, stats = solver.simulate_stats(cfg, self.state, nsteps)
             self.state = out
@@ -170,14 +188,14 @@ class Simulation:
         return SimResult(out, stats, obs)
 
     def run_timed(
-        self, nsteps: int, observe_every: int = 0
+        self, nsteps: int, observe_every: int = 0, guard=None
     ) -> tuple[SimResult, float]:
         """``run`` twice (same shapes — the first call pays the compile)
         and report steps/sec of the second; returns its SimResult."""
-        warm = self.run(nsteps, observe_every)
+        warm = self.run(nsteps, observe_every, guard=guard)
         jax.block_until_ready(warm.state)
         t0 = time.perf_counter()
-        res = self.run(nsteps, observe_every)
+        res = self.run(nsteps, observe_every, guard=guard)
         jax.block_until_ready(res.state)
         dt_wall = time.perf_counter() - t0
         return res, nsteps / dt_wall

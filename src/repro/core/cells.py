@@ -364,6 +364,47 @@ def from_cell_major(binning: CellBinning, table_vals: Array) -> Array:
     return flat[slot_of]
 
 
+def _shifted_zero(grid: Array, off: int, axis: int) -> Array:
+    """Shift ``grid`` so out[i] = grid[i + off] along ``axis``, zero-filled."""
+    if off == 0:
+        return grid
+    sl = [slice(None)] * grid.ndim
+    pad = [(0, 0)] * grid.ndim
+    if off > 0:
+        sl[axis] = slice(off, None)
+        pad[axis] = (0, off)
+    else:
+        sl[axis] = slice(None, off)
+        pad[axis] = (-off, 0)
+    return jnp.pad(grid[tuple(sl)], pad)
+
+
+def max_neighborhood_occupancy(domain: Domain, counts: Array) -> Array:
+    """Max over cells of the total 3^dim-neighborhood occupancy (traceable).
+
+    This is the EXACT per-particle candidate-demand bound of the merged-
+    window search (and an upper bound on any particle's true neighbor
+    count): a particle in cell c can only see candidates in c's 3^dim
+    neighborhood. The health guard's regrow escalation sizes ``window``
+    and ``max_neighbors`` from this observed demand instead of blind
+    doubling — one regrow recovers any truncation the current
+    configuration can exhibit.
+    """
+    grid = counts.reshape(domain.ncells)
+    total = jnp.zeros_like(grid)
+    for off in neighbor_cell_offsets(domain.dim):
+        g = grid
+        for a, o in enumerate(off):
+            if o == 0:
+                continue
+            if domain.periodic[a]:
+                g = jnp.roll(g, -int(o), axis=a)
+            else:
+                g = _shifted_zero(g, int(o), axis=a)
+        total = total + g
+    return jnp.max(total)
+
+
 def default_capacity(domain: Domain, n_particles: int, safety: float = 3.0) -> int:
     """Static per-cell capacity estimate: mean occupancy x safety, >= 4.
 

@@ -1,0 +1,319 @@
+"""In-scan simulation health word + fault injection hooks.
+
+Every failure mode this repo has hit so far was discovered by a human
+staring at NaNs: the dam-break capacity blowup (PR 4), the fp16
+subnormal mass flush (PR 3), the v0-driven water-hammer CFL blowup
+(PR 5), silent window truncation. This module makes detection a
+first-class, in-scan operation:
+
+  * a small bitmask of health CHECKS (non-finite x/v/rho, density
+    deviation beyond the weak-compressibility bound, vmax*dt/h CFL
+    violation, neighbor-window truncation, cell-capacity overflow);
+  * :func:`check_carry` — ONE fused reduction over the persistent carry
+    producing a :class:`HealthWord` (the bitmask plus the offending-field
+    stats), evaluated inside the jitted guarded block with zero host
+    sync (the same pattern as the in-scan ``Observables``);
+  * :class:`FaultSpec` + :func:`inject_fault` — the deterministic fault
+    hook the recovery tests and CI drive (``SPHConfig.fault``);
+  * :class:`SimulationDiverged` — the structured failure raised when a
+    recovery policy is exhausted, carrying step / tripped checks /
+    stats instead of a NaN-filled array.
+
+The escalation machinery that CONSUMES the health word (rollback, dt
+backoff, capacity regrow, precision degrade) lives in
+``core/recovery.py``; this module deliberately imports nothing from the
+solver so both the solver and the recovery driver can depend on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+# --------------------------------------------------------------------------
+# Check bits
+# --------------------------------------------------------------------------
+NAN_X = 1 << 0  # non-finite relative coordinates (position representation)
+NAN_V = 1 << 1  # non-finite velocity component
+NAN_RHO = 1 << 2  # non-finite density
+RHO_DEV = 1 << 3  # |rho/rho0 - 1| beyond the weak-compressibility bound
+CFL = 1 << 4  # vmax * dt / h beyond the advective CFL bound
+WINDOW_TRUNC = 1 << 5  # neighbor list truncated (window or K budget)
+CELL_OVERFLOW = 1 << 6  # cell table dropped particles (capacity)
+
+ALL_CHECKS = (
+    NAN_X | NAN_V | NAN_RHO | RHO_DEV | CFL | WINDOW_TRUNC | CELL_OVERFLOW
+)
+#: The bits that dt backoff can plausibly cure (numeric blowups).
+NUMERIC_CHECKS = NAN_X | NAN_V | NAN_RHO | RHO_DEV | CFL
+#: The bits cured by regrowing static capacities (recompile).
+CAPACITY_CHECKS = WINDOW_TRUNC | CELL_OVERFLOW
+
+CHECK_NAMES = (
+    (NAN_X, "nan_x"),
+    (NAN_V, "nan_v"),
+    (NAN_RHO, "nan_rho"),
+    (RHO_DEV, "rho_dev"),
+    (CFL, "cfl"),
+    (WINDOW_TRUNC, "window_trunc"),
+    (CELL_OVERFLOW, "cell_overflow"),
+)
+
+# Default thresholds. The WCSPH design point is |drho/rho0| ~ (v/c0)^2
+# (~1% at Ma 0.1), so a 25% deviation is unambiguously divergence, not
+# compression. A healthy acoustic-CFL run sits at vmax*dt/h ~ 0.025
+# (dt = 0.25 h/c0, vmax ~ 0.1 c0); 0.5 means velocities have blown up
+# by >~20x past the speed the dt was sized for.
+DEFAULT_RHO_DEV_LIMIT = 0.25
+DEFAULT_CFL_LIMIT = 0.5
+
+
+def check_names(word: int) -> tuple[str, ...]:
+    """Human-readable names of the set bits of a (host) health word."""
+    return tuple(name for bit, name in CHECK_NAMES if word & bit)
+
+
+class SimulationDiverged(RuntimeError):
+    """A guarded run exhausted its recovery policy (or strict mode hit).
+
+    Carries the structured context a NaN-filled array never could:
+
+      step:   last healthy step count (the rollback point).
+      checks: names of the tripped health checks.
+      word:   the raw bitmask.
+      stats:  dict of offending-field stats (vmax, rho_dev, cfl,
+              non-finite counts) at detection time.
+      events: the recovery actions attempted before giving up.
+    """
+
+    def __init__(self, message: str, *, step: int | None = None,
+                 checks: tuple[str, ...] = (), word: int = 0,
+                 stats: dict | None = None, events: list | None = None):
+        super().__init__(message)
+        self.step = step
+        self.checks = tuple(checks)
+        self.word = int(word)
+        self.stats = dict(stats or {})
+        self.events = list(events or [])
+
+
+class HealthWord(NamedTuple):
+    """The in-scan health reduction: bitmask + offending-field stats.
+
+    All fields are device scalars; nothing syncs until the driver reads
+    the word at a block boundary. Stats are computed with non-finite
+    values masked out so they stay meaningful under NaN poisoning (the
+    non-finite COUNTS carry that signal separately).
+    """
+
+    word: Array  # () uint32 tripped-check bitmask
+    vmax: Array  # () fp32 max fluid |v| (finite entries only)
+    rho_dev: Array  # () fp32 max fluid |rho/rho0 - 1| (finite only)
+    cfl: Array  # () fp32 vmax * dt / h
+    bad_x: Array  # () int32 particles with non-finite coordinates
+    bad_v: Array  # () int32 particles with non-finite velocity
+    bad_rho: Array  # () int32 particles with non-finite density
+    max_count: Array  # () int32 max neighbor count seen (may be K+1 sentinel)
+    max_cell: Array  # () int32 max cell occupancy at last rebuild
+
+    def host_stats(self) -> dict:
+        """The stats as a plain host dict (for logs / SimulationDiverged)."""
+        return {
+            "vmax": float(self.vmax),
+            "rho_dev": float(self.rho_dev),
+            "cfl": float(self.cfl),
+            "bad_x": int(self.bad_x),
+            "bad_v": int(self.bad_v),
+            "bad_rho": int(self.bad_rho),
+            "max_count": int(self.max_count),
+            "max_cell": int(self.max_cell),
+        }
+
+
+def _bit(cond: Array, bit: int) -> Array:
+    return jnp.where(cond, jnp.uint32(bit), jnp.uint32(0))
+
+
+def fold_flag(flags: Array | None, cond: Array, bit: int) -> Array | None:
+    """OR ``bit`` into an accumulated uint32 flag word where ``cond``."""
+    if flags is None:
+        return None
+    return flags | _bit(cond, bit)
+
+
+def check_carry(
+    cfg,
+    carry,
+    *,
+    rho_dev_limit: float = DEFAULT_RHO_DEV_LIMIT,
+    cfl_limit: float = DEFAULT_CFL_LIMIT,
+    enabled: int = ALL_CHECKS,
+) -> HealthWord:
+    """One fused health reduction over a persistent carry (traceable).
+
+    Numeric checks read the packed state directly; the overflow checks
+    fold the carry's accumulated per-block ``flags`` (set at rebuild
+    time, so an overflow in ANY intermediate rebuild of the block is
+    seen) with the live neighbor-list/binning sentinels. ``enabled``
+    masks the final word, so disabled checks can never trip.
+
+    ``cfg``/``carry`` are duck-typed (SPHConfig / PersistentCarry): this
+    module must not import the solver.
+    """
+    st = carry.st
+    fl = st.fluid
+    fluid = ~st.fixed
+
+    x_fin = jnp.all(jnp.isfinite(st.rc.rel), axis=-1)
+    v_fin = jnp.all(jnp.isfinite(fl.v), axis=-1)
+    rho_fin = jnp.isfinite(fl.rho)
+    bad_x = jnp.sum(~x_fin).astype(jnp.int32)
+    bad_v = jnp.sum(~v_fin).astype(jnp.int32)
+    bad_rho = jnp.sum(~rho_fin).astype(jnp.int32)
+
+    v2 = jnp.sum(fl.v.astype(jnp.float32) ** 2, axis=-1)
+    vmax = jnp.sqrt(jnp.max(jnp.where(fluid & v_fin, v2, 0.0)))
+    rho0 = cfg.resolved_scheme.rho0
+    dev = jnp.abs(fl.rho.astype(jnp.float32) / rho0 - 1.0)
+    rho_dev = jnp.max(jnp.where(fluid & rho_fin, dev, 0.0))
+    cfl = vmax * (cfg.dt / cfg.h)
+
+    nl = carry.nl
+    k = nl.mask.shape[1]
+    win_bad = jnp.any(nl.count > k)
+    trunc = getattr(nl, "trunc", None)
+    if trunc is not None:
+        win_bad = win_bad | trunc
+    max_count = jnp.max(nl.count).astype(jnp.int32)
+    if carry.binning is not None:
+        cell_bad = carry.binning.overflow > 0
+        max_cell = jnp.max(carry.binning.counts).astype(jnp.int32)
+    else:
+        cell_bad = jnp.zeros((), bool)
+        max_cell = jnp.zeros((), jnp.int32)
+
+    word = (
+        _bit(bad_x > 0, NAN_X)
+        | _bit(bad_v > 0, NAN_V)
+        | _bit(bad_rho > 0, NAN_RHO)
+        | _bit(rho_dev > rho_dev_limit, RHO_DEV)
+        | _bit(cfl > cfl_limit, CFL)
+        | _bit(win_bad, WINDOW_TRUNC)
+        | _bit(cell_bad, CELL_OVERFLOW)
+    )
+    if carry.flags is not None:
+        word = word | carry.flags
+    word = word & jnp.uint32(enabled)
+    return HealthWord(
+        word=word, vmax=vmax, rho_dev=rho_dev, cfl=cfl,
+        bad_x=bad_x, bad_v=bad_v, bad_rho=bad_rho,
+        max_count=max_count, max_cell=max_cell,
+    )
+
+
+def observe_state(cfg, st):
+    """One observable row from a state (any particle ordering).
+
+    The in-scan diagnostics row (t, ekin, vmax, rho_err) over fluid
+    particles only — shared by the API's ``Observables`` scan and the
+    guarded-block driver. Lives here (not api.py) so the recovery layer
+    can sample it without a circular import.
+    """
+    fl = st.fluid
+    fluid = ~st.fixed
+    w = fluid.astype(jnp.float32)
+    v2 = jnp.sum(fl.v * fl.v, axis=-1)
+    rho0 = cfg.resolved_scheme.rho0
+    return (
+        st.t,
+        0.5 * jnp.sum(w * fl.m * v2),
+        jnp.sqrt(jnp.max(jnp.where(fluid, v2, 0.0))),
+        jnp.max(jnp.where(fluid, jnp.abs(fl.rho / rho0 - 1.0), 0.0)),
+    )
+
+
+# --------------------------------------------------------------------------
+# Deterministic fault injection (the recovery-path test harness)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """A deterministic in-scan fault, armed via ``SPHConfig.fault``.
+
+    Hashable (SPHConfig is a static jit argument). The fault fires when
+    the carry's step counter equals ``step`` — and fires AGAIN on every
+    rolled-back retry that replays that step, modeling a persistent
+    fault; the recovery driver's ``disarm_faults`` policy models the
+    transient kind by stripping the spec from the config after the
+    first trip.
+
+    kinds:
+      "nan_v":    poison one velocity component of packed particle
+                  ``particle`` with NaN (spreads through the pair sums).
+      "teleport": move packed particle ``particle`` next to packed
+                  particle ``target`` and give it the large apparent
+                  velocity of the jump (``vkick``) — the corrupted-
+                  position event. The kick matters: continuity-form
+                  WCSPH density only changes through RELATIVE motion
+                  (dρ ∝ dv·∇W), so a matched-velocity overlap is
+                  dynamically inert; the kick detonates the density at
+                  close range exactly like a real position/velocity
+                  inconsistency.
+    """
+
+    kind: str
+    step: int
+    particle: int = 0
+    target: int = 1
+    vkick: float = 8.0
+
+    def __post_init__(self):
+        if self.kind not in ("nan_v", "teleport"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+def inject_fault(fault: FaultSpec, carry):
+    """Apply ``fault`` to the carry when its step counter matches.
+
+    Traceable; indices are in PACKED order (which packed particle a
+    given index lands on is deterministic for a fixed trajectory, and a
+    rollback restores the same packing — so retries replay the same
+    fault, which is the property the escalation tests rely on).
+    """
+    trip = carry.steps == fault.step
+    st = carry.st
+    p = fault.particle
+    if fault.kind == "nan_v":
+        fl = st.fluid
+        bad = jnp.where(trip, jnp.asarray(jnp.nan, fl.v.dtype), fl.v[p, 0])
+        v = fl.v.at[p, 0].set(bad)
+        return carry._replace(st=st._replace(fluid=fl._replace(v=v)))
+    # teleport: adopt target's cell + relative coords plus an offset
+    # that lands in the STEEP region of the kernel gradient (~0.25 h for
+    # typical cell factors — a tiny offset would park the pair at the
+    # B-spline gradient's r->0 zero where overlapping particles feel
+    # nothing), and spike the particle's accumulated displacement so the
+    # Verlet criterion forces a rebuild — the overlap must enter the
+    # neighbor list to detonate.
+    rc = st.rc
+    q = fault.target
+    off = jnp.asarray(0.2, rc.rel.dtype)
+    rel = rc.rel.at[p].set(jnp.where(trip, rc.rel[q] + off, rc.rel[p]))
+    cxy = rc.cell_xy.at[p].set(
+        jnp.where(trip, rc.cell_xy[q], rc.cell_xy[p])
+    )
+    disp = carry.disp_acc.at[p].set(
+        jnp.where(trip, 1.0, carry.disp_acc[p])
+    )
+    fl = st.fluid
+    v = fl.v.at[p, 0].set(
+        jnp.where(trip, jnp.asarray(fault.vkick, fl.v.dtype), fl.v[p, 0])
+    )
+    return carry._replace(
+        st=st._replace(
+            rc=rc._replace(rel=rel, cell_xy=cxy), fluid=fl._replace(v=v)
+        ),
+        disp_acc=disp,
+    )

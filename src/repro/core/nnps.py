@@ -52,11 +52,19 @@ class NeighborList(NamedTuple):
     idx:   (N, K) int32 neighbor particle ids (garbage where ~mask).
     mask:  (N, K) bool valid-slot flags.
     count: (N,)   int32 true neighbor count (may exceed K -> overflow).
+    trunc: () bool, window searches only: some particle's merged
+           candidate total exceeded the window budget (its true count is
+           then UNKNOWN — the ``k + 1`` sentinel folds it into
+           ``overflowed``, but this bit lets the health guard tell
+           "window too small" apart from "more true neighbors than K"
+           and escalate the right knob). None for searches without a
+           window budget.
     """
 
     idx: Array
     mask: Array
     count: Array
+    trunc: Array | None = None
 
     @property
     def overflowed(self) -> Array:
@@ -572,7 +580,7 @@ def rcll_neighbors_windows(
             key = jnp.pad(key, ((0, 0), (0, k - window)),
                           constant_values=n)
         idx = key[:, :k]
-        return idx, idx < n, count
+        return idx, idx < n, count, tot > window
 
     chunk = chunk if chunk > 0 else SEARCH_CHUNK
     row_args = (begin, bounds, total, rel_lo, cy, rows_all)
@@ -580,8 +588,8 @@ def rcll_neighbors_windows(
     csize = -(-n // nchunk)
     nchunk = -(-n // csize)
     if nchunk == 1:
-        idx, mask, count = body(row_args)
-        return NeighborList(idx, mask, count)
+        idx, mask, count, trow = body(row_args)
+        return NeighborList(idx, mask, count, trunc=jnp.any(trow))
     pad = nchunk * csize - n
 
     def padded(x, fill):
@@ -596,12 +604,13 @@ def rcll_neighbors_windows(
         padded(x, f).reshape((nchunk, csize) + x.shape[1:])
         for x, f in zip(row_args, fills)
     )
-    idx, mask, count = jax.lax.map(body, chunked)
+    idx, mask, count, trow = jax.lax.map(body, chunked)
 
     def unpad(x):
         return x.reshape((nchunk * csize,) + x.shape[2:])[:n]
 
-    return NeighborList(unpad(idx), unpad(mask), unpad(count))
+    return NeighborList(unpad(idx), unpad(mask), unpad(count),
+                        trunc=jnp.any(unpad(trow)))
 
 
 def refilter(nl: NeighborList, d2: Array, r2: Array | float) -> NeighborList:

@@ -106,6 +106,14 @@ class PrecisionPolicy:
         """True when the fused force pass uses the 16-bit record layout."""
         return jnp.dtype(self.records_dtype).itemsize == 2
 
+    def with_records(self, records: str) -> "PrecisionPolicy":
+        """This policy with the record storage dtype replaced — the
+        runtime precision-degrade step of the health guard (fp16 ->
+        fp32 when the grid outgrows the half-record cell-anchor range
+        or the rel-coordinate quantization bound trips)."""
+        dtype_of(records)  # validate eagerly
+        return dataclasses.replace(self, records=records)
+
 
 # The paper's three experiment configurations (Table 4), adapted per
 # DESIGN.md section 7 (fp64 -> fp32 as the TPU high tier; the CPU accuracy

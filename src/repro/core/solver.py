@@ -62,7 +62,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import cells as cells_lib
-from repro.core import fused, nnps, rcll, sph, statepack
+from repro.core import fused, health, nnps, rcll, sph, statepack
 from repro.core import scheme as scheme_lib
 from repro.core.domain import Domain
 from repro.core.precision import PrecisionPolicy
@@ -109,12 +109,19 @@ class SPHConfig:
     # selects the dense-table candidate search (``nnps.rcll_neighbors``
     # over the (C, cap) table) as the oracle path. Static.
     window: int | None = 0
-    # Raise (via jax.debug.callback -> XlaRuntimeError) from simulate /
-    # simulate_stats when any cell-table or neighbor-list capacity
-    # overflowed during the run. Off by default: the check is a host
-    # callback, i.e. a device sync point. See README for the
-    # ``max_neighbors`` sizing rule.
+    # DEPRECATED alias for the strict guard policy: raise
+    # (health.SimulationDiverged) from simulate / simulate_stats when
+    # any cell-table or neighbor-list capacity overflowed during the
+    # run. The check is ONE host read of the overflow flag after the
+    # scan returns — the in-scan jax.debug.callback sync point it used
+    # to cost is gone. New code should run under the health guard
+    # (core/recovery.py), which detects AND recovers. See README for
+    # the ``max_neighbors`` sizing rule.
     check_overflow: bool = False
+    # Deterministic fault-injection hook (health.FaultSpec) driven by
+    # the recovery tests and the CI guard smoke: None in production.
+    # Fires inside step_persistent when the step counter matches.
+    fault: health.FaultSpec | None = None
 
     @property
     def h(self) -> float:
@@ -252,6 +259,13 @@ class PersistentCarry(NamedTuple):
     # refresh then touches exactly the coordinate/velocity/density
     # halves of the record stream.
     m_table: Array | None = None
+    # () uint32 accumulated health bits (health.CELL_OVERFLOW /
+    # WINDOW_TRUNC) ORed in at every rebuild — unlike the live binning
+    # and list sentinels, this sees overflow in ANY intermediate
+    # rebuild. The guarded-block driver clears it at block entry to get
+    # per-block semantics; ``overflow`` above stays the run-sticky bool
+    # every existing consumer reads.
+    flags: Array | None = None
 
 
 class SimStats(NamedTuple):
@@ -424,7 +438,9 @@ def _rebuild(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
     )
     perm = ps.packing.order  # current-packed -> new-packed
     st, order = _permute_state_fused(carry.st, perm, ps.rc, carry.order)
-    overflow = carry.overflow | (ps.packing.binning.overflow > 0)
+    cell_over = ps.packing.binning.overflow > 0
+    overflow = carry.overflow | cell_over
+    flags = health.fold_flag(carry.flags, cell_over, health.CELL_OVERFLOW)
     binning = ps.packing.binning
     m_table = carry.m_table
     if cfg.resolved_backend == "pallas":
@@ -438,6 +454,10 @@ def _rebuild(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
     else:
         nl = _packed_neighbor_list(cfg, ps)
         overflow = overflow | nl.overflowed
+        win_bad = nl.overflowed
+        if nl.trunc is not None:
+            win_bad = win_bad | nl.trunc
+        flags = health.fold_flag(flags, win_bad, health.WINDOW_TRUNC)
         # The window search already pads invalid slots with the dummy
         # id N — the fused sweep reads nl.idx directly (idx_dummy stays
         # None: carrying nl.idx twice would alias two donated buffers).
@@ -459,6 +479,7 @@ def _rebuild(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
         idx_dummy=idx_dummy,
         m_scale=carry.m_scale,
         m_table=m_table,
+        flags=flags,
     )
 
 
@@ -486,6 +507,7 @@ def init_persistent(cfg: SPHConfig, state: SPHState) -> PersistentCarry:
         steps=jnp.zeros((), jnp.int32),
         overflow=jnp.zeros((), bool),
         m_scale=m_scale,
+        flags=jnp.zeros((), jnp.uint32),
     )
     carry = _rebuild(cfg, carry)
     # _rebuild hands the SAME array to st.rc.cell_xy and binning.cell_xy
@@ -689,6 +711,7 @@ def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
         idx_dummy=carry.idx_dummy,
         m_scale=carry.m_scale,
         m_table=carry.m_table,
+        flags=carry.flags,
     )
 
 
@@ -722,6 +745,11 @@ def exact_neighbor_list(
 
 def step_persistent(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
     """Rebuild-if-needed (lax.cond) + one physics step."""
+    if cfg.fault is not None:
+        # Injection precedes the rebuild decision so a teleported
+        # particle's spiked displacement can trigger the Verlet rebuild
+        # in the SAME step (the overlap must reach the neighbor list).
+        carry = health.inject_fault(cfg.fault, carry)
     carry = jax.lax.cond(
         _needs_rebuild(cfg, carry),
         lambda c: _rebuild(cfg, c),
@@ -768,13 +796,21 @@ def run_persistent(
 
 
 def _raise_on_overflow(overflow, max_neighbors: int) -> None:
+    """Strict-mode overflow raise (the deprecated check_overflow alias).
+
+    Runs HOST-side after the jitted scan returns — the jax.debug.callback
+    this used to ride (an in-scan device sync point) is retired; the
+    health guard (core/recovery.py) is the recovering superset.
+    """
     if overflow:
-        raise RuntimeError(
+        raise health.SimulationDiverged(
             "neighbor capacity overflow: some particle saw more "
             f"candidates than max_neighbors={max_neighbors} (or a cell "
             "table row filled). Results silently dropped pairs - raise "
             "max_neighbors (see the sizing rule in README) or enlarge "
-            "capacity."
+            "capacity.",
+            checks=("window_trunc", "cell_overflow"),
+            word=health.CAPACITY_CHECKS,
         )
 
 
@@ -861,14 +897,9 @@ def step(cfg: SPHConfig, state: SPHState) -> SPHState:
 
 
 @partial(jax.jit, static_argnums=(0, 2))
-def simulate_stats(
+def _simulate_stats_jit(
     cfg: SPHConfig, state: SPHState, nsteps: int
 ) -> tuple[SPHState, SimStats]:
-    """Run ``nsteps`` steps; also report rebuild/overflow diagnostics.
-
-    With ``cfg.check_overflow`` the run fails loudly (XlaRuntimeError
-    from a host callback) instead of carrying the overflow flag silently.
-    """
     if cfg.algo == "rcll":
         carry = init_persistent(cfg, state)
         carry = _scan_steps(cfg, carry, nsteps)
@@ -876,10 +907,6 @@ def simulate_stats(
             rebuilds=carry.rebuilds, steps=carry.steps,
             overflow=carry.overflow,
         )
-        if cfg.check_overflow:
-            jax.debug.callback(
-                _raise_on_overflow, stats.overflow, cfg.max_neighbors
-            )
         return finalize_persistent(cfg, carry), stats
 
     def body(s, _):
@@ -894,7 +921,22 @@ def simulate_stats(
     return out, stats
 
 
-@partial(jax.jit, static_argnums=(0, 2))
+def simulate_stats(
+    cfg: SPHConfig, state: SPHState, nsteps: int
+) -> tuple[SPHState, SimStats]:
+    """Run ``nsteps`` steps; also report rebuild/overflow diagnostics.
+
+    With ``cfg.check_overflow`` (the deprecated strict-guard alias) the
+    run raises :class:`health.SimulationDiverged` on any capacity
+    overflow — via one host read of the overflow flag AFTER the scan
+    returns, not the in-scan callback sync point this used to cost.
+    """
+    out, stats = _simulate_stats_jit(cfg, state, nsteps)
+    if cfg.check_overflow and bool(stats.overflow):
+        _raise_on_overflow(True, cfg.max_neighbors)
+    return out, stats
+
+
 def simulate(cfg: SPHConfig, state: SPHState, nsteps: int) -> SPHState:
     """Run ``nsteps`` steps under lax.scan (single fused XLA program)."""
     return simulate_stats(cfg, state, nsteps)[0]

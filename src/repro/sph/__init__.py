@@ -24,4 +24,10 @@ from repro.core.cases import (  # noqa: F401
     register_case,
     resolve_ds,
 )
+from repro.core.health import FaultSpec, SimulationDiverged  # noqa: F401
+from repro.core.recovery import (  # noqa: F401
+    GuardPolicy,
+    GuardReport,
+    run_guarded,
+)
 from repro.core.scheme import Scheme, wcsph  # noqa: F401

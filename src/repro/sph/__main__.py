@@ -5,6 +5,8 @@
                                    [--ds DS | --n N_TARGET]
                                    [--backend reference|xla|pallas]
                                    [--records fp32|fp16|bf16]
+                                   [--guard] [--guard-block B]
+                                   [--inject nan|teleport|cap|window|dt]
                                    [--set field=value ...]
 
 ``run`` builds the registered case, advances it under the production
@@ -12,17 +14,26 @@ persistent pipeline with in-scan observables, prints the observable
 table, the final diagnostics, measured steps/sec, and the case's
 analytic validation metrics where it defines them (e.g. the
 Taylor–Green KE decay rate).
+
+``--guard`` runs under the self-healing health guard (core/recovery.py):
+in-scan divergence detection, checkpoint rollback, dt backoff, capacity
+regrow, precision degrade. ``--inject`` arms one of the named faults
+(and implies ``--guard``) — the CI smoke uses this to prove every case
+recovers unattended. A guarded run that exhausts its policy exits 1
+with the structured divergence report.
 """
 from __future__ import annotations
 
 import argparse
 import ast
 import dataclasses
+import logging
 import sys
 
 import numpy as np
 
 from repro.core import cases as cases_lib
+from repro.core import recovery
 from repro.core.api import Simulation
 from repro.core.precision import PrecisionPolicy
 
@@ -65,15 +76,38 @@ def cmd_run(args) -> int:
     case, cfg = sim.case, sim.cfg
     nsteps = args.nsteps or getattr(case, "default_nsteps", 400)
     every = args.observe_every or max(1, nsteps // 20)
+
+    guard = args.guard or args.inject is not None
+    policy = None
+    if guard:
+        logging.basicConfig(level=logging.WARNING)
+        policy = recovery.GuardPolicy(
+            block=args.guard_block or recovery.GuardPolicy.block
+        )
+        if args.inject is not None:
+            sim.cfg = cfg = recovery.apply_named_fault(
+                cfg, args.inject, nsteps, sim.n_particles
+            )
     print(f"# {args.case}: N={sim.n_particles} ds={case.ds:.4g} "
           f"dt={cfg.dt:.3e} backend={cfg.resolved_backend} "
           f"records={cfg.policy.records} nsteps={nsteps} "
-          f"observe_every={every}")
+          f"observe_every={every}"
+          + (f" guard=on inject={args.inject or '-'}" if guard else ""))
 
-    if args.time:
-        res, sps = sim.run_timed(nsteps, observe_every=every)
-    else:
-        res, sps = sim.run(nsteps, observe_every=every), None
+    try:
+        if args.time:
+            res, sps = sim.run_timed(nsteps, observe_every=every,
+                                     guard=policy)
+        else:
+            res, sps = sim.run(nsteps, observe_every=every,
+                               guard=policy), None
+    except recovery.SimulationDiverged as e:
+        print(f"# DIVERGED at step {e.step}: checks={e.checks} "
+              f"stats={e.stats}", file=sys.stderr)
+        for ev in e.events:
+            print(f"#   tried {ev.action} at step {ev.step}: {ev.detail}",
+                  file=sys.stderr)
+        return 1
 
     obs = res.observables
     t = np.asarray(obs.t)
@@ -88,6 +122,15 @@ def cmd_run(args) -> int:
     print(f"# steps={int(stats.steps)} rebuilds={int(stats.rebuilds)} "
           f"overflow={bool(stats.overflow)}"
           + (f" steps/sec={sps:.1f}" if sps is not None else ""))
+    if res.report is not None and res.report.recovered:
+        rep = res.report
+        print(f"# guard recovered: retries={rep.retries} "
+              f"dt_halvings={rep.dt_halvings} regrows={rep.regrows} "
+              f"records_degraded={rep.records_degraded} "
+              f"final dt={rep.cfg.dt:.3e}")
+        for ev in rep.events:
+            print(f"#   step {ev.step}: {ev.checks} -> {ev.action} "
+                  f"({ev.detail})")
     bad = (
         np.isnan(ekin).any() or np.isnan(vmax).any()
         or not np.isfinite(ekin[-1])
@@ -134,6 +177,13 @@ def main(argv=None) -> int:
                     choices=["fp32", "fp16", "bf16"])
     rp.add_argument("--time", action="store_true",
                     help="run twice and report steps/sec (compile excluded)")
+    rp.add_argument("--guard", action="store_true",
+                    help="run under the self-healing health guard")
+    rp.add_argument("--guard-block", type=int, default=None,
+                    help="steps per guarded block (default: policy's 32)")
+    rp.add_argument("--inject", default=None,
+                    choices=["nan", "teleport", "cap", "window", "dt"],
+                    help="arm a named fault (implies --guard)")
     rp.add_argument("--set", action="append", metavar="FIELD=VALUE",
                     help="override any case dataclass field")
     rp.set_defaults(fn=cmd_run)

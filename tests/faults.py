@@ -1,0 +1,75 @@
+"""Shared fault-injection fixtures for the health-guard test suite.
+
+Importable as ``import faults`` (pytest inserts tests/ into sys.path,
+same as ``_hypo.py``). Builders return SMALL CPU-friendly (cfg, state)
+pairs whose CLEAN runs are healthy under the default guard thresholds —
+each test then corrupts exactly one thing (an armed FaultSpec, an
+undersized capacity, an overscale dt) so the recovery path under test
+is the only one that fires.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.core import cases as cases_lib
+from repro.core import solver
+from repro.core.domain import Domain
+
+
+def lattice(cfg_kw=None, *, ds=0.05, h=0.1, seed=0, vel=0.05):
+    """Periodic unit-box lattice with small random velocities.
+
+    ~400 particles; ``max_neighbors`` is sized to the true demand so the
+    clean guarded run takes no recovery action (the property the
+    bit-match tests lean on).
+    """
+    dom = Domain(lo=(0.0, 0.0), hi=(1.0, 1.0), h=h, periodic=(True, True))
+    xs = np.arange(ds / 2, 1.0, ds)
+    x = np.array(list(itertools.product(xs, xs)))
+    n = len(x)
+    rng = np.random.default_rng(seed)
+    v = vel * rng.standard_normal((n, 2)).astype(np.float32)
+    m = np.full(n, ds * ds, np.float32)
+    rho = np.ones(n, np.float32)
+    cfg = solver.SPHConfig(
+        domain=dom, ds=ds, dt=1e-3, algo="rcll", max_neighbors=64,
+        **(cfg_kw or {}),
+    )
+    return cfg, solver.init_state(cfg, x, v, m, rho)
+
+
+def dam_break(**case_kw):
+    """Coarse dam break (~300 particles incl. walls): the free-surface
+    case every capacity/CFL incident in this repo's history hit."""
+    case = cases_lib.DamBreakCase(ds=0.1, **case_kw)
+    return case.build()
+
+
+def thin_grid(ncells_x=2200, ds=0.05, h=0.1):
+    """A long thin aperiodic domain whose x axis exceeds the fp16
+    half-record cell-anchor limit (2^11 cells) with only a handful of
+    particles — drives the records fp16 -> fp32 degrade path. Cells are
+    sized by the support radius 2h, hence the factor below."""
+    hi_x = ncells_x * 2 * h
+    dom = Domain(
+        lo=(0.0, 0.0), hi=(hi_x, 3 * h), h=h, periodic=(False, False)
+    )
+    xs = np.arange(ds / 2, 10 * h, ds)
+    ys = np.arange(ds / 2, 3 * h, ds)
+    x = np.array(list(itertools.product(xs, ys)))
+    n = len(x)
+    cfg = solver.SPHConfig(
+        domain=dom, ds=ds, dt=1e-4, algo="rcll", max_neighbors=64,
+    )
+    rho = np.ones(n, np.float32)
+    m = np.full(n, ds * ds, np.float32)
+    return cfg, solver.init_state(cfg, x, np.zeros((n, 2)), m, rho)
+
+
+def with_fault(cfg, **fault_kw):
+    from repro.core import health
+
+    return dataclasses.replace(cfg, fault=health.FaultSpec(**fault_kw))

@@ -1,0 +1,295 @@
+"""Health guard: in-scan detection, rollback recovery, escalation.
+
+Each test drives exactly one recovery path of ``core/recovery.py``
+through the deterministic fault harness (``tests/faults.py``):
+
+  * detection unit tests on :func:`health.check_carry` bits;
+  * disarm:   injected NaN -> rollback -> clean replay, bit-matching
+              the never-faulted trajectory;
+  * regrow:   undersized cell capacity / search window -> demand-sized
+              regrow, bit-matching a fresh run under the regrown config
+              (capacity regrow bit-matches the ORIGINAL config too, as
+              the cell table never enters the window-search trajectory);
+  * backoff:  overscale dt on the dam break (the PR 5 water-hammer
+              incident) -> bounded dt halving;
+  * degrade:  >2^11-cells/axis grid -> records fp16 -> fp32 at init;
+  * exhaust:  persistent fault + exhausted policy -> structured
+              SimulationDiverged with the right step/checks.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import faults
+from repro.core import health, recovery, solver
+from repro.core.api import Simulation
+
+
+def _fluid_finite(state) -> bool:
+    fl = ~np.asarray(state.fixed)
+    return bool(
+        np.isfinite(np.asarray(state.fluid.v)[fl]).all()
+        and np.isfinite(np.asarray(state.fluid.rho)[fl]).all()
+    )
+
+
+def _bitmatch(a, b) -> bool:
+    return bool(
+        jnp.array_equal(a.fluid.v, b.fluid.v)
+        and jnp.array_equal(a.fluid.rho, b.fluid.rho)
+        and jnp.array_equal(a.rc.rel, b.rc.rel)
+    )
+
+
+# --------------------------------------------------------------------------
+# detection: the health word
+# --------------------------------------------------------------------------
+class TestCheckCarry:
+    def test_clean_carry_is_healthy(self):
+        cfg, st = faults.lattice()
+        carry = solver.init_persistent(cfg, st)
+        hw = health.check_carry(cfg, carry)
+        assert int(hw.word) == 0
+        assert int(hw.bad_x) == int(hw.bad_v) == int(hw.bad_rho) == 0
+        assert float(hw.vmax) > 0
+
+    def test_nan_bits_and_masked_stats(self):
+        cfg, st = faults.lattice()
+        carry = solver.init_persistent(cfg, st)
+        fl = carry.st.fluid
+        v = fl.v.at[3, 0].set(jnp.nan)
+        rho = fl.rho.at[5].set(jnp.inf)
+        carry = carry._replace(
+            st=carry.st._replace(fluid=fl._replace(v=v, rho=rho))
+        )
+        hw = health.check_carry(cfg, carry)
+        word = int(hw.word)
+        assert word & health.NAN_V and word & health.NAN_RHO
+        assert int(hw.bad_v) == 1 and int(hw.bad_rho) == 1
+        # stats stay finite under poisoning (non-finite entries masked)
+        assert np.isfinite(float(hw.vmax))
+        assert np.isfinite(float(hw.rho_dev))
+
+    def test_rho_dev_and_cfl_bits(self):
+        cfg, st = faults.lattice()
+        carry = solver.init_persistent(cfg, st)
+        fl = carry.st.fluid
+        carry2 = carry._replace(
+            st=carry.st._replace(fluid=fl._replace(rho=fl.rho * 2.0))
+        )
+        assert int(health.check_carry(cfg, carry2).word) & health.RHO_DEV
+        big_dt = dataclasses.replace(cfg, dt=1e3)
+        assert int(health.check_carry(big_dt, carry).word) & health.CFL
+
+    def test_enabled_mask_suppresses(self):
+        cfg, st = faults.lattice()
+        carry = solver.init_persistent(cfg, st)
+        v = carry.st.fluid.v.at[0, 0].set(jnp.nan)
+        carry = carry._replace(
+            st=carry.st._replace(fluid=carry.st.fluid._replace(v=v))
+        )
+        enabled = health.ALL_CHECKS & ~(
+            health.NAN_V | health.NAN_X | health.NAN_RHO
+        )
+        hw = health.check_carry(cfg, carry, enabled=enabled)
+        assert int(hw.word) == 0  # disabled checks can never trip
+
+    def test_check_names_and_faultspec_validation(self):
+        names = health.check_names(health.NAN_V | health.CELL_OVERFLOW)
+        assert names == ("nan_v", "cell_overflow")
+        with pytest.raises(ValueError, match="unknown fault"):
+            health.FaultSpec("bogus", step=1)
+
+
+# --------------------------------------------------------------------------
+# recovery paths
+# --------------------------------------------------------------------------
+class TestRecovery:
+    def test_clean_guarded_run_matches_unguarded_bitwise(self):
+        """The guard must OBSERVE, never perturb: a healthy guarded run
+        takes no action and reproduces solver.simulate exactly."""
+        cfg, st = faults.lattice()
+        out, stats, rep, _ = recovery.run_guarded(
+            cfg, st, 16, recovery.GuardPolicy(block=8)
+        )
+        assert rep.events == [] and not rep.recovered
+        assert int(stats.steps) == 16
+        assert _bitmatch(out, solver.simulate(cfg, st, 16))
+
+    def test_nan_fault_disarm_bitmatches_unfaulted(self):
+        """Transient NaN: detect -> rollback -> disarm -> replay. The
+        poisoned block is fully discarded, so the recovered trajectory
+        is bit-identical to one that never faulted."""
+        cfg, st = faults.lattice()
+        cfgf = faults.with_fault(cfg, kind="nan_v", step=5)
+        out, _, rep, _ = recovery.run_guarded(
+            cfgf, st, 16, recovery.GuardPolicy(block=8)
+        )
+        assert [e.action for e in rep.events] == ["disarm"]
+        assert any("nan" in c for c in rep.events[0].checks)
+        assert _bitmatch(out, solver.simulate(cfg, st, 16))
+
+    def test_teleport_fault_recovers(self):
+        """Teleport + velocity kick: the viscous lattice damps the
+        transient below the default rho_dev limit within a block, so the
+        test exercises the policy's tunable threshold — tight enough to
+        catch the corruption's ~5x density jump, loose enough that the
+        clean replay (dev ~0.002) stays healthy."""
+        cfg, st = faults.lattice()
+        cfgf = faults.with_fault(
+            cfg, kind="teleport", step=5, particle=0, target=7
+        )
+        policy = recovery.GuardPolicy(block=8, rho_dev_limit=0.005)
+        out, _, rep, _ = recovery.run_guarded(cfgf, st, 16, policy)
+        assert rep.recovered and rep.events[0].action == "disarm"
+        assert "rho_dev" in rep.events[0].checks
+        assert _bitmatch(out, solver.simulate(cfg, st, 16))
+
+    def test_cap_regrow_dam_break_bitmatches_unfaulted(self):
+        """ISSUE acceptance: dam break with an undersized cell capacity
+        completes unattended and bit-matches the adequately-sized run —
+        the cell table never enters the window-search trajectory."""
+        cfg, st = faults.dam_break()
+        bad = dataclasses.replace(cfg, capacity=2)
+        out, stats, rep, _ = recovery.run_guarded(
+            bad, st, 40, recovery.GuardPolicy(block=20)
+        )
+        assert rep.regrows >= 1
+        assert any(
+            "cell_overflow" in e.checks for e in rep.events
+        )
+        assert not bool(stats.overflow)  # recovered, not just flagged
+        assert _bitmatch(out, solver.simulate(cfg, st, 40))
+
+    def test_window_regrow_bitmatches_regrown_config(self):
+        """Undersized search window: demand-sized regrow; the recovered
+        run bit-matches a fresh run under the regrown config (K changes
+        pair-summation padding, so the original-config trajectory is
+        only expected to match numerically, not bitwise)."""
+        cfg, st = faults.lattice()
+        bad = dataclasses.replace(cfg, window=8)
+        out, _, rep, _ = recovery.run_guarded(
+            bad, st, 16, recovery.GuardPolicy(block=8)
+        )
+        assert rep.regrows >= 1
+        assert any("window_trunc" in e.checks for e in rep.events)
+        assert rep.cfg.resolved_window() > 8
+        assert _bitmatch(out, solver.simulate(rep.cfg, st, 16))
+
+    def test_dt_backoff_water_hammer(self):
+        """The PR 5 incident: an 8x-overscale dt NaNs the dam break
+        unguarded (asserted, so this test cannot silently weaken); the
+        guard halves dt until the run completes finite."""
+        cfg, st = faults.dam_break()
+        bad = dataclasses.replace(cfg, dt=cfg.dt * 8)
+        blown = solver.simulate(bad, st, 40)
+        assert not _fluid_finite(blown)  # the fault is real
+        out, _, rep, _ = recovery.run_guarded(
+            bad, st, 40, recovery.GuardPolicy(block=20)
+        )
+        assert rep.dt_halvings >= 1
+        assert rep.cfg.dt < bad.dt
+        assert _fluid_finite(out)
+
+    def test_records_degrade_past_half_anchor_limit(self):
+        """>2^11 cells/axis: the guard degrades records fp16 -> fp32 at
+        init, loudly, where the solver's build-time fallback is silent."""
+        cfg, st = faults.thin_grid()
+        assert solver._resolved_records(cfg) == "fp32"  # silent fallback
+        out, _, rep, _ = recovery.run_guarded(
+            cfg, st, 4, recovery.GuardPolicy(block=4)
+        )
+        assert rep.records_degraded
+        assert rep.cfg.policy.records == "fp32"
+        assert rep.events[0].action == "degrade_records"
+
+    def test_exhaustion_raises_structured(self):
+        """A PERSISTENT fault (disarm disabled) defeats dt backoff; the
+        run must fail with the structured report, not a NaN array."""
+        cfg, st = faults.lattice()
+        cfgf = faults.with_fault(cfg, kind="nan_v", step=5)
+        policy = recovery.GuardPolicy(
+            block=8, disarm_faults=False, max_dt_halvings=2,
+            degrade_records=False,
+        )
+        with pytest.raises(health.SimulationDiverged) as ei:
+            recovery.run_guarded(cfgf, st, 16, policy)
+        e = ei.value
+        assert e.step == 0  # rollback point: last healthy block boundary
+        assert any("nan" in c for c in e.checks)
+        assert len(e.events) == 2  # both halvings were attempted
+        assert all(ev.action == "halve_dt" for ev in e.events)
+        assert e.stats["bad_v"] >= 1
+
+    def test_acceptance_combo_cap_and_dt(self):
+        """ISSUE acceptance: undersized capacity AND overscale dt in one
+        run — the guard regrows AND backs off, unattended."""
+        cfg, st = faults.dam_break()
+        bad = dataclasses.replace(cfg, capacity=2, dt=cfg.dt * 4)
+        out, stats, rep, _ = recovery.run_guarded(
+            bad, st, 40, recovery.GuardPolicy(block=20)
+        )
+        assert rep.regrows >= 1 and rep.dt_halvings >= 1
+        assert _fluid_finite(out)
+        assert int(stats.steps) == 40
+
+    def test_strict_policy_raises_immediately(self):
+        cfg, st = faults.dam_break()
+        bad = dataclasses.replace(cfg, capacity=2)
+        with pytest.raises(health.SimulationDiverged):
+            recovery.run_guarded(
+                bad, st, 20,
+                recovery.GuardPolicy(block=20, strict=True),
+            )
+
+
+# --------------------------------------------------------------------------
+# API + helpers
+# --------------------------------------------------------------------------
+class TestGuardApi:
+    def test_simulation_run_guard_with_observables(self):
+        cfg, st = faults.lattice()
+        cfgf = faults.with_fault(cfg, kind="nan_v", step=5)
+        sim = Simulation(cfg=cfgf, state=st)
+        res = sim.run(16, observe_every=8, guard=True)
+        assert res.report is not None and res.report.recovered
+        assert sim.cfg.fault is None  # escalated config kept for chaining
+        assert res.observables.t.shape == (2,)
+        assert np.isfinite(np.asarray(res.observables.ekin)).all()
+        # observable rows poisoned by the rolled-back block were dropped
+        assert np.all(np.diff(np.asarray(res.observables.t)) > 0)
+
+    def test_guard_requires_rcll(self):
+        cfg, st = faults.lattice()
+        sim = Simulation(cfg=dataclasses.replace(cfg, algo="all"), state=st)
+        with pytest.raises(ValueError, match="rcll"):
+            sim.run(4, guard=True)
+
+    def test_apply_named_fault(self):
+        cfg, _ = faults.lattice()
+        assert recovery.apply_named_fault(cfg, "nan", 30, 100).fault.kind \
+            == "nan_v"
+        assert recovery.apply_named_fault(cfg, "cap", 30, 100).capacity == 2
+        assert recovery.apply_named_fault(cfg, "window", 30, 100).window == 8
+        assert recovery.apply_named_fault(cfg, "dt", 30, 100).dt \
+            == pytest.approx(cfg.dt * 8)
+        with pytest.raises(ValueError, match="unknown fault"):
+            recovery.apply_named_fault(cfg, "gremlin", 30, 100)
+
+    def test_rel_quantization_error_fp16_halves_of_cell_ulp(self):
+        cfg, _ = faults.lattice()
+        q16 = recovery.rel_quantization_error(cfg.domain, jnp.float16)
+        q32 = recovery.rel_quantization_error(cfg.domain, jnp.float32)
+        hc = max(cfg.domain.cell_sizes)
+        assert q16 == pytest.approx(hc * 0.5 * 2.0**-11)
+        assert q32 < q16 / 1000
+
+    def test_check_overflow_alias_still_raises_with_overflow(self):
+        """The deprecated strict alias: same exception contract (message
+        mentions overflow) without the in-scan callback it used to cost."""
+        cfg, st = faults.dam_break()
+        bad = dataclasses.replace(cfg, capacity=2, check_overflow=True)
+        with pytest.raises(Exception, match="overflow"):
+            solver.simulate_stats(bad, st, 4)
