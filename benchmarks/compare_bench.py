@@ -46,6 +46,8 @@ def _case_key(case: dict) -> tuple:
         case.get("records", "fp32"),  # pre-half-record rows were fp32
         case.get("skin_frac_hc"),
         bool(case.get("guarded", False)),  # health_guard A/B rows
+        case.get("batch"),  # ensemble rows: batch size axis
+        case.get("mode"),  # ensemble rows: sequential/batched/guarded
     )
 
 

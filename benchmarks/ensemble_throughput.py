@@ -1,0 +1,195 @@
+"""Ensemble throughput: batched sims/sec vs sequential solo runs.
+
+Three modes at N~2k per member, batch sizes 4 and 16:
+
+  * sequential — B solo runs chained one after another (eager init +
+    donated block scans each), the baseline a user without the ensemble
+    engine pays for a parameter sweep;
+  * batched    — one vmapped program stepping all B members together
+    (block-entry rebuild + physics scan, NO health work): the raw
+    batching win, bounding what the guard may cost;
+  * guarded    — the full ``ensemble.run_ensemble`` driver (batched
+    health reduction, host snapshots, lane bookkeeping).
+
+Reported per (batch, mode): aggregate member-steps/sec
+(``steps_per_sec``, so history tooling applies unchanged) and
+``sims_per_sec`` (= B / wall). The record's acceptance numbers:
+``speedup_vs_sequential`` (guarded batched aggregate over sequential —
+the ISSUE asks >= 4x at batch 16) and ``ensemble_guard_overhead_frac``
+(guarded vs batched-unguarded — <= 10%).
+
+Appends a ``label: "ensemble"`` record to BENCH_nnps.json.
+
+  PYTHONPATH=src python -m benchmarks.ensemble_throughput [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import emit
+from benchmarks.nnps_throughput import _append_record, _build
+from repro.core import ensemble, recovery, solver
+
+BLOCK = 32
+N_TARGET = 2000
+REPS = 2
+
+
+@partial(jax.jit, static_argnums=(0, 2), donate_argnums=(1,))
+def _plain_block(cfg, carry, nsteps: int):
+    """One batched UNGUARDED block: the ensemble block's structure
+    (hoisted block-entry rebuild + physics scan) minus every piece of
+    guard work — no health reduction, no lane masks, no fault hooks."""
+    due = jax.vmap(lambda c: solver._needs_rebuild(cfg, c))(carry)
+    rebuilt = jax.vmap(lambda c: solver._rebuild(cfg, c))(carry)
+    carry = ensemble._select_members(due, rebuilt, carry)
+
+    def body(c, _):
+        return jax.vmap(lambda ci: solver._physics_step(cfg, ci))(c), None
+
+    carry, _ = jax.lax.scan(body, carry, None, length=nsteps)
+    return carry
+
+
+def _member_states(cfg, st, B):
+    rng = np.random.default_rng(0)
+    out = []
+    for i in range(B):
+        v = np.array(st.fluid.v)
+        if i:
+            v = v + 1e-3 * rng.standard_normal(v.shape).astype(v.dtype)
+        out.append(st._replace(fluid=st.fluid._replace(v=jnp.asarray(v))))
+    return out
+
+
+def _fresh(tree):
+    return jax.tree.map(jnp.array, tree)
+
+
+def _time(fn) -> float:
+    fn()  # compile / warm
+    times = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def _run_sequential(cfg, states, nsteps: int):
+    nblocks = nsteps // BLOCK
+    outs = []
+    for s in states:
+        # copy: run_persistent donates its carry, whose leaves alias s
+        carry = solver.init_persistent(cfg, _fresh(s))
+        carry = carry._replace(st=carry.st._replace(t=jnp.copy(carry.st.t)))
+        for _ in range(nblocks):
+            carry = solver.run_persistent(cfg, carry, BLOCK)
+        outs.append(carry)
+    return jax.block_until_ready(outs)
+
+
+def _run_batched(cfg, states, nsteps: int):
+    nblocks = nsteps // BLOCK
+    carry = ensemble._batch_init(cfg, ensemble.stack_states(states))
+    carry = carry._replace(st=carry.st._replace(t=jnp.copy(carry.st.t)))
+    for _ in range(nblocks):
+        carry = _plain_block(cfg, carry, BLOCK)
+    return jax.block_until_ready(carry)
+
+
+def _run_guarded(cfg, states, nsteps: int, policy):
+    outs, _, rep = ensemble.run_ensemble(cfg, states, nsteps, policy)
+    assert all(m.status == "healthy" for m in rep.members), \
+        "benchmark batch must stay healthy"
+    return jax.block_until_ready(outs)
+
+
+def run_batch(B: int, nsteps: int) -> tuple[list[dict], dict]:
+    policy = recovery.GuardPolicy(block=BLOCK)
+    cfg, st, max_neighbors = _build(
+        N_TARGET, "xla", skin_frac_hc=0.5, records="fp16"
+    )
+    mcfg = ensemble.member_config(cfg, policy)
+    st = jax.block_until_ready(solver.simulate(cfg, st, 10))
+    states = _member_states(mcfg, st, B)
+
+    t_seq = _time(lambda: _run_sequential(mcfg, states, nsteps))
+    t_bat = _time(lambda: _run_batched(mcfg, states, nsteps))
+    t_grd = _time(lambda: _run_guarded(mcfg, states, nsteps, policy))
+
+    rows = []
+    for mode, t in (("sequential", t_seq), ("batched", t_bat),
+                    ("guarded", t_grd)):
+        rows.append({
+            "case": "poiseuille",
+            "mode": mode,
+            "batch": B,
+            "guarded": mode == "guarded",
+            "n_target": N_TARGET,
+            "n_particles": int(st.xn.shape[0]),
+            "backend": "xla",
+            "records": "fp16",
+            "skin_frac_hc": 0.5,
+            "max_neighbors": max_neighbors,
+            "block": BLOCK,
+            "nsteps": nsteps,
+            "steps_per_sec": round(B * nsteps / t, 3),  # aggregate
+            "sims_per_sec": round(B / t, 4),
+        })
+    summary = {
+        "speedup_vs_sequential": round(t_seq / t_grd, 3),
+        "guard_overhead_frac": round(t_grd / t_bat - 1.0, 4),
+    }
+    emit("ensemble_throughput", {"batch": B, "nsteps": nsteps, **{
+        r["mode"]: r["steps_per_sec"] for r in rows}, **summary})
+    return rows, summary
+
+
+def main(full: bool = True, append: bool = True, out: str | None = None):
+    batches = (4, 16) if full else (4,)
+    nsteps = 5 * BLOCK if full else 2 * BLOCK
+    rows, speedup, overhead = [], {}, {}
+    for B in batches:
+        tier, summary = run_batch(B, nsteps)
+        rows.extend(tier)
+        speedup[str(B)] = summary["speedup_vs_sequential"]
+        overhead[str(B)] = summary["guard_overhead_frac"]
+    record = {
+        "label": "ensemble",
+        "case": "poiseuille",
+        "backend": jax.default_backend(),
+        "cpu_count": os.cpu_count(),
+        "cases": rows,
+        "speedup_vs_sequential": speedup,
+        "ensemble_guard_overhead_frac": overhead,
+    }
+    if append:
+        _append_record(record)
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+    emit("ensemble_summary", {
+        "speedup_vs_sequential": speedup,
+        "guard_overhead_frac": overhead,
+    })
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="batch 4 only")
+    ap.add_argument("--no-append", action="store_true",
+                    help="do not append to BENCH_nnps.json")
+    ap.add_argument("--out", type=str, default=None,
+                    help="also write the record to a standalone file")
+    a = ap.parse_args()
+    main(full=not a.quick, append=not a.no_append, out=a.out)

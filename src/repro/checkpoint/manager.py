@@ -1,7 +1,7 @@
 """Sharded, atomic, async checkpointing with restore-and-reshard.
 
 Layout: <dir>/step_<N>/
-  manifest.json          - pytree structure, shapes, dtypes, step, mesh
+  manifest.json          - pytree structure, shapes, dtypes, crc32, step
   arrays.npz             - flat {path: array} (host-gathered)
   .COMPLETE              - commit marker (written last, after fsync)
 
@@ -9,8 +9,16 @@ Atomicity: writes go to step_<N>.tmp/ then os.replace() to step_<N>
 and the .COMPLETE marker is written inside. Readers ignore directories
 without the marker, so a killed writer never corrupts restore.
 
+Integrity: the manifest records a CRC32 per array; restore() verifies
+every array against it and — when picking the step itself — falls back
+to the previous .COMPLETE step with a loud warning on any mismatch or
+unreadable payload (torn storage AFTER commit: a .COMPLETE marker only
+proves the writer finished, not that the bytes survived).
+
 Async: save() can hand off to a background thread (the train loop keeps
-stepping); wait() joins before the next save or on exit.
+stepping); wait() joins before the next save or on exit. A process is
+joined at interpreter exit too (atexit), so an async save that failed
+after the last explicit wait() is reported instead of silently dropped.
 
 Elastic restore: restore() returns host numpy; ``reshard()`` device_puts
 onto any mesh/sharding - a different device count than the writer's is
@@ -18,16 +26,27 @@ fine, which is the restart-after-resize path.
 """
 from __future__ import annotations
 
+import atexit
 import json
+import logging
 import os
 import shutil
+import sys
 import threading
+import weakref
+import zlib
 
 import numpy as np
 
 import jax
 
+log = logging.getLogger("repro.checkpoint")
+
 SEP = "/"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """An explicitly requested checkpoint step failed CRC verification."""
 
 
 def _flatten(tree, prefix=""):
@@ -75,19 +94,48 @@ def _unflatten_into(template, flat, prefix=""):
     return flat[prefix or "leaf"]
 
 
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF
+
+
+def _atexit_join(ref):
+    """Join a dangling async save at interpreter exit. Never raises
+    (atexit swallows nothing gracefully) — a deferred save error is
+    logged AND printed to stderr so it cannot vanish with the process."""
+    mgr = ref()
+    if mgr is None:
+        return
+    try:
+        mgr.wait()
+    except Exception as e:  # pragma: no cover - exercised via unit test
+        log.error("checkpoint: async save failed at process exit: %s", e)
+        print(f"checkpoint: async save FAILED at process exit: {e}",
+              file=sys.stderr)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
+        """``keep``: retain the newest ``keep`` committed steps, garbage-
+        collecting older ones after each save. ``keep=0`` explicitly
+        means KEEP ALL (no GC ever) — it is not "keep none"."""
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
         self._error: Exception | None = None
+        atexit.register(_atexit_join, weakref.ref(self))
 
     # ---- write ------------------------------------------------------------
     def save(self, step: int, tree, blocking: bool = True):
-        """Host-gather and persist `tree` at `step`."""
+        """Host-gather and persist `tree` at `step`.
+
+        Host numpy leaves are COPIED (np.array), not aliased: with
+        ``blocking=False`` the write races the caller's next mutation
+        of those arrays otherwise (the ensemble driver mutates its lane
+        vectors in place between blocks).
+        """
         self.wait()
-        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        host = {k: np.array(v) for k, v in _flatten(tree).items()}
 
         def work():
             try:
@@ -111,7 +159,8 @@ class CheckpointManager:
         np.savez(os.path.join(tmp, "arrays.npz"), **host)
         manifest = {
             "step": step,
-            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                           "crc32": _crc(v)}
                        for k, v in host.items()},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -134,6 +183,8 @@ class CheckpointManager:
             raise err
 
     def _gc(self):
+        # keep=0 means keep all (see __init__) — the falsy short-circuit
+        # below is that contract, not an accident.
         steps = self.all_steps()
         for s in steps[: -self.keep] if self.keep else []:
             shutil.rmtree(
@@ -154,17 +205,61 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _load_verified(self, step: int) -> dict | None:
+        """Load + CRC-verify one committed step. None on corruption."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            with np.load(os.path.join(path, "arrays.npz")) as z:
+                flat = {k: z[k] for k in z.files}
+        except Exception as e:
+            log.warning("checkpoint step %d unreadable (%s: %s)",
+                        step, type(e).__name__, e)
+            return None
+        meta = manifest.get("arrays", {})
+        if set(meta) != set(flat):
+            log.warning(
+                "checkpoint step %d: array set mismatch (manifest %d, "
+                "payload %d)", step, len(meta), len(flat))
+            return None
+        for k, info in meta.items():
+            want = info.get("crc32")
+            if want is None:
+                continue  # pre-integrity checkpoint: nothing to verify
+            if _crc(flat[k]) != want:
+                log.warning(
+                    "checkpoint step %d: CRC mismatch on %r", step, k)
+                return None
+        return flat
+
     def restore(self, template, step: int | None = None):
         """Load into host numpy, shaped like `template`. Returns
-        (tree, step) or (None, None) when no checkpoint exists."""
+        (tree, step) or (None, None) when no checkpoint exists.
+
+        Every array is CRC-verified against the manifest. When ``step``
+        is None (pick latest), a corrupt step falls back to the
+        previous .COMPLETE step with a loud warning — torn storage
+        after commit must cost one checkpoint interval, not the run.
+        An explicitly requested corrupt ``step`` raises
+        :class:`CheckpointCorruptError` instead (the caller asked for
+        those bytes specifically)."""
         self.wait()
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            return None, None
-        path = os.path.join(self.dir, f"step_{step:08d}")
-        with np.load(os.path.join(path, "arrays.npz")) as z:
-            flat = {k: z[k] for k in z.files}
-        return _unflatten_into(template, flat), step
+        if step is not None:
+            flat = self._load_verified(step)
+            if flat is None:
+                raise CheckpointCorruptError(
+                    f"checkpoint step {step} in {self.dir} failed "
+                    "integrity verification")
+            return _unflatten_into(template, flat), step
+        for s in reversed(self.all_steps()):
+            flat = self._load_verified(s)
+            if flat is not None:
+                return _unflatten_into(template, flat), s
+            log.warning(
+                "checkpoint: step %d failed integrity verification — "
+                "falling back to the previous .COMPLETE step", s)
+        return None, None
 
 
 def reshard(tree_host, shardings):

@@ -1,0 +1,797 @@
+"""Fault-isolated batched ensemble engine: one device, many simulations.
+
+The ROADMAP's serving direction needs one accelerator to step MANY
+simulations at once (parameter sweeps, perturbed ensembles, campaign
+runs). PR 6's health guard made a SINGLE run self-healing, but its
+all-or-nothing rollback is wrong for a batch: one diverged member must
+not roll back — or recompile, or replay — the other B-1. This module
+builds the batched engine with MEMBER-level fault isolation:
+
+  * B same-shape members are stacked into one batch-leading
+    :class:`solver.PersistentCarry` and advanced by ONE donated jitted
+    block program (``_ensemble_block``): a vmapped static-cadence
+    rebuild at block entry, ``block`` vmapped physics steps under
+    per-member masks, then ``health.check_batch`` — every member gets
+    its OWN HealthWord + attribution stats from the same fused
+    reduction, and the driver pays a single device→host sync per block
+    for the whole batch.
+
+  * Per-member escalation runs the PR 6 ladder as MASKED LANES: a
+    tripped member is rolled back to its own last-healthy snapshot
+    (a per-row host splice; other rows pass through bit-exact) and
+    retried with its fault disarmed or its dt halved — both ride
+    dynamic (B,) lane vectors (``armed``, ``dt_scale``), so healthy
+    members never recompile, never replay, and never see a changed
+    program. Config-changing rungs (capacity/window regrow, record
+    degrade) cannot be masked — those members are EVICTED to a solo
+    ``recovery.run_guarded`` probation run and either re-admitted
+    (shape-compatible recovery: splice back at a block boundary) or
+    completed solo / permanently quarantined, with a structured
+    :class:`MemberReport` either way.
+
+  * The hard guarantee: members that never trip are BIT-IDENTICAL to
+    their solo unguarded runs under :func:`member_config` (the same
+    config with the ensemble's static rebuild cadence). Masking is
+    pure ``jnp.where`` lane selection — selected bits pass through
+    exactly — and the per-member dt rides the solver's traced-dt
+    path multiplied by an exact 1.0 for healthy lanes.
+
+  * Durability: the per-member last-healthy snapshot batch IS the
+    checkpoint payload — written through ``CheckpointManager`` at
+    block boundaries together with the lane vectors, so a sweep killed
+    mid-run (SIGKILL, OOM) resumes from the latest valid checkpoint
+    and finishes bit-identical to the uninterrupted run. The seed's
+    ``runtime.fault_tolerance`` StragglerWatchdog/HeartbeatWriter wire
+    into the block loop: anomalously slow blocks are flagged and a
+    dead predecessor process is detected at resume time, both reported
+    in the :class:`EnsembleReport`.
+
+Cadence note: the batched block can only rebuild at block entry (a
+``lax.cond`` under vmap would execute BOTH branches every step for
+every member), so ensemble members run the solver's STATIC rebuild
+cadence ``rebuild_every = policy.block``. With ``skin == 0`` the
+neighbor list is stale between rebuilds — size a Verlet skin for the
+cadence (``cfg.validate_skin`` enforces this) or keep blocks short.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import time
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import health, recovery, solver
+from repro.core.recovery import GuardPolicy
+from repro.runtime.fault_tolerance import (
+    HeartbeatMonitor,
+    HeartbeatWriter,
+    StragglerWatchdog,
+)
+
+log = logging.getLogger("repro.ensemble")
+
+Array = jnp.ndarray
+
+# Member status lifecycle (host-side ints so they checkpoint as a (B,)
+# vector): HEALTHY -> RECOVERED on any in-batch masked-lane recovery;
+# EVICTED lanes leave the batch for a solo guarded run (completed at
+# sweep end), READMITTED ones splice back in; QUARANTINED is terminal.
+HEALTHY, RECOVERED, EVICTED, READMITTED, QUARANTINED = range(5)
+STATUS_NAMES = ("healthy", "recovered", "evicted", "readmitted",
+                "quarantined")
+
+
+@dataclasses.dataclass
+class MemberReport:
+    """Per-member outcome of an ensemble run (host-side record)."""
+
+    member: int
+    status: str  # one of STATUS_NAMES
+    steps: int  # steps of trajectory in the returned final state
+    events: list  # in-batch GuardEvents (rollback/disarm/halve_dt/evict)
+    retries: int = 0
+    dt_halvings: int = 0
+    dt_scale: float = 1.0
+    solo_report: recovery.GuardReport | None = None  # eviction leg
+    error: health.SimulationDiverged | None = None  # quarantine cause
+
+
+@dataclasses.dataclass
+class EnsembleReport:
+    """What a batched guarded run did, member by member."""
+
+    cfg: solver.SPHConfig  # the shared (batch) config
+    members: list  # list[MemberReport], index == member
+    blocks: int = 0  # ensemble block programs executed
+    slow_blocks: int = 0  # straggler watchdog trips
+    straggler_flagged: bool = False  # persistent straggler
+    resumed_from: int | None = None  # checkpoint block index, if resumed
+    dead_process_detected: bool = False  # stale heartbeat found at resume
+
+    @property
+    def healthy(self) -> int:
+        return sum(1 for m in self.members if m.status == "healthy")
+
+    def counts(self) -> dict:
+        out = {name: 0 for name in STATUS_NAMES}
+        for m in self.members:
+            out[m.status] += 1
+        return out
+
+
+def member_config(cfg: solver.SPHConfig, policy: GuardPolicy | None = None
+                  ) -> solver.SPHConfig:
+    """The solo-equivalent config of an ensemble member.
+
+    The batched block rebuilds at block entry only, i.e. the static
+    cadence ``rebuild_every = policy.block`` — healthy members are
+    bit-identical to a solo unguarded run under THIS config (it is also
+    the config the eviction path hands to ``run_guarded``, so cadence
+    stays aligned across evict/re-admit). An explicit conflicting
+    ``rebuild_every`` is rejected rather than silently overridden.
+    """
+    policy = policy or GuardPolicy()
+    if cfg.algo != "rcll":
+        raise ValueError("ensemble runs require the persistent rcll pipeline")
+    if cfg.rebuild_every is not None and cfg.rebuild_every != policy.block:
+        raise ValueError(
+            f"cfg.rebuild_every={cfg.rebuild_every} conflicts with the "
+            f"ensemble cadence policy.block={policy.block}; leave it None "
+            "or match the block length"
+        )
+    return dataclasses.replace(cfg, rebuild_every=policy.block, fault=None)
+
+
+def stack_states(states) -> solver.SPHState:
+    """Stack same-shape member states into one batch-leading SPHState."""
+    states = list(states)
+    if not states:
+        raise ValueError("empty ensemble")
+    try:
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    except ValueError as e:
+        raise ValueError(
+            "ensemble members must share array shapes and pytree "
+            f"structure (same case family / particle count): {e}"
+        ) from e
+
+
+def _select_members(pred: Array, a, b):
+    """Per-member lane select over a batch-leading pytree.
+
+    ``pred`` is (B,); every leaf broadcasts it across its trailing
+    axes. Where the predicate is False the output leaf row is ``b``'s
+    row BIT-EXACTLY (select passes bits through) — this is what keeps
+    masked recovery invisible to healthy members.
+    """
+    def sel(x, y):
+        p = pred.reshape(pred.shape + (1,) * (x.ndim - 1))
+        return jnp.where(p, x, y)
+
+    return jax.tree.map(sel, a, b)
+
+
+@partial(jax.jit, static_argnums=(0, 3, 4, 5, 6), donate_argnums=(1,))
+def _ensemble_block(
+    cfg: solver.SPHConfig,
+    carry: solver.PersistentCarry,
+    lanes,
+    nsteps: int,
+    target: int,
+    policy: GuardPolicy,
+    fault,
+):
+    """One donated batched guarded block.
+
+    ``lanes = (dt_scale, armed, active)`` — dynamic (B,) vectors, NOT
+    donated, so per-member recovery (disarm a fault, halve a dt) never
+    changes the compiled program. Frozen members (inactive, or already
+    at ``target``) pass through every step bit-exactly under the lane
+    select. Ordering per step matches ``solver.step_persistent``:
+    inject -> rebuild-if-due -> physics; rebuild can only be due at
+    block entry (members sit on block-aligned step counts), so it is
+    hoisted out of the scan — a ``lax.cond`` under vmap would run the
+    rebuild EVERY step for EVERY member.
+    """
+    dt_scale, armed, active = lanes
+    dt = jnp.float32(cfg.dt) * dt_scale  # exact for healthy lanes (x1.0)
+
+    if carry.flags is not None:
+        carry = carry._replace(flags=jnp.zeros_like(carry.flags))
+
+    def inject(c, live):
+        if fault is None:
+            return c
+        hit = jax.vmap(lambda ci: health.inject_fault(fault, ci))(c)
+        return _select_members(armed & live, hit, c)
+
+    live0 = active & (carry.steps < target)
+    carry = inject(carry, live0)
+    due = live0 & jax.vmap(lambda c: solver._needs_rebuild(cfg, c))(carry)
+    rebuilt = jax.vmap(lambda c: solver._rebuild(cfg, c))(carry)
+    carry = _select_members(due, rebuilt, carry)
+
+    def physics(c):
+        live = active & (c.steps < target)
+        stepped = jax.vmap(
+            lambda ci, di: solver._physics_step(cfg, ci, di)
+        )(c, dt)
+        return _select_members(live, stepped, c)
+
+    carry = physics(carry)  # block entry step (already injected above)
+
+    def body(c, _):
+        live = active & (c.steps < target)
+        return physics(inject(c, live)), None
+
+    carry, _ = jax.lax.scan(body, carry, None, length=nsteps - 1)
+
+    hw = health.check_batch(
+        cfg, carry, rho_dev_limit=policy.rho_dev_limit,
+        cfl_limit=policy.cfl_limit, enabled=policy.checks, dt=dt,
+    )
+    return carry, hw
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _batch_init(cfg: solver.SPHConfig, states: solver.SPHState):
+    return jax.vmap(lambda s: solver.init_persistent(cfg, s))(states)
+
+
+@partial(jax.jit, static_argnums=(0, 2))
+def _batch_check(cfg, carry, policy: GuardPolicy):
+    """Step-0 batched health word (init-time overflow; no donation)."""
+    return health.check_batch(
+        cfg, carry, rho_dev_limit=policy.rho_dev_limit,
+        cfl_limit=policy.cfl_limit, enabled=policy.checks,
+    )
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _batch_finalize(cfg: solver.SPHConfig, carry):
+    return jax.vmap(lambda c: solver.finalize_persistent(cfg, c))(carry)
+
+
+def _lane(tree, i):
+    """Row ``i`` of a batch-leading pytree (host or device)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def _splice_lane(carry, i: int, lane):
+    """Write solo-carry ``lane`` into batch row ``i`` (eager: fresh
+    buffers, never aliases into the next donated block call)."""
+    return jax.tree.map(
+        lambda d, s: d.at[i].set(jnp.asarray(s)), carry, lane
+    )
+
+
+def _update_snapshot(snap, host, mask: np.ndarray):
+    """Refresh the per-member host snapshot rows where ``mask``."""
+    if not mask.any():
+        return snap
+    def upd(s, h):
+        out = np.array(s)
+        out[mask] = h[mask]
+        return out
+    return jax.tree.map(upd, snap, host)
+
+
+def _rekey_fault(fault: health.FaultSpec | None, offset: int):
+    """Shift a step-keyed fault into a solo run's restarted counter."""
+    if fault is None:
+        return None
+    step = fault.step - offset
+    if step < 0:
+        return None  # already fired (and was recovered) before eviction
+    return dataclasses.replace(fault, step=step)
+
+
+# Solo probation length (in blocks) before an evicted member is either
+# re-admitted to the batch or left to finish solo.
+READMIT_BLOCKS = 4
+
+
+def run_ensemble(
+    cfg: solver.SPHConfig,
+    states,
+    nsteps: int,
+    policy: GuardPolicy | None = None,
+    *,
+    fault: health.FaultSpec | None = None,
+    fault_members=(),
+    checkpoint=None,
+    checkpoint_every: int = 0,
+    resume: bool = False,
+    heartbeat_timeout_s: float = 60.0,
+):
+    """Advance B member states ``nsteps`` guarded steps as one batch.
+
+    Returns ``(states, stats, report)`` — per-member final SPHStates
+    (original indexing), per-member :class:`solver.SimStats`, and the
+    :class:`EnsembleReport`. Unlike ``run_guarded`` this NEVER raises
+    :class:`SimulationDiverged`: a member that exhausts recovery is
+    quarantined (its report carries the structured error and its state
+    is returned at its last healthy step) while the rest of the batch
+    finishes untouched.
+
+    ``fault`` arms one deterministic FaultSpec on the members listed in
+    ``fault_members`` (every member if empty) — lane-masked, so
+    disarming it recovers ONE member without touching the compiled
+    program. A fault already armed on ``cfg.fault`` is adopted the same
+    way.
+
+    ``checkpoint`` (a CheckpointManager) + ``checkpoint_every`` (in
+    blocks) persist the per-member snapshot batch and lane vectors at
+    block boundaries; ``resume=True`` restores the latest VALID
+    checkpoint — the continuation is bit-identical to the uninterrupted
+    run because the snapshot batch is the driver's only mutable state.
+    Eviction legs are deferred to the end of the batch loop and
+    re-derived from the snapshot, so a crash during (or before) them
+    resumes without loss; per-member event lists from before the crash
+    are not replayed (statuses and lane vectors are).
+    """
+    policy = policy or GuardPolicy()
+    if cfg.fault is not None and fault is None:
+        fault = cfg.fault
+    cfg = member_config(cfg, policy)
+    states = list(states)
+    B = len(states)
+    batch0 = stack_states(states)
+    del states
+
+    armed0 = np.zeros(B, bool)
+    if fault is not None:
+        members = tuple(fault_members)
+        armed0[list(members) if members else slice(None)] = True
+
+    carry = _batch_init(cfg, batch0)
+    # Like run_guarded: the batched init aliases the stacked t scalar;
+    # sever it so donated blocks never invalidate the caller's states.
+    carry = carry._replace(st=carry.st._replace(t=jnp.copy(carry.st.t)))
+
+    # ---- driver state (the checkpoint payload) ------------------------
+    snap = recovery._host_snapshot(carry)
+    meta = {
+        "dt_scale": np.ones(B, np.float32),
+        "armed": armed0,
+        "active": np.ones(B, bool),
+        "halvings": np.zeros(B, np.int32),
+        "retries": np.zeros(B, np.int32),
+        "status": np.full(B, HEALTHY, np.int32),
+        "snap_steps": np.zeros(B, np.int64),
+        "blocks": np.zeros((), np.int64),
+    }
+    events: list[list] = [[] for _ in range(B)]
+    errors: dict[int, health.SimulationDiverged] = {}
+    solo_reports: dict[int, recovery.GuardReport] = {}
+    report = EnsembleReport(cfg=cfg, members=[])
+
+    watchdog = StragglerWatchdog()
+    hb = None
+    if checkpoint is not None:
+        if resume:
+            # A heartbeat file with no live writer = the previous sweep
+            # process died (SIGKILL / OOM) — report it, then take over.
+            hb_path = os.path.join(checkpoint.dir, "host_0.hb")
+            monitor = HeartbeatMonitor(
+                checkpoint.dir, timeout_s=heartbeat_timeout_s)
+            if os.path.exists(hb_path) and 0 in monitor.dead_hosts(1):
+                report.dead_process_detected = True
+                log.warning(
+                    "ensemble: stale heartbeat in %s — previous sweep "
+                    "process died; resuming from latest checkpoint",
+                    checkpoint.dir,
+                )
+            restored, ck_step = checkpoint.restore(
+                {"carry": snap, "meta": meta})
+            if restored is not None:
+                snap, meta = restored["carry"], restored["meta"]
+                carry = recovery._to_device(snap)
+                report.resumed_from = int(ck_step)
+                log.warning(
+                    "ensemble: resumed from checkpoint block %d "
+                    "(member steps %s)", int(ck_step),
+                    meta["snap_steps"].tolist(),
+                )
+        hb = HeartbeatWriter(checkpoint.dir, host_id=0)
+
+    dt_scale, armed = meta["dt_scale"], meta["armed"]
+    active, halvings = meta["active"], meta["halvings"]
+    retries, status = meta["retries"], meta["status"]
+    snap_steps = meta["snap_steps"]
+    cur_steps = snap_steps.copy()
+
+    def hw_member(hw, i) -> dict:
+        return {
+            "vmax": float(np.asarray(hw.vmax)[i]),
+            "rho_dev": float(np.asarray(hw.rho_dev)[i]),
+            "cfl": float(np.asarray(hw.cfl)[i]),
+            "bad_x": int(np.asarray(hw.bad_x)[i]),
+            "bad_v": int(np.asarray(hw.bad_v)[i]),
+            "bad_rho": int(np.asarray(hw.bad_rho)[i]),
+            "max_count": int(np.asarray(hw.max_count)[i]),
+            "max_cell": int(np.asarray(hw.max_cell)[i]),
+        }
+
+    def record(i, word, stats, action, detail):
+        ev = recovery.GuardEvent(
+            step=int(snap_steps[i]), word=int(word),
+            checks=health.check_names(int(word)), action=action,
+            detail=detail, stats=stats,
+        )
+        events[i].append(ev)
+        log.warning(
+            "ensemble member %d tripped %s at step %d: %s — %s",
+            i, ev.checks, ev.step, action, detail,
+        )
+        return ev
+
+    def rollback(i):
+        nonlocal carry
+        carry = _splice_lane(carry, i, _lane(snap, i))
+        cur_steps[i] = snap_steps[i]
+
+    def solo_cfg(i):
+        f = _rekey_fault(fault, int(snap_steps[i])) if armed[i] else None
+        return dataclasses.replace(
+            cfg, dt=float(cfg.dt * dt_scale[i]), fault=f)
+
+    def try_readmit(i):
+        """Solo probation leg straight after an eviction: if the member
+        recovers under shape-compatible rungs only (disarm / dt halve),
+        splice it back into the batch at the next block boundary."""
+        nonlocal carry, snap
+        remaining = int(nsteps - snap_steps[i])
+        probe = policy.block * READMIT_BLOCKS
+        if probe >= remaining:
+            return  # too close to the end: just finish solo
+        lane = recovery._to_device(_lane(snap, i))
+        state_i = solver.finalize_persistent(cfg, lane)
+        try:
+            st1, stats1, rep1, _ = recovery.run_guarded(
+                solo_cfg(i), state_i, probe, policy)
+        except health.SimulationDiverged as e:
+            errors[i] = e
+            status[i] = QUARANTINED
+            record(i, e.word, e.stats, "quarantine",
+                   f"solo probation diverged: {e}")
+            return
+        if not recovery._dt_equivalent(cfg, rep1.cfg):
+            solo_reports[i] = rep1
+            log.warning(
+                "ensemble member %d: probation recovery changed shapes "
+                "(%s); completing solo", i,
+                "; ".join(ev.action for ev in rep1.events),
+            )
+            return
+        lane2 = solver.init_persistent(cfg, st1)
+        if int(np.asarray(recovery._check_init(cfg, lane2, policy).word)):
+            solo_reports[i] = rep1
+            return  # still unhealthy under the batch config: stay solo
+        new_steps = int(snap_steps[i]) + probe
+        lane2 = lane2._replace(
+            steps=jnp.asarray(new_steps, jnp.int32),
+            rebuilds=lane2.rebuilds + jnp.asarray(lane.rebuilds)
+            + jnp.asarray(stats1.rebuilds),
+        )
+        carry = _splice_lane(carry, i, lane2)
+
+        def set_row(s, h):
+            out = np.array(s)
+            out[i] = np.asarray(h)
+            return out
+
+        snap = jax.tree.map(set_row, snap, lane2)
+        snap_steps[i] = cur_steps[i] = new_steps
+        dt_scale[i] = np.float32(rep1.cfg.dt / cfg.dt)
+        halvings[i] += rep1.dt_halvings
+        armed[i] = bool(
+            rep1.cfg.fault is not None and fault is not None
+            and fault.step >= new_steps
+        )
+        status[i], active[i] = READMITTED, True
+        solo_reports[i] = rep1
+        record(i, 0, {}, "readmit",
+               f"solo probation ({probe} steps) recovered with "
+               "shape-compatible actions "
+               f"[{', '.join(ev.action for ev in rep1.events)}]; "
+               f"re-admitted to the batch at step {new_steps}")
+
+    def run_solo(i):
+        """Deferred eviction leg: finish the member solo from its last
+        healthy snapshot (deterministically re-derivable on resume)."""
+        lane = recovery._to_device(_lane(snap, i))
+        state_i = solver.finalize_persistent(cfg, lane)
+        remaining = int(nsteps - snap_steps[i])
+        try:
+            st, stats, rep, _ = recovery.run_guarded(
+                solo_cfg(i), state_i, remaining, policy)
+        except health.SimulationDiverged as e:
+            errors[i] = e
+            status[i] = QUARANTINED
+            record(i, e.word, e.stats, "quarantine",
+                   f"solo continuation diverged: {e}")
+            return None
+        solo_reports[i] = rep
+        return st, stats
+
+    # ---- step-0 check: init-time capacity overflow etc. ---------------
+    if report.resumed_from is None:
+        hw0 = _batch_check(cfg, carry, policy)
+        words0 = np.asarray(hw0.word)
+        for i in np.nonzero(words0)[0]:
+            # No step has run, so no masked rung applies — evict. The
+            # solo run_guarded regrows capacity (or raises) per member.
+            status[i], active[i] = EVICTED, False
+            record(i, int(words0[i]), hw_member(hw0, i), "evict",
+                   "init-time health trip; deferring to solo guarded run")
+
+    # ---- batched block loop -------------------------------------------
+    while np.any(active & (cur_steps < nsteps)):
+        lanes = (jnp.asarray(dt_scale), jnp.asarray(armed),
+                 jnp.asarray(active))
+        stepped = active & (cur_steps < nsteps)
+        t0 = time.perf_counter()
+        carry, hw = _ensemble_block(
+            cfg, carry, lanes, max(1, policy.block), nsteps, policy, fault
+        )
+        words = np.asarray(hw.word)  # the one per-block host sync
+        wall = time.perf_counter() - t0
+        meta["blocks"] += 1
+        report.blocks += 1
+        if watchdog.observe(wall):
+            report.slow_blocks += 1
+        report.straggler_flagged = watchdog.flagged
+        if hb is not None:
+            hb.beat(int(meta["blocks"]))
+
+        steps_np = np.asarray(carry.steps)
+        cur_steps[:] = np.where(stepped, steps_np, cur_steps)
+        tripped = stepped & (words != 0)
+
+        for i in np.nonzero(tripped)[0]:
+            word = int(words[i])
+            stats_i = hw_member(hw, i)
+            retries[i] += 1
+            if policy.strict:
+                errors[i] = health.SimulationDiverged(
+                    f"member {i}: health guard (strict) tripped "
+                    f"{health.check_names(word)} at step "
+                    f"{int(snap_steps[i])}",
+                    step=int(snap_steps[i]),
+                    checks=health.check_names(word), word=word,
+                    stats=stats_i, events=events[i],
+                )
+                status[i], active[i] = QUARANTINED, False
+                record(i, word, stats_i, "quarantine", "strict policy")
+                rollback(i)
+                continue
+            if armed[i] and policy.disarm_faults:
+                armed[i] = False
+                record(i, word, stats_i, "disarm",
+                       f"stripped injected fault for member {i}; "
+                       f"replaying block from step {int(snap_steps[i])} "
+                       "(lane-masked, no recompile)")
+                rollback(i)
+                if status[i] == HEALTHY:
+                    status[i] = RECOVERED
+                continue
+            if (word & health.NUMERIC_CHECKS
+                    and halvings[i] < policy.max_dt_halvings):
+                halvings[i] += 1
+                dt_scale[i] *= 0.5
+                record(i, word, stats_i, "halve_dt",
+                       f"member dt scale -> {dt_scale[i]:g} (backoff "
+                       f"{int(halvings[i])}/{policy.max_dt_halvings}; "
+                       "lane-masked, no recompile)")
+                rollback(i)
+                if status[i] == HEALTHY:
+                    status[i] = RECOVERED
+                continue
+            # Config-changing rungs (capacity/window regrow, record
+            # degrade, dt exhaustion) cannot ride a lane mask — evict,
+            # then try to re-admit after a solo probation.
+            status[i], active[i] = EVICTED, False
+            record(i, word, stats_i, "evict",
+                   "masked rungs exhausted or capacity trip; evicting "
+                   "member to a solo guarded run")
+            rollback(i)
+            try_readmit(i)
+
+        healthy = stepped & (words == 0)
+        if healthy.any() and (
+                int(meta["blocks"]) % max(1, policy.snapshot_every) == 0):
+            host = jax.tree.map(np.asarray, carry)
+            snap = _update_snapshot(snap, host, healthy)
+            snap_steps[healthy] = steps_np[healthy]
+            if (checkpoint is not None and checkpoint_every
+                    and int(meta["blocks"]) % checkpoint_every == 0):
+                checkpoint.save(
+                    int(meta["blocks"]), {"carry": snap, "meta": meta},
+                    blocking=False,
+                )
+
+    # A failed async save must never be silently dropped — join (and
+    # surface any deferred error) before leaving the loop.
+    if checkpoint is not None:
+        checkpoint.wait()
+
+    # ---- deferred eviction legs ---------------------------------------
+    solo_out: dict[int, tuple] = {}
+    for i in range(B):
+        if status[i] == EVICTED:
+            out = run_solo(i)
+            if out is not None:
+                solo_out[i] = out
+
+    # ---- assemble results ---------------------------------------------
+    fin = _batch_finalize(cfg, carry)
+    steps_np = np.asarray(carry.steps)
+    rebuilds_np = np.asarray(carry.rebuilds)
+    overflow_np = np.asarray(carry.overflow)
+    out_states, out_stats = [], []
+    for i in range(B):
+        if i in solo_out:
+            st, stats = solo_out[i]
+            out_states.append(st)
+            out_stats.append(stats)
+            final_steps = int(nsteps)
+        elif status[i] == QUARANTINED:
+            # last healthy trajectory point, from the snapshot
+            lane = recovery._to_device(_lane(snap, i))
+            out_states.append(solver.finalize_persistent(cfg, lane))
+            out_stats.append(solver.SimStats(
+                rebuilds=lane.rebuilds, steps=lane.steps,
+                overflow=lane.overflow))
+            final_steps = int(snap_steps[i])
+        else:
+            out_states.append(_lane(fin, i))
+            out_stats.append(solver.SimStats(
+                rebuilds=rebuilds_np[i], steps=steps_np[i],
+                overflow=overflow_np[i]))
+            final_steps = int(steps_np[i])
+        report.members.append(MemberReport(
+            member=i, status=STATUS_NAMES[int(status[i])],
+            steps=final_steps, events=events[i],
+            retries=int(retries[i]), dt_halvings=int(halvings[i]),
+            dt_scale=float(dt_scale[i]),
+            solo_report=solo_reports.get(i), error=errors.get(i),
+        ))
+    return out_states, out_stats, report
+
+
+# --------------------------------------------------------------------------
+# Durable sweep service: shape-bucketed batches + per-bucket checkpoints
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class SweepRequest:
+    """One sweep member: a named (cfg, state) pair, optionally faulted."""
+
+    name: str
+    cfg: solver.SPHConfig
+    state: solver.SPHState
+    fault: health.FaultSpec | None = None
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Per-request outputs (request order) + per-bucket ensemble reports."""
+
+    names: list
+    states: list
+    stats: list
+    members: list  # MemberReport per request
+    reports: list  # EnsembleReport per bucket
+    buckets: list  # request indices per bucket
+
+    def counts(self) -> dict:
+        out = {name: 0 for name in STATUS_NAMES}
+        for m in self.members:
+            out[m.status] += 1
+        return out
+
+
+def run_sweep(
+    requests,
+    nsteps: int,
+    policy: GuardPolicy | None = None,
+    *,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    keep: int = 3,
+    resume: bool = False,
+):
+    """Run a sweep of :class:`SweepRequest`s as shape-bucketed ensembles.
+
+    Requests sharing a (normalized) config land in ONE batched
+    ``run_ensemble`` call — one compiled program per distinct config,
+    never one per member. Each bucket checkpoints into its own
+    ``<checkpoint_dir>/bucket_<j>`` subdirectory (plus a human-readable
+    ``sweep.json`` manifest at the root), so ``resume=True`` restarts an
+    interrupted sweep — completed buckets replay from their final
+    checkpoint, the interrupted one from its latest valid step — and
+    finishes bit-identical to the uninterrupted run. Bucket order is
+    the requests' first-appearance order: a resumed sweep must present
+    the SAME request list to map buckets back to directories.
+
+    At most one distinct FaultSpec per bucket (it is a static argument
+    of the shared block program); which members it arms is free.
+    """
+    from repro.checkpoint.manager import CheckpointManager
+
+    policy = policy or GuardPolicy()
+    requests = list(requests)
+    buckets: dict = {}
+    order: list = []
+    faults: dict = {}
+    for idx, r in enumerate(requests):
+        fault = r.fault if r.fault is not None else r.cfg.fault
+        key = member_config(r.cfg, policy)
+        if key not in buckets:
+            buckets[key] = []
+            order.append(key)
+        buckets[key].append(idx)
+        if fault is not None:
+            faults[idx] = fault
+    for key in order:
+        distinct = {faults[i] for i in buckets[key] if i in faults}
+        if len(distinct) > 1:
+            raise ValueError(
+                "at most one distinct FaultSpec per sweep bucket (it is "
+                f"a static argument of the shared program); got {distinct}"
+            )
+
+    if checkpoint_dir is not None:
+        os.makedirs(checkpoint_dir, exist_ok=True)
+        manifest = {
+            "nsteps": int(nsteps),
+            "buckets": [
+                {"dir": f"bucket_{j:02d}",
+                 "members": [requests[i].name for i in buckets[key]]}
+                for j, key in enumerate(order)
+            ],
+        }
+        import json as _json
+        with open(os.path.join(checkpoint_dir, "sweep.json"), "w") as f:
+            _json.dump(manifest, f, indent=2)
+
+    names = [r.name for r in requests]
+    states: list = [None] * len(requests)
+    stats: list = [None] * len(requests)
+    members: list = [None] * len(requests)
+    reports: list = []
+    bucket_idx: list = []
+    for j, key in enumerate(order):
+        idxs = buckets[key]
+        bucket_idx.append(list(idxs))
+        distinct = {faults[i] for i in idxs if i in faults}
+        fault = next(iter(distinct)) if distinct else None
+        fmembers = tuple(k for k, i in enumerate(idxs) if i in faults)
+        ckpt = None
+        if checkpoint_dir is not None:
+            ckpt = CheckpointManager(
+                os.path.join(checkpoint_dir, f"bucket_{j:02d}"), keep=keep)
+        log.info(
+            "sweep bucket %d: %d member(s)%s", j, len(idxs),
+            f", fault {fault.kind!r} on lanes {fmembers}" if fault else "",
+        )
+        outs, st, rep = run_ensemble(
+            key, [requests[i].state for i in idxs], nsteps, policy,
+            fault=fault, fault_members=fmembers, checkpoint=ckpt,
+            checkpoint_every=checkpoint_every, resume=resume,
+        )
+        reports.append(rep)
+        for k, i in enumerate(idxs):
+            states[i] = outs[k]
+            stats[i] = st[k]
+            members[i] = rep.members[k]
+    return SweepResult(
+        names=names, states=states, stats=stats, members=members,
+        reports=reports, buckets=bucket_idx,
+    )

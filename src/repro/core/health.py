@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 Array = jnp.ndarray
@@ -151,6 +152,7 @@ def check_carry(
     rho_dev_limit: float = DEFAULT_RHO_DEV_LIMIT,
     cfl_limit: float = DEFAULT_CFL_LIMIT,
     enabled: int = ALL_CHECKS,
+    dt: Array | float | None = None,
 ) -> HealthWord:
     """One fused health reduction over a persistent carry (traceable).
 
@@ -162,6 +164,11 @@ def check_carry(
 
     ``cfg``/``carry`` are duck-typed (SPHConfig / PersistentCarry): this
     module must not import the solver.
+
+    ``dt`` optionally overrides ``cfg.dt`` in the CFL term — the batched
+    ensemble steps members under per-member (traced) timesteps, and the
+    CFL check must judge each member against the dt it actually stepped
+    with, not the config's.
     """
     st = carry.st
     fl = st.fluid
@@ -179,7 +186,7 @@ def check_carry(
     rho0 = cfg.resolved_scheme.rho0
     dev = jnp.abs(fl.rho.astype(jnp.float32) / rho0 - 1.0)
     rho_dev = jnp.max(jnp.where(fluid & rho_fin, dev, 0.0))
-    cfl = vmax * (cfg.dt / cfg.h)
+    cfl = vmax * ((cfg.dt if dt is None else dt) / cfg.h)
 
     nl = carry.nl
     k = nl.mask.shape[1]
@@ -212,6 +219,30 @@ def check_carry(
         bad_x=bad_x, bad_v=bad_v, bad_rho=bad_rho,
         max_count=max_count, max_cell=max_cell,
     )
+
+
+def check_batch(
+    cfg,
+    carry,
+    *,
+    rho_dev_limit: float = DEFAULT_RHO_DEV_LIMIT,
+    cfl_limit: float = DEFAULT_CFL_LIMIT,
+    enabled: int = ALL_CHECKS,
+    dt: Array | None = None,
+) -> HealthWord:
+    """:func:`check_carry` over a stacked (batch-leading) carry.
+
+    Returns a :class:`HealthWord` whose every leaf is a (B,) vector —
+    one word + attribution stats PER MEMBER, from the same fused
+    reduction vmap'd across the batch axis, so the ensemble driver pays
+    a single device→host sync for the whole batch. ``dt`` is an
+    optional (B,) per-member timestep vector (see :func:`check_carry`).
+    """
+    kw = dict(rho_dev_limit=rho_dev_limit, cfl_limit=cfl_limit,
+              enabled=enabled)
+    if dt is None:
+        return jax.vmap(lambda c: check_carry(cfg, c, **kw))(carry)
+    return jax.vmap(lambda c, d: check_carry(cfg, c, dt=d, **kw))(carry, dt)
 
 
 def observe_state(cfg, st):

@@ -125,6 +125,12 @@ class GuardReport:
     dt_halvings: int = 0
     regrows: int = 0
     records_degraded: bool = False
+    # Observable rows discarded by rollbacks: rows sampled in blocks
+    # that were later rolled back describe a trajectory that never
+    # happened, so they are dropped — but dropping them SILENTLY made
+    # `repro.sph run --guard` tables look gap-free. The count makes the
+    # discard visible (the CLI prints it in the recovery report).
+    dropped_obs_rows: int = 0
 
     @property
     def recovered(self) -> bool:
@@ -308,6 +314,7 @@ def run_guarded(
 
     block = observe_every if observe_every > 0 else max(1, policy.block)
     halvings = regrows = blocks = retries = 0
+    dropped_rows = 0
     obs_rows: list[tuple] = []  # (steps_done_after_block, row)
 
     carry = solver.init_persistent(cfg, state)
@@ -433,7 +440,9 @@ def run_guarded(
         if int(hw.word):
             carry = escalate(hw, carry)
             steps_done = snap_steps
-            obs_rows = [r for r in obs_rows if r[0] <= snap_steps]
+            kept = [r for r in obs_rows if r[0] <= snap_steps]
+            dropped_rows += len(obs_rows) - len(kept)
+            obs_rows = kept
             continue
         steps_done += n
         if observe:
@@ -446,6 +455,10 @@ def run_guarded(
                     blocks % checkpoint_every == 0):
                 checkpoint.save(int(snap.steps), snap)
 
+    # Surface any deferred async-save error before returning: a failed
+    # checkpoint silently dropped here would defeat the resume path.
+    if checkpoint is not None:
+        checkpoint.wait()
     stats = solver.SimStats(
         rebuilds=carry.rebuilds, steps=carry.steps, overflow=carry.overflow
     )
@@ -453,6 +466,7 @@ def run_guarded(
     report = GuardReport(
         cfg=cfg, events=events, blocks=blocks, retries=retries,
         dt_halvings=halvings, regrows=regrows, records_degraded=degraded,
+        dropped_obs_rows=dropped_rows,
     )
     return out, stats, report, [r for _, r in obs_rows]
 

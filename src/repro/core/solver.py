@@ -660,7 +660,9 @@ _FORCE_BACKENDS = {
 }
 
 
-def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
+def _physics_step(
+    cfg: SPHConfig, carry: PersistentCarry, dt: Array | float | None = None
+) -> PersistentCarry:
     """One WCSPH step on the packed state, reusing ``carry.nl``.
 
     Pair geometry is decoded fresh from the *current* RCLL state (exact
@@ -669,17 +671,26 @@ def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
     The continuity + momentum pair sums run through the backend-selected
     force path (see module docstring); EOS/integration/boundary terms are
     per-particle and shared.
+
+    ``dt`` optionally overrides ``cfg.dt`` with a TRACED value — the
+    batched ensemble engine (core/ensemble.py) threads a per-member
+    timestep through one shared compiled program so a single member can
+    back off its dt without recompiling (or perturbing) the batch. The
+    force pass itself never consumes dt, so this touches only the
+    per-particle update below.
     """
     dom, pol = cfg.domain, cfg.policy
     sch = cfg.resolved_scheme
+    if dt is None:
+        dt = cfg.dt
     st, fl = carry.st, carry.st.fluid
     drho, acc = _FORCE_BACKENDS[cfg.resolved_backend](cfg, carry)
-    rho = fl.rho + cfg.dt * drho
+    rho = fl.rho + dt * drho
     if cfg.wall_rho_clamp:
         rho = jnp.where(st.fixed, jnp.maximum(rho, sch.rho0), rho)
 
     bf = sch.body_force_vec(dom.dim)
-    v = fl.v + cfg.dt * (acc + bf)
+    v = fl.v + dt * (acc + bf)
     # Walls: prescribed velocity (0 or v_wall), never advected. The
     # prescribed values flow into the next step's pair sums through the
     # same v array (and thus the fused record rows) as fluid velocities.
@@ -687,7 +698,7 @@ def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
     v = jnp.where(st.fixed[:, None], vw, v)
 
     dxn = jnp.where(
-        st.fixed[:, None], 0.0, v * cfg.dt * (2.0 / dom.h_d)
+        st.fixed[:, None], 0.0, v * dt * (2.0 / dom.h_d)
     ).astype(jnp.float32)
     rc = rcll.advance(dom, st.rc, dxn, dtype=pol.coords_dtype)
     st2 = SPHState(
@@ -695,7 +706,7 @@ def _physics_step(cfg: SPHConfig, carry: PersistentCarry) -> PersistentCarry:
         rc=rc,
         fluid=sph.FluidState(v=v, rho=rho, m=fl.m),
         fixed=st.fixed,
-        t=st.t + cfg.dt,
+        t=st.t + dt,
         kind=st.kind,
         v_wall=st.v_wall,
     )

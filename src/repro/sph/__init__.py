@@ -6,6 +6,7 @@ schemes, boundary builders) and hosts the CLI:
     python -m repro.sph list
     python -m repro.sph run taylor_green --nsteps 600 --observe-every 20
     python -m repro.sph run dam_break --n 2000 --backend xla
+    python -m repro.sph sweep poiseuille --batch 8 --checkpoint ckpt/
 
 See ``repro/sph/__main__.py`` for the command surface.
 """
@@ -23,6 +24,15 @@ from repro.core.cases import (  # noqa: F401
     case_names,
     register_case,
     resolve_ds,
+)
+from repro.core.ensemble import (  # noqa: F401
+    EnsembleReport,
+    MemberReport,
+    SweepRequest,
+    SweepResult,
+    member_config,
+    run_ensemble,
+    run_sweep,
 )
 from repro.core.health import FaultSpec, SimulationDiverged  # noqa: F401
 from repro.core.recovery import (  # noqa: F401

@@ -128,6 +128,11 @@ def cmd_run(args) -> int:
               f"dt_halvings={rep.dt_halvings} regrows={rep.regrows} "
               f"records_degraded={rep.records_degraded} "
               f"final dt={rep.cfg.dt:.3e}")
+        if rep.dropped_obs_rows:
+            # rollbacks discard rows from undone trajectory segments —
+            # say so instead of printing a silently thinned table
+            print(f"# {rep.dropped_obs_rows} observable row(s) dropped "
+                  "by rollback (sampled on undone trajectory segments)")
         for ev in rep.events:
             print(f"#   step {ev.step}: {ev.checks} -> {ev.action} "
                   f"({ev.detail})")
@@ -152,6 +157,113 @@ def cmd_run(args) -> int:
     if hasattr(case, "front_position"):
         print(f"# surge front x = {case.front_position(cfg, res.state):.4f} "
               f"(tank width {case.width})")
+    return 0
+
+
+def cmd_sweep(args) -> int:
+    from repro.core import ensemble, health
+
+    logging.basicConfig(level=logging.WARNING)
+    over = _case_overrides(args)
+    base_case = cases_lib.build_case(args.case, **{
+        k: v for k, v in over.items()
+        if k in {f.name for f in dataclasses.fields(cases_lib.CASES[args.case])}
+    })
+    cfg0, state0 = base_case.build()
+    for k, v in over.items():
+        if k in {f.name for f in dataclasses.fields(type(cfg0))}:
+            cfg0 = dataclasses.replace(cfg0, **{k: v})
+    nsteps = args.nsteps or getattr(base_case, "default_nsteps", 400)
+    policy = recovery.GuardPolicy(
+        block=args.block or recovery.GuardPolicy.block
+    )
+
+    # config variants: each --vary value is its own shape bucket
+    variants = [("", cfg0)]
+    if args.vary:
+        field, _, vals = args.vary.partition("=")
+        if not vals:
+            raise SystemExit(f"--vary wants FIELD=V1,V2,..., got {args.vary!r}")
+        variants = []
+        for raw in vals.split(","):
+            val = ast.literal_eval(raw)
+            variants.append(
+                (f"[{field}={raw}]", dataclasses.replace(cfg0, **{field: val}))
+            )
+
+    # members: per-variant batch of velocity-perturbed copies of the
+    # case state (member 0 of each variant is the unperturbed reference)
+    fault = None
+    if args.inject is not None:
+        fault = recovery.apply_named_fault(
+            cfg0, args.inject, nsteps, int(state0.xn.shape[0])
+        ).fault
+    requests = []
+    fluid = ~np.asarray(state0.fixed)
+    for tag, vcfg in variants:
+        for i in range(args.batch):
+            st = state0
+            if i > 0 and args.perturb > 0.0:
+                rng = np.random.default_rng(args.seed + i)
+                v = np.asarray(st.fluid.v).copy()
+                v[fluid] += args.perturb * rng.standard_normal(
+                    v[fluid].shape
+                ).astype(v.dtype)
+                st = st._replace(fluid=st.fluid._replace(v=v))
+            requests.append(ensemble.SweepRequest(
+                name=f"{args.case}{tag}#{i}", cfg=vcfg, state=st,
+                fault=fault if len(requests) == args.inject_member else None,
+            ))
+
+    total = len(requests)
+    print(f"# sweep {args.case}: members={total} batch={args.batch} "
+          f"variants={len(variants)} N={int(state0.xn.shape[0])} "
+          f"nsteps={nsteps} block={policy.block}"
+          + (f" inject={args.inject} on member {args.inject_member}"
+             if fault else "")
+          + (f" checkpoint={args.checkpoint}" if args.checkpoint else "")
+          + (" resume" if args.resume else ""))
+
+    res = ensemble.run_sweep(
+        requests, nsteps, policy,
+        checkpoint_dir=args.checkpoint,
+        checkpoint_every=args.checkpoint_every,
+        keep=args.keep, resume=args.resume,
+    )
+
+    print(f"{'member':28s} {'status':12s} {'steps':>7s} {'retries':>7s} "
+          f"{'dt_scale':>9s} {'events'}")
+    for name, m in zip(res.names, res.members):
+        evs = ", ".join(ev.action for ev in m.events) or "-"
+        if m.solo_report is not None and m.solo_report.events:
+            evs += " | solo: " + ", ".join(
+                ev.action for ev in m.solo_report.events)
+        print(f"{name:28s} {m.status:12s} {m.steps:7d} {m.retries:7d} "
+              f"{m.dt_scale:9.4g} {evs}")
+        if m.error is not None:
+            print(f"#   quarantined: {m.error}")
+    for j, rep in enumerate(res.reports):
+        extra = ""
+        if rep.resumed_from is not None:
+            extra += f" resumed_from_block={rep.resumed_from}"
+        if rep.dead_process_detected:
+            extra += " dead_predecessor_process=yes"
+        if rep.straggler_flagged:
+            extra += " straggler=FLAGGED"
+        print(f"# bucket {j}: blocks={rep.blocks} "
+              f"slow_blocks={rep.slow_blocks}{extra}")
+    counts = res.counts()
+    print("# sweep summary: " + " ".join(
+        f"{k}={v}" for k, v in counts.items()))
+    nonfinite = any(
+        not np.isfinite(np.asarray(st.fluid.v)).all()
+        for st, m in zip(res.states, res.members)
+        if m.status != "quarantined"
+    )
+    if nonfinite:
+        print("# FAILED: non-finite final state on a non-quarantined "
+              "member", file=sys.stderr)
+        return 1
     return 0
 
 
@@ -187,6 +299,52 @@ def main(argv=None) -> int:
     rp.add_argument("--set", action="append", metavar="FIELD=VALUE",
                     help="override any case dataclass field")
     rp.set_defaults(fn=cmd_run)
+
+    sp = sub.add_parser(
+        "sweep",
+        help="run a batched fault-isolated ensemble sweep of a case",
+    )
+    sp.add_argument("case", choices=cases_lib.case_names())
+    sp.add_argument("--batch", type=int, default=4,
+                    help="members per config variant (default 4)")
+    sp.add_argument("--nsteps", type=int, default=None)
+    sp.add_argument("--perturb", type=float, default=0.01,
+                    help="stddev of the per-member fluid velocity "
+                    "perturbation (member 0 stays unperturbed)")
+    sp.add_argument("--seed", type=int, default=0)
+    sp.add_argument("--vary", default=None, metavar="FIELD=V1,V2,...",
+                    help="sweep an SPHConfig field; each value is its "
+                    "own shape bucket of --batch members")
+    sp.add_argument("--block", type=int, default=None,
+                    help="ensemble block length (= rebuild cadence; "
+                    "default: policy's 32)")
+    sp.add_argument("--ds", type=float, default=None)
+    sp.add_argument("--n", type=int, default=None,
+                    help="target fluid particle count (sets ds)")
+    sp.add_argument("--backend", default=None,
+                    choices=["reference", "xla", "pallas"])
+    sp.add_argument("--records", default=None,
+                    choices=["fp32", "fp16", "bf16"])
+    sp.add_argument("--inject", default=None,
+                    choices=["nan", "teleport"],
+                    help="arm a deterministic fault on ONE member "
+                    "(--inject-member); the lane-masked recovery must "
+                    "leave the rest of the batch bit-identical")
+    sp.add_argument("--inject-member", type=int, default=0,
+                    help="flat member index the fault arms (default 0)")
+    sp.add_argument("--checkpoint", default=None, metavar="DIR",
+                    help="durable sweep state under DIR (per-bucket "
+                    "CheckpointManager subdirs + sweep.json manifest)")
+    sp.add_argument("--checkpoint-every", type=int, default=1,
+                    help="blocks between checkpoints (default 1)")
+    sp.add_argument("--keep", type=int, default=3,
+                    help="checkpoint steps to retain; 0 keeps all")
+    sp.add_argument("--resume", action="store_true",
+                    help="resume an interrupted sweep from the latest "
+                    "valid checkpoint (bit-identical continuation)")
+    sp.add_argument("--set", action="append", metavar="FIELD=VALUE",
+                    help="override any case dataclass field")
+    sp.set_defaults(fn=cmd_sweep)
 
     args = ap.parse_args(argv)
     return args.fn(args)

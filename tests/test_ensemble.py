@@ -1,0 +1,245 @@
+"""Fault-isolated batched ensemble engine (``core/ensemble.py``).
+
+The contract under test, in order of importance:
+
+  * isolation: one faulted member recovers (or quarantines) WITHOUT
+    perturbing the others — every healthy member's final state is
+    bit-identical to its own solo unguarded run, and no healthy member
+    is ever rolled back or replayed;
+  * clean batches are pure overhead: all members bit-match solo runs;
+  * durability: a checkpointed ensemble killed mid-sweep (simulated by
+    stopping after a partial run), even with the NEWEST checkpoint torn
+    by the crash, resumes from the previous valid step and finishes
+    bit-identical to the uninterrupted run;
+  * sweep service: shape-bucketing, request-order results, per-bucket
+    fault constraint.
+"""
+import dataclasses
+import os
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import faults
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import ensemble, health, recovery, solver
+
+
+def _fresh(tree):
+    """Deep-copy device leaves: solo runs DONATE their carry, which
+    would invalidate buffers shared across member states."""
+    return jax.tree.map(jnp.array, tree)
+
+
+def _bitmatch(a, b) -> bool:
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def _members(cfg, state, B, scale=0.01):
+    """B member states: #0 unperturbed, the rest with seeded velocity
+    perturbations (distinct trajectories, same shapes)."""
+    out = []
+    for i in range(B):
+        v = np.array(state.fluid.v)
+        if i:
+            rng = np.random.default_rng(100 + i)
+            v = v + scale * rng.standard_normal(v.shape).astype(v.dtype)
+        out.append(_fresh(state._replace(
+            fluid=state.fluid._replace(v=jnp.asarray(v)))))
+    return out
+
+
+def _solo(mcfg, state, nsteps):
+    carry = solver.init_persistent(mcfg, _fresh(state))
+    carry = solver.run_persistent(mcfg, carry, nsteps)
+    return solver.finalize_persistent(mcfg, carry)
+
+
+class TestEnsembleCore:
+    def test_clean_batch_bitmatches_solo_runs(self):
+        """Healthy members pay zero numerical cost for batching: each
+        lane bit-matches its own solo unguarded run, including across a
+        target that is NOT a multiple of the block length."""
+        cfg, st = faults.lattice()
+        policy = recovery.GuardPolicy(block=8)
+        mcfg = ensemble.member_config(cfg, policy)
+        states = _members(cfg, st, 4)
+        outs, stats, rep = ensemble.run_ensemble(mcfg, states, 20, policy)
+        assert [m.status for m in rep.members] == ["healthy"] * 4
+        assert all(int(s.steps) == 20 for s in stats)
+        for s, out in zip(states, outs):
+            assert _bitmatch(out, _solo(mcfg, s, 20))
+
+    def test_fault_isolation_b8(self):
+        """ISSUE acceptance: B=8, one member faulted. The faulted lane
+        recovers via lane-masked disarm+replay (bit-matching its clean
+        solo trajectory); the other 7 are bit-identical to solo runs and
+        were never rolled back (no batch-wide recovery)."""
+        B, bad = 8, 3
+        cfg, st = faults.lattice()
+        policy = recovery.GuardPolicy(block=8)
+        mcfg = ensemble.member_config(cfg, policy)
+        states = _members(cfg, st, B)
+        fault = health.FaultSpec("nan_v", step=10)
+        outs, stats, rep = ensemble.run_ensemble(
+            mcfg, states, 24, policy, fault=fault, fault_members=(bad,))
+        for i in range(B):
+            m = rep.members[i]
+            if i == bad:
+                assert m.status == "recovered"
+                assert m.retries == 1
+                assert [e.action for e in m.events] == ["disarm"]
+            else:
+                assert m.status == "healthy"
+                assert m.retries == 0 and m.events == []
+            # disarm replay reproduces the UNFAULTED trajectory, so even
+            # the faulted member bit-matches its clean solo run.
+            assert _bitmatch(outs[i], _solo(mcfg, states[i], 24))
+
+    def test_persistent_fault_quarantines_member_only(self):
+        """A persistent fault defeats the ladder: the member is evicted
+        to a solo probation leg, diverges there too, and is QUARANTINED
+        with the structured error at its last healthy step — while the
+        batch finishes and stays bit-exact."""
+        B, bad = 4, 1
+        cfg, st = faults.lattice()
+        policy = recovery.GuardPolicy(
+            block=8, disarm_faults=False, max_dt_halvings=1,
+            degrade_records=False)
+        mcfg = ensemble.member_config(cfg, policy)
+        states = _members(cfg, st, B)
+        fault = health.FaultSpec("nan_v", step=10)
+        outs, stats, rep = ensemble.run_ensemble(
+            mcfg, states, 24, policy, fault=fault, fault_members=(bad,))
+        m = rep.members[bad]
+        assert m.status == "quarantined"
+        assert isinstance(m.error, health.SimulationDiverged)
+        assert m.steps < 24  # parked at its last healthy block boundary
+        assert any(e.action == "halve_dt" for e in m.events)
+        for i in range(B):
+            if i == bad:
+                continue
+            assert rep.members[i].status == "healthy"
+            assert _bitmatch(outs[i], _solo(mcfg, states[i], 24))
+
+    def test_member_config_rejects_conflicting_cadence(self):
+        cfg, _ = faults.lattice()
+        policy = recovery.GuardPolicy(block=8)
+        with pytest.raises(ValueError, match="rebuild_every"):
+            ensemble.member_config(
+                dataclasses.replace(cfg, rebuild_every=5), policy)
+
+
+class TestDurability:
+    def test_kill_resume_with_torn_checkpoint_bit_identical(self, tmp_path):
+        """ISSUE acceptance: simulate a SIGKILL mid-sweep (partial run,
+        process state discarded) AND torn storage (newest checkpoint's
+        arrays.npz truncated after commit). Resume must fall back to the
+        previous valid step, re-run from there, and produce final states
+        bit-identical to the uninterrupted run."""
+        cfg, st = faults.lattice()
+        policy = recovery.GuardPolicy(block=8)
+        mcfg = ensemble.member_config(cfg, policy)
+        states = _members(cfg, st, 3)
+
+        ref, _, _ = ensemble.run_ensemble(mcfg, states, 32, policy)
+
+        # "crashed" run: advances 2 blocks (16 steps), checkpointing
+        # each block boundary, then the process dies.
+        ck = str(tmp_path / "ck")
+        mgr = CheckpointManager(ck, keep=0)
+        ensemble.run_ensemble(
+            mcfg, states, 16, policy, checkpoint=mgr, checkpoint_every=1)
+        assert mgr.all_steps() == [1, 2]
+
+        # torn storage: the newest checkpoint LOOKS committed but its
+        # payload did not survive the crash.
+        p = os.path.join(ck, "step_00000002", "arrays.npz")
+        with open(p, "rb") as f:
+            data = f.read()
+        with open(p, "wb") as f:
+            f.write(data[: len(data) // 2])
+
+        mgr2 = CheckpointManager(ck, keep=0)
+        outs, stats, rep = ensemble.run_ensemble(
+            mcfg, states, 32, policy, checkpoint=mgr2,
+            checkpoint_every=1, resume=True)
+        assert rep.resumed_from == 1  # fell back past the torn step 2
+        assert all(int(s.steps) == 32 for s in stats)
+        for a, b in zip(ref, outs):
+            assert _bitmatch(a, b)
+
+    def test_dead_process_heartbeat_detected_on_resume(self, tmp_path):
+        cfg, st = faults.lattice()
+        policy = recovery.GuardPolicy(block=8)
+        mcfg = ensemble.member_config(cfg, policy)
+        states = _members(cfg, st, 2)
+        mgr = CheckpointManager(str(tmp_path), keep=0)
+        ensemble.run_ensemble(
+            mcfg, states, 8, policy, checkpoint=mgr, checkpoint_every=1)
+        assert os.path.exists(str(tmp_path / "host_0.hb"))
+        time.sleep(0.05)
+        _, _, rep = ensemble.run_ensemble(
+            mcfg, states, 16, policy, checkpoint=mgr, checkpoint_every=1,
+            resume=True, heartbeat_timeout_s=0.01)
+        assert rep.dead_process_detected
+        assert rep.resumed_from == 1
+
+
+class TestSweep:
+    def test_buckets_by_config_results_in_request_order(self, tmp_path):
+        """Two dt variants -> two shape buckets, one compiled batch
+        each; results come back in request order with correct names."""
+        cfg, st = faults.lattice()
+        policy = recovery.GuardPolicy(block=8)
+        half = dataclasses.replace(cfg, dt=cfg.dt * 0.5)
+        reqs = [
+            ensemble.SweepRequest("a0", cfg, _members(cfg, st, 1)[0]),
+            ensemble.SweepRequest("b0", half, _members(cfg, st, 1)[0]),
+            ensemble.SweepRequest("a1", cfg, _members(cfg, st, 2)[1]),
+        ]
+        res = ensemble.run_sweep(
+            reqs, 16, policy, checkpoint_dir=str(tmp_path / "sw"))
+        assert res.names == ["a0", "b0", "a1"]
+        assert res.buckets == [[0, 2], [1]]
+        assert len(res.reports) == 2
+        assert res.counts()["healthy"] == 3
+        assert os.path.exists(str(tmp_path / "sw" / "sweep.json"))
+        # interleaved bucket members bit-match their solo runs
+        mcfg = ensemble.member_config(cfg, policy)
+        assert _bitmatch(res.states[0], _solo(mcfg, reqs[0].state, 16))
+        assert _bitmatch(res.states[2], _solo(mcfg, reqs[2].state, 16))
+
+    def test_one_fault_per_bucket_enforced(self):
+        cfg, st = faults.lattice()
+        f1 = health.FaultSpec("nan_v", step=4)
+        f2 = health.FaultSpec("nan_v", step=6)
+        reqs = [
+            ensemble.SweepRequest("m0", cfg, st, fault=f1),
+            ensemble.SweepRequest("m1", cfg, st, fault=f2),
+        ]
+        with pytest.raises(ValueError, match="one distinct FaultSpec"):
+            ensemble.run_sweep(reqs, 8, recovery.GuardPolicy(block=8))
+
+
+class TestGuardReportObs:
+    def test_dropped_obs_rows_counted(self):
+        """Satellite: rollback used to drop observable rows recorded
+        after the rollback point silently; the report now counts them.
+        With snapshot_every=3 the snapshot lags the observations, so a
+        trip at step 5 rolls back to step 0 and discards the rows
+        already recorded at steps 2 and 4 (they are replayed)."""
+        cfg, st = faults.lattice()
+        cfgf = faults.with_fault(cfg, kind="nan_v", step=5)
+        _, _, rep, rows = recovery.run_guarded(
+            cfgf, st, 16,
+            recovery.GuardPolicy(block=8, snapshot_every=3),
+            observe_every=2)
+        assert rep.dropped_obs_rows == 2
+        assert len(rows) == 16 // 2  # replay restores uniform spacing
