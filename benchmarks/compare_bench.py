@@ -16,6 +16,9 @@ records, skin_frac_hc, guarded) and flagging, beyond ``--threshold``
   * any rebuild_ms RISE — the rebuild cost is invisible to steady
     steps/sec, which is exactly how it grew 8x steps-worth before the
     rebuild round;
+  * for ``serve`` records (serve_latency) any p95_latency_ms RISE or
+    completed-sims/sec DROP — service regressions batch throughput
+    rows cannot see;
   * for health_guard records additionally the ABSOLUTE bound: guarded
     throughput within ``--guard-limit`` (default 5%) of unguarded at
     every tier — this one needs no history and flags even the first
@@ -48,6 +51,8 @@ def _case_key(case: dict) -> tuple:
         bool(case.get("guarded", False)),  # health_guard A/B rows
         case.get("batch"),  # ensemble rows: batch size axis
         case.get("mode"),  # ensemble rows: sequential/batched/guarded
+        case.get("concurrency"),  # serve rows: burst size
+        case.get("slots"),  # serve rows: lanes per bucket
     )
 
 
@@ -91,6 +96,11 @@ def compare(old: dict, new: dict, threshold: float) -> tuple[list, list]:
         watched = [("steps/sec", "steps_per_sec", -1.0)]
         if case.get("rebuild_ms") and prev.get("rebuild_ms"):
             watched.append(("rebuild_ms", "rebuild_ms", +1.0))
+        if case.get("p95_latency_ms") and prev.get("p95_latency_ms"):
+            # serve rows: tail latency RISE and completed-sims/sec DROP
+            # are the service regressions steady steps/sec cannot see
+            watched.append(("p95_ms", "p95_latency_ms", +1.0))
+            watched.append(("sims/sec", "sims_per_sec", -1.0))
         for label, field, bad_sign in watched:
             before, after = prev.get(field), case.get(field)
             if not before or after is None:

@@ -1,0 +1,130 @@
+"""Serve endpoint latency/throughput under concurrent load.
+
+Starts an in-process :class:`SimServer`, prewarms the dam-break bucket
+(the compile is paid before measurement — a real deployment serves
+long after its first request), then fires ``--concurrency`` dam-break
+requests from a thread pool over REAL sockets and measures per-request
+wall latency from connect to terminal frame.
+
+Reported: p50/p95 latency (ms), completed sims/sec over the whole
+burst, and the completed/rejected split. The queue is sized to hold the
+full burst so the latency distribution measures the ENGINE (lane
+admission + block batching), not deliberate load-shedding; the
+``--shed`` flag flips that to a small queue to exercise the REJECTED
+path instead.
+
+Appends a ``label: "serve"`` record to BENCH_nnps.json — the ROADMAP
+item 2 deliverable (~100 concurrent dam-break requests with p50/p95
+latency and sims/sec on record; ``compare_bench`` flags p95 rises and
+sims/sec drops beyond its threshold).
+
+  PYTHONPATH=src python -m benchmarks.serve_latency [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+
+from benchmarks._util import emit
+from benchmarks.nnps_throughput import _append_record
+from repro.core import recovery
+from repro.sph import client
+from repro.sph.serve import SimServer
+
+CASE = "dam_break"
+N_TARGET = 300
+NSTEPS = 64
+BLOCK = 32
+
+
+def _fire(port: int, i: int, nsteps: int) -> tuple[str, float]:
+    t0 = time.perf_counter()
+    _, term = client.run_request(
+        "127.0.0.1", port, {"case": CASE, "n": N_TARGET,
+                            "nsteps": nsteps, "request_id": f"bench{i}"},
+        timeout=600.0)
+    return (term["type"] if term else "dead",
+            time.perf_counter() - t0)
+
+
+def _pct(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return float("nan")
+    idx = min(len(sorted_vals) - 1, round(q * (len(sorted_vals) - 1)))
+    return sorted_vals[idx]
+
+
+def run_burst(concurrency: int, slots: int, nsteps: int,
+              shed: bool = False) -> dict:
+    queue = slots if shed else max(concurrency, 1)
+    policy = recovery.GuardPolicy(block=BLOCK, snapshot_every=1)
+    srv = SimServer(slots=slots, queue=queue, policy=policy)
+    srv.prewarm(CASE, n=N_TARGET)  # before start(): compile off-clock
+    srv.start()
+    try:
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=min(64, concurrency)) as pool:
+            outcomes = list(pool.map(
+                lambda i: _fire(srv.port, i, nsteps), range(concurrency)))
+        wall = time.perf_counter() - t0
+    finally:
+        srv.request_drain()
+        srv.join(30)
+    lat = sorted(t for kind, t in outcomes if kind == "done")
+    completed = len(lat)
+    rejected = sum(1 for kind, _ in outcomes if kind == "rejected")
+    row = {
+        "case": CASE,
+        "n_target": N_TARGET,
+        "backend": "xla",
+        "records": "fp16",
+        "nsteps": nsteps,
+        "block": BLOCK,
+        "concurrency": concurrency,
+        "slots": slots,
+        "queue": queue,
+        "completed": completed,
+        "rejected": rejected,
+        "other": concurrency - completed - rejected,
+        "p50_latency_ms": round(1e3 * _pct(lat, 0.50), 1),
+        "p95_latency_ms": round(1e3 * _pct(lat, 0.95), 1),
+        "sims_per_sec": round(completed / wall, 4) if wall else 0.0,
+        "wall_s": round(wall, 3),
+    }
+    emit("serve_latency", row)
+    return row
+
+
+def main(full: bool = True, append: bool = True, out: str | None = None):
+    tiers = [(100, 8)] if full else [(12, 4)]
+    rows = [run_burst(conc, slots, NSTEPS) for conc, slots in tiers]
+    record = {
+        "label": "serve",
+        "case": CASE,
+        "backend": jax.default_backend(),
+        "cpu_count": os.cpu_count(),
+        "cases": rows,
+    }
+    if append:
+        _append_record(record)
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="12 concurrent requests instead of 100")
+    ap.add_argument("--no-append", action="store_true",
+                    help="do not append to BENCH_nnps.json")
+    ap.add_argument("--out", type=str, default=None,
+                    help="also write the record to a standalone file")
+    a = ap.parse_args()
+    main(full=not a.quick, append=not a.no_append, out=a.out)

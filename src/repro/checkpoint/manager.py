@@ -33,6 +33,7 @@ import os
 import shutil
 import sys
 import threading
+import time
 import weakref
 import zlib
 
@@ -47,6 +48,33 @@ SEP = "/"
 
 class CheckpointCorruptError(RuntimeError):
     """An explicitly requested checkpoint step failed CRC verification."""
+
+
+class CheckpointLockError(RuntimeError):
+    """The checkpoint directory is locked by another LIVE process.
+
+    Two writers interleaving saves into one directory silently corrupt
+    each other's GC and step ordering, so opening is exclusive. The
+    error carries the owner pid so callers (and their users) can see
+    who holds it."""
+
+    def __init__(self, directory: str, owner_pid: int):
+        super().__init__(
+            f"checkpoint directory {directory!r} is locked by live "
+            f"process {owner_pid} — two writers would interleave saves; "
+            "pick a different directory or stop the other process")
+        self.directory = directory
+        self.owner_pid = owner_pid
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True  # exists, owned by someone else
+    return True
 
 
 def _flatten(tree, prefix=""):
@@ -106,7 +134,7 @@ def _atexit_join(ref):
     if mgr is None:
         return
     try:
-        mgr.wait()
+        mgr.close()
     except Exception as e:  # pragma: no cover - exercised via unit test
         log.error("checkpoint: async save failed at process exit: %s", e)
         print(f"checkpoint: async save FAILED at process exit: {e}",
@@ -123,7 +151,63 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
         self._error: Exception | None = None
+        self._lock_path: str | None = None
+        self._acquire_lock()
         atexit.register(_atexit_join, weakref.ref(self))
+
+    # ---- exclusivity -------------------------------------------------------
+    def _acquire_lock(self):
+        """Take the directory's exclusive ``.lock`` file.
+
+        Same-process re-open adopts the existing lock (re-entrant: the
+        sweep service opens per-bucket managers under one root, and
+        tests reopen directories to resume). A lock owned by a DEAD
+        pid is reclaimed with a warning — a crashed writer must not
+        brick its directory. A live foreign owner raises
+        :class:`CheckpointLockError`."""
+        path = os.path.join(self.dir, ".lock")
+        payload = json.dumps({"pid": os.getpid(), "t": time.time()})
+        for _ in range(3):
+            try:
+                fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                with os.fdopen(fd, "w") as f:
+                    f.write(payload)
+                self._lock_path = path
+                return
+            except FileExistsError:
+                pass
+            try:
+                with open(path) as f:
+                    owner = int(json.load(f)["pid"])
+            except (OSError, ValueError, KeyError,
+                    json.JSONDecodeError):
+                # torn write by a dying owner: give it a beat, then
+                # treat unreadable as dead
+                time.sleep(0.05)
+                owner = None
+            if owner == os.getpid():
+                self._lock_path = path  # re-entrant adopt
+                return
+            if owner is not None and _pid_alive(owner):
+                raise CheckpointLockError(self.dir, owner)
+            log.warning(
+                "checkpoint: reclaiming %s from dead process %s",
+                path, owner)
+            try:
+                os.remove(path)
+            except FileNotFoundError:
+                pass  # the dead owner's reaper beat us to it
+        raise CheckpointLockError(self.dir, -1)
+
+    def close(self):
+        """Join any async save and release the directory lock."""
+        self.wait()
+        if self._lock_path is not None:
+            try:
+                os.remove(self._lock_path)
+            except FileNotFoundError:
+                pass
+            self._lock_path = None
 
     # ---- write ------------------------------------------------------------
     def save(self, step: int, tree, blocking: bool = True):

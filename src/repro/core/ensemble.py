@@ -113,6 +113,11 @@ class EnsembleReport:
     straggler_flagged: bool = False  # persistent straggler
     resumed_from: int | None = None  # checkpoint block index, if resumed
     dead_process_detected: bool = False  # stale heartbeat found at resume
+    # How the previous owner of the checkpoint dir exited, judged from
+    # its heartbeat file at resume time: "dead" (stale file left behind
+    # — SIGKILL/OOM), "clean" (file removed on exit, checkpoints
+    # present), or None (not a resume / nothing to judge).
+    predecessor: str | None = None
 
     @property
     def healthy(self) -> int:
@@ -183,23 +188,27 @@ def _ensemble_block(
     carry: solver.PersistentCarry,
     lanes,
     nsteps: int,
-    target: int,
     policy: GuardPolicy,
     fault,
+    observe: bool = False,
 ):
     """One donated batched guarded block.
 
-    ``lanes = (dt_scale, armed, active)`` — dynamic (B,) vectors, NOT
-    donated, so per-member recovery (disarm a fault, halve a dt) never
-    changes the compiled program. Frozen members (inactive, or already
-    at ``target``) pass through every step bit-exactly under the lane
-    select. Ordering per step matches ``solver.step_persistent``:
-    inject -> rebuild-if-due -> physics; rebuild can only be due at
-    block entry (members sit on block-aligned step counts), so it is
-    hoisted out of the scan — a ``lax.cond`` under vmap would run the
-    rebuild EVERY step for EVERY member.
+    ``lanes = (dt_scale, armed, active, target)`` — dynamic (B,)
+    vectors, NOT donated, so per-member recovery (disarm a fault, halve
+    a dt), admission and retirement never change the compiled program.
+    ``target`` is the per-lane step target (the serving layer admits
+    requests of different lengths into one batch); frozen members
+    (inactive, or already at their target) pass through every step
+    bit-exactly under the lane select. Ordering per step matches
+    ``solver.step_persistent``: inject -> rebuild-if-due -> physics;
+    rebuild can only be due at block entry (members sit on
+    block-aligned step counts), so it is hoisted out of the scan — a
+    ``lax.cond`` under vmap would run the rebuild EVERY step for EVERY
+    member. ``observe`` additionally returns one per-lane observable
+    row (t, ekin, vmax, rho_err) from the block-exit state.
     """
-    dt_scale, armed, active = lanes
+    dt_scale, armed, active, target = lanes
     dt = jnp.float32(cfg.dt) * dt_scale  # exact for healthy lanes (x1.0)
 
     if carry.flags is not None:
@@ -236,7 +245,11 @@ def _ensemble_block(
         cfg, carry, rho_dev_limit=policy.rho_dev_limit,
         cfl_limit=policy.cfl_limit, enabled=policy.checks, dt=dt,
     )
-    return carry, hw
+    obs = (
+        jax.vmap(lambda c: health.observe_state(cfg, c.st))(carry)
+        if observe else ()
+    )
+    return carry, hw, obs
 
 
 @partial(jax.jit, static_argnums=(0,))
@@ -280,6 +293,20 @@ def _update_snapshot(snap, host, mask: np.ndarray):
         out[mask] = h[mask]
         return out
     return jax.tree.map(upd, snap, host)
+
+
+def _hw_member(hw, i) -> dict:
+    """Host stats dict of member ``i`` of a batched HealthWord."""
+    return {
+        "vmax": float(np.asarray(hw.vmax)[i]),
+        "rho_dev": float(np.asarray(hw.rho_dev)[i]),
+        "cfl": float(np.asarray(hw.cfl)[i]),
+        "bad_x": int(np.asarray(hw.bad_x)[i]),
+        "bad_v": int(np.asarray(hw.bad_v)[i]),
+        "bad_rho": int(np.asarray(hw.bad_rho)[i]),
+        "max_count": int(np.asarray(hw.max_count)[i]),
+        "max_cell": int(np.asarray(hw.max_cell)[i]),
+    }
 
 
 def _rekey_fault(fault: health.FaultSpec | None, offset: int):
@@ -377,17 +404,22 @@ def run_ensemble(
     if checkpoint is not None:
         if resume:
             # A heartbeat file with no live writer = the previous sweep
-            # process died (SIGKILL / OOM) — report it, then take over.
-            hb_path = os.path.join(checkpoint.dir, "host_0.hb")
+            # process died (SIGKILL / OOM); a CLEAN exit removes the
+            # file (HeartbeatWriter.clear), so "absent with checkpoints
+            # present" means the predecessor shut down in good order.
             monitor = HeartbeatMonitor(
                 checkpoint.dir, timeout_s=heartbeat_timeout_s)
-            if os.path.exists(hb_path) and 0 in monitor.dead_hosts(1):
+            status = monitor.host_status(0)
+            if status == "dead":
                 report.dead_process_detected = True
+                report.predecessor = "dead"
                 log.warning(
                     "ensemble: stale heartbeat in %s — previous sweep "
                     "process died; resuming from latest checkpoint",
                     checkpoint.dir,
                 )
+            elif status == "absent" and checkpoint.latest_step() is not None:
+                report.predecessor = "clean"
             restored, ck_step = checkpoint.restore(
                 {"carry": snap, "meta": meta})
             if restored is not None:
@@ -407,17 +439,7 @@ def run_ensemble(
     snap_steps = meta["snap_steps"]
     cur_steps = snap_steps.copy()
 
-    def hw_member(hw, i) -> dict:
-        return {
-            "vmax": float(np.asarray(hw.vmax)[i]),
-            "rho_dev": float(np.asarray(hw.rho_dev)[i]),
-            "cfl": float(np.asarray(hw.cfl)[i]),
-            "bad_x": int(np.asarray(hw.bad_x)[i]),
-            "bad_v": int(np.asarray(hw.bad_v)[i]),
-            "bad_rho": int(np.asarray(hw.bad_rho)[i]),
-            "max_count": int(np.asarray(hw.max_count)[i]),
-            "max_cell": int(np.asarray(hw.max_cell)[i]),
-        }
+    hw_member = _hw_member
 
     def record(i, word, stats, action, detail):
         ev = recovery.GuardEvent(
@@ -533,13 +555,14 @@ def run_ensemble(
                    "init-time health trip; deferring to solo guarded run")
 
     # ---- batched block loop -------------------------------------------
+    target_vec = jnp.full(B, nsteps, jnp.int32)
     while np.any(active & (cur_steps < nsteps)):
         lanes = (jnp.asarray(dt_scale), jnp.asarray(armed),
-                 jnp.asarray(active))
+                 jnp.asarray(active), target_vec)
         stepped = active & (cur_steps < nsteps)
         t0 = time.perf_counter()
-        carry, hw = _ensemble_block(
-            cfg, carry, lanes, max(1, policy.block), nsteps, policy, fault
+        carry, hw, _ = _ensemble_block(
+            cfg, carry, lanes, max(1, policy.block), policy, fault
         )
         words = np.asarray(hw.word)  # the one per-block host sync
         wall = time.perf_counter() - t0
@@ -621,6 +644,10 @@ def run_ensemble(
     # surface any deferred error) before leaving the loop.
     if checkpoint is not None:
         checkpoint.wait()
+    if hb is not None:
+        # Clean exit removes the heartbeat file: a later resume must be
+        # able to tell "predecessor shut down" from "predecessor died".
+        hb.clear()
 
     # ---- deferred eviction legs ---------------------------------------
     solo_out: dict[int, tuple] = {}
@@ -664,6 +691,335 @@ def run_ensemble(
             solo_report=solo_reports.get(i), error=errors.get(i),
         ))
     return out_states, out_stats, report
+
+
+# --------------------------------------------------------------------------
+# Live lane engine: standby-slot admission / retirement over ONE program
+# --------------------------------------------------------------------------
+class EngineFull(RuntimeError):
+    """No free lane: the caller should queue or shed the request."""
+
+
+class FaultBusy(RuntimeError):
+    """The engine's static FaultSpec slot is held by live armed lanes;
+    admitting a request with a DIFFERENT fault would recompile under
+    them. The caller should re-queue until the armed lanes drain."""
+
+
+class AdmissionError(RuntimeError):
+    """A request failed its init-time health check (e.g. the admission
+    rebuild overflowed an undersized capacity) — structured so a server
+    can reply with the tripped checks instead of admitting a lane that
+    is known-bad before its first step."""
+
+    def __init__(self, word: int, stats: dict):
+        checks = health.check_names(word)
+        super().__init__(
+            f"request failed init-time health checks {checks}: {stats}")
+        self.word = int(word)
+        self.checks = checks
+        self.stats = dict(stats)
+
+
+@dataclasses.dataclass
+class LaneEvent:
+    """One per-lane outcome of a :meth:`LaneEngine.step_block` call."""
+
+    lane: int
+    kind: str  # "obs" | "recovered" | "done" | "diverged"
+    step: int  # lane step count the event refers to
+    obs: dict | None = None  # observable row (kind "obs"/"done")
+    action: str | None = None  # recovery rung taken (kind "recovered")
+    detail: str = ""
+    word: int = 0
+    checks: tuple = ()
+    stats: dict | None = None
+    state: object | None = None  # finalized SPHState (kind "done")
+    events: list | None = None  # lane GuardEvents (kind "done"/"diverged")
+
+
+class LaneEngine:
+    """Standby-slot live batch: one compiled block program, ``slots``
+    lanes, requests admitted and retired at block boundaries.
+
+    The serving counterpart of :func:`run_ensemble`: instead of a fixed
+    member list advanced to one shared target, the engine keeps a fixed
+    batch WIDTH whose lanes are individually occupied by requests.
+    Free lanes sit inactive (masked — every step passes their bits
+    through unchanged, a ``dt_scale=0``-style no-op that costs no
+    recompile), :meth:`admit` warm-starts a request on a free lane
+    (solo ``init_persistent`` + an eager row splice: neighbors' buffers
+    are rebuilt by the splice but their VALUES pass through bit-exact),
+    and completion / divergence / retirement frees the slot the same
+    way. Because per-lane step targets ride a traced ``(B,)`` vector,
+    admitting a 64-step request next to a half-finished 512-step one
+    never recompiles.
+
+    Health is the PR 6/7 ladder restricted to its MASKED rungs —
+    disarm-fault and per-lane dt backoff (rollback to the lane's own
+    last-healthy snapshot; other lanes pass through bit-exact). The
+    config-changing rungs (capacity/window regrow, record degrade)
+    cannot ride a lane mask; a lane that needs them is reported
+    ``diverged`` with the structured word/stats and its slot is freed —
+    a serving layer sheds that request rather than recompiling under
+    its neighbors. Healthy lanes are bit-identical to solo runs under
+    :func:`member_config` (the run_ensemble guarantee, test-enforced).
+
+    One FaultSpec at a time: the fault is a static argument of the
+    block program, so the engine holds a single spec, re-armable per
+    lane. Admitting a different spec while armed lanes are live raises
+    :class:`FaultBusy` (re-queue); once no lane is armed the spec may
+    be replaced (one recompile, loud log).
+    """
+
+    def __init__(self, cfg: solver.SPHConfig, slots: int,
+                 policy: GuardPolicy | None = None):
+        self.policy = policy or GuardPolicy()
+        self.cfg = member_config(cfg, self.policy)
+        self.slots = int(slots)
+        if self.slots < 1:
+            raise ValueError("LaneEngine needs at least one slot")
+        self.fault: health.FaultSpec | None = None
+        B = self.slots
+        self.carry = None  # batch carry, built lazily at first admit
+        self.snap = None  # per-lane last-healthy host snapshot rows
+        self.dt_scale = np.ones(B, np.float32)
+        self.armed = np.zeros(B, bool)
+        self.disarmable = np.ones(B, bool)
+        self.active = np.zeros(B, bool)
+        self.target = np.zeros(B, np.int64)
+        self.halvings = np.zeros(B, np.int32)
+        self.retries = np.zeros(B, np.int32)
+        self.snap_steps = np.zeros(B, np.int64)
+        self.lane_events: list[list] = [[] for _ in range(B)]
+        self.blocks = 0
+
+    # ---- introspection ------------------------------------------------
+    @property
+    def free_lanes(self) -> list[int]:
+        return [i for i in range(self.slots) if not self.active[i]]
+
+    @property
+    def live_lanes(self) -> list[int]:
+        return [i for i in range(self.slots) if self.active[i]]
+
+    # ---- admission / retirement ---------------------------------------
+    def _ensure_batch(self, carry0):
+        if self.carry is None:
+            self.carry = jax.tree.map(
+                lambda x: jnp.stack([x] * self.slots), carry0)
+            self.snap = recovery._host_snapshot(self.carry)
+
+    def _set_fault(self, fault: health.FaultSpec | None):
+        if fault is None or fault == self.fault:
+            return
+        if any(self.armed[i] for i in self.live_lanes):
+            raise FaultBusy(
+                f"engine fault slot holds {self.fault} with armed live "
+                f"lanes; cannot admit {fault} without recompiling them")
+        if self.fault is not None:
+            log.warning(
+                "lane engine: replacing static fault %s -> %s "
+                "(recompiles the block program)", self.fault, fault)
+        self.fault = fault
+
+    def admit(
+        self,
+        state: solver.SPHState | None,
+        nsteps: int,
+        *,
+        fault: health.FaultSpec | None = None,
+        disarmable: bool = True,
+        dt_scale: float = 1.0,
+        halvings: int = 0,
+        carry_row=None,
+        steps_done: int = 0,
+    ) -> int:
+        """Warm-start a request on a free lane; returns the lane index.
+
+        ``state`` is a fresh SPHState (same shapes as every other lane —
+        the bucket invariant); ``carry_row`` instead splices a raw host
+        carry snapshot (the drain/resume path: bit-identical
+        continuation from a checkpointed lane, ``steps_done`` of its
+        ``nsteps`` already taken). ``fault`` arms the engine's
+        FaultSpec on this lane; ``disarmable=False`` models a
+        poisoned request payload (the server cannot "fix" the client's
+        own poison, so the disarm rung is skipped and the ladder runs
+        dt backoff straight to a structured divergence).
+
+        Raises :class:`EngineFull` (no free lane — queue or shed),
+        :class:`FaultBusy` (static fault slot held), or
+        :class:`AdmissionError` (init-time health trip).
+        """
+        free = self.free_lanes
+        if not free:
+            raise EngineFull(f"all {self.slots} lanes busy")
+        self._set_fault(fault)
+        i = free[0]
+        if carry_row is not None:
+            carry0 = recovery._to_device(carry_row)
+        else:
+            carry0 = solver.init_persistent(self.cfg, state)
+            # Sever the ``t`` alias (init_persistent passes it through
+            # un-gathered): the donated block must never invalidate the
+            # caller's state.
+            carry0 = carry0._replace(
+                st=carry0.st._replace(t=jnp.copy(carry0.st.t)))
+            hw0 = recovery._check_init(self.cfg, carry0, self.policy)
+            word0 = int(np.asarray(hw0.word))
+            if word0:
+                raise AdmissionError(word0, hw0.host_stats())
+        self._ensure_batch(carry0)
+        self.carry = _splice_lane(self.carry, i, carry0)
+        row = jax.tree.map(np.asarray, carry0)
+
+        def set_row(s, h):
+            out = np.array(s)
+            out[i] = h
+            return out
+
+        self.snap = jax.tree.map(set_row, self.snap, row)
+        self.snap_steps[i] = int(steps_done)
+        self.dt_scale[i] = np.float32(dt_scale)
+        self.armed[i] = fault is not None
+        self.disarmable[i] = bool(disarmable)
+        self.active[i] = True
+        self.target[i] = int(nsteps)
+        self.halvings[i] = int(halvings)
+        self.retries[i] = 0
+        self.lane_events[i] = []
+        return i
+
+    def retire(self, lane: int):
+        """Free a slot (cancellation / deadline expiry). The lane's
+        rows stay in the batch as frozen bits until the next admission
+        overwrites them — retirement itself touches no device buffer,
+        so neighbors are untouched by construction."""
+        self.active[lane] = False
+        self.armed[lane] = False
+
+    def lane_snapshot(self, lane: int):
+        """(host carry row, meta) at the lane's last healthy block
+        boundary — the drain checkpoint payload. Resume by passing the
+        row back to :meth:`admit` as ``carry_row``."""
+        return _lane(self.snap, lane), {
+            "steps_done": int(self.snap_steps[lane]),
+            "target": int(self.target[lane]),
+            "dt_scale": float(self.dt_scale[lane]),
+            "halvings": int(self.halvings[lane]),
+            "armed": bool(self.armed[lane]),
+            "disarmable": bool(self.disarmable[lane]),
+        }
+
+    # ---- the block program --------------------------------------------
+    def _record(self, i, word, stats, action, detail):
+        ev = recovery.GuardEvent(
+            step=int(self.snap_steps[i]), word=int(word),
+            checks=health.check_names(int(word)), action=action,
+            detail=detail, stats=stats,
+        )
+        self.lane_events[i].append(ev)
+        log.warning("lane %d tripped %s at step %d: %s — %s",
+                    i, ev.checks, ev.step, action, detail)
+        return ev
+
+    def _rollback(self, i):
+        self.carry = _splice_lane(self.carry, i, _lane(self.snap, i))
+
+    def step_block(self) -> list[LaneEvent]:
+        """Advance every live lane one block; returns per-lane events.
+
+        Healthy live lanes yield "obs" (still running), "recovered"
+        (masked rung taken, replay scheduled) or "done" (target
+        reached: finalized state attached, slot freed); a lane whose
+        masked rungs are exhausted yields "diverged" (structured
+        word/checks/stats + the lane's event log, slot freed)."""
+        if self.carry is None or not self.live_lanes:
+            return []
+        lanes = (
+            jnp.asarray(self.dt_scale), jnp.asarray(self.armed),
+            jnp.asarray(self.active),
+            jnp.asarray(self.target, jnp.int32),
+        )
+        self.carry, hw, obs = _ensemble_block(
+            self.cfg, self.carry, lanes, max(1, self.policy.block),
+            self.policy, self.fault, True,
+        )
+        self.blocks += 1
+        words = np.asarray(hw.word)  # the one per-block host sync
+        steps = np.asarray(self.carry.steps)
+        obs_rows = [np.asarray(o) for o in obs]
+        live = self.active & (self.snap_steps < self.target)
+        healthy = live & (words == 0)
+        tripped = live & (words != 0)
+        # Refresh healthy snapshots BEFORE processing trips: rollbacks
+        # splice from snap rows, which tripped lanes must keep.
+        if healthy.any():
+            host = jax.tree.map(np.asarray, self.carry)
+            self.snap = _update_snapshot(self.snap, host, healthy)
+            self.snap_steps[healthy] = steps[healthy]
+        events: list[LaneEvent] = []
+        for i in np.nonzero(tripped)[0]:
+            events.append(self._escalate(int(i), int(words[i]),
+                                         _hw_member(hw, i)))
+        for i in np.nonzero(healthy)[0]:
+            i = int(i)
+            row = {
+                "t": float(obs_rows[0][i]), "ekin": float(obs_rows[1][i]),
+                "vmax": float(obs_rows[2][i]),
+                "rho_err": float(obs_rows[3][i]),
+            }
+            if steps[i] >= self.target[i]:
+                state = solver.finalize_persistent(
+                    self.cfg, _lane(self.carry, i))
+                events.append(LaneEvent(
+                    lane=i, kind="done", step=int(steps[i]), obs=row,
+                    state=state, events=self.lane_events[i],
+                ))
+                self.retire(i)
+            else:
+                events.append(LaneEvent(
+                    lane=i, kind="obs", step=int(steps[i]), obs=row))
+        return events
+
+    def _escalate(self, i: int, word: int, stats: dict) -> LaneEvent:
+        """The masked rungs of the PR 6 ladder for one tripped lane."""
+        self.retries[i] += 1
+        policy = self.policy
+        if (self.armed[i] and self.disarmable[i] and policy.disarm_faults
+                and not policy.strict):
+            self.armed[i] = False
+            self._record(i, word, stats, "disarm",
+                         "stripped injected fault; replaying block from "
+                         f"step {int(self.snap_steps[i])} (lane-masked)")
+            self._rollback(i)
+            return LaneEvent(
+                lane=i, kind="recovered", step=int(self.snap_steps[i]),
+                action="disarm", word=word, stats=stats)
+        if (word & health.NUMERIC_CHECKS and not policy.strict
+                and self.halvings[i] < policy.max_dt_halvings):
+            self.halvings[i] += 1
+            self.dt_scale[i] *= 0.5
+            self._record(
+                i, word, stats, "halve_dt",
+                f"lane dt scale -> {self.dt_scale[i]:g} (backoff "
+                f"{int(self.halvings[i])}/{policy.max_dt_halvings})")
+            self._rollback(i)
+            return LaneEvent(
+                lane=i, kind="recovered", step=int(self.snap_steps[i]),
+                action="halve_dt", word=word, stats=stats)
+        detail = ("strict policy" if policy.strict else
+                  "masked rungs exhausted (config-changing recovery "
+                  "cannot run under live neighbor lanes)")
+        self._record(i, word, stats, "quarantine", detail)
+        self._rollback(i)  # park the lane rows at its last healthy step
+        ev = LaneEvent(
+            lane=i, kind="diverged", step=int(self.snap_steps[i]),
+            word=word, checks=health.check_names(word), stats=stats,
+            detail=detail, events=self.lane_events[i],
+        )
+        self.retire(i)
+        return ev
 
 
 # --------------------------------------------------------------------------

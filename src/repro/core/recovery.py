@@ -113,6 +113,18 @@ class GuardEvent:
     detail: str
     stats: dict
 
+    def to_json(self) -> dict:
+        """Plain-JSON form (machine-readable CLI / serve replies)."""
+        return {
+            "step": int(self.step),
+            "word": int(self.word),
+            "checks": list(self.checks),
+            "action": self.action,
+            "detail": self.detail,
+            "stats": {k: (float(v) if isinstance(v, float) else int(v))
+                      for k, v in (self.stats or {}).items()},
+        }
+
 
 @dataclasses.dataclass
 class GuardReport:
@@ -135,6 +147,21 @@ class GuardReport:
     @property
     def recovered(self) -> bool:
         return bool(self.events)
+
+    def to_json(self) -> dict:
+        """Plain-JSON form; drops ``cfg`` (an opaque jit-static struct)
+        in favor of the fields a client can act on."""
+        return {
+            "recovered": self.recovered,
+            "blocks": int(self.blocks),
+            "retries": int(self.retries),
+            "dt_halvings": int(self.dt_halvings),
+            "regrows": int(self.regrows),
+            "records_degraded": bool(self.records_degraded),
+            "final_dt": float(self.cfg.dt),
+            "dropped_obs_rows": int(self.dropped_obs_rows),
+            "events": [e.to_json() for e in self.events],
+        }
 
 
 @partial(jax.jit, static_argnums=(0, 2, 3, 4), donate_argnums=(1,))

@@ -33,6 +33,19 @@ class HeartbeatWriter:
             json.dump({"step": step, "t": time.time()}, f)
         os.replace(tmp, self.path)
 
+    def clear(self):
+        """Remove the heartbeat file: the clean-shutdown marker.
+
+        A missing file means "never started or exited cleanly"; a STALE
+        file means "died mid-run" — so a clean exit must remove its
+        file, or every later resume mistakes the previous clean run for
+        a dead process."""
+        for path in (self.path, self.path + ".tmp"):
+            try:
+                os.remove(path)
+            except FileNotFoundError:
+                pass
+
 
 class HeartbeatMonitor:
     def __init__(self, directory: str, timeout_s: float = 60.0):
@@ -60,6 +73,21 @@ class HeartbeatMonitor:
     def dead_hosts(self, expected: int) -> list[int]:
         alive = self.alive_hosts()
         return [h for h in range(expected) if h not in alive]
+
+    def host_status(self, host_id: int) -> str:
+        """Tri-state for one host: "alive" (fresh heartbeat), "dead"
+        (stale heartbeat — the process stopped beating without
+        :meth:`HeartbeatWriter.clear`), or "absent" (no file: never
+        started, or shut down cleanly)."""
+        path = os.path.join(self.dir, f"host_{host_id}.hb")
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except FileNotFoundError:
+            return "absent"
+        except (json.JSONDecodeError, OSError):
+            return "dead"  # torn/corrupt file from a mid-write kill
+        return "alive" if time.time() - rec["t"] <= self.timeout else "dead"
 
 
 @dataclasses.dataclass

@@ -6,9 +6,14 @@ schemes, boundary builders) and hosts the CLI:
     python -m repro.sph list
     python -m repro.sph run taylor_green --nsteps 600 --observe-every 20
     python -m repro.sph run dam_break --n 2000 --backend xla
+    python -m repro.sph run dam_break --json            # machine-readable
     python -m repro.sph sweep poiseuille --batch 8 --checkpoint ckpt/
+    python -m repro.sph serve dam_break --checkpoint ck/   # online service
+    python -m repro.sph request dam_break --observe
 
-See ``repro/sph/__main__.py`` for the command surface.
+See ``repro/sph/__main__.py`` for the command surface. The serving
+layer (``SimServer``, ``LaneEngine``, the frame protocol) lives in
+``repro/sph/serve.py`` + ``repro/sph/client.py``.
 """
 from repro.core.api import Observables, SimResult, Simulation  # noqa: F401
 from repro.core.boundaries import (  # noqa: F401
@@ -26,7 +31,12 @@ from repro.core.cases import (  # noqa: F401
     resolve_ds,
 )
 from repro.core.ensemble import (  # noqa: F401
+    AdmissionError,
+    EngineFull,
     EnsembleReport,
+    FaultBusy,
+    LaneEngine,
+    LaneEvent,
     MemberReport,
     SweepRequest,
     SweepResult,

@@ -27,7 +27,9 @@ from __future__ import annotations
 import argparse
 import ast
 import dataclasses
+import json
 import logging
+import signal
 import sys
 
 import numpy as np
@@ -88,11 +90,29 @@ def cmd_run(args) -> int:
             sim.cfg = cfg = recovery.apply_named_fault(
                 cfg, args.inject, nsteps, sim.n_particles
             )
-    print(f"# {args.case}: N={sim.n_particles} ds={case.ds:.4g} "
-          f"dt={cfg.dt:.3e} backend={cfg.resolved_backend} "
-          f"records={cfg.policy.records} nsteps={nsteps} "
-          f"observe_every={every}"
-          + (f" guard=on inject={args.inject or '-'}" if guard else ""))
+    as_json = getattr(args, "json", False)
+    # machine-readable mode: exactly one JSON document on stdout (schema
+    # "repro.sph.run/1", documented in the README) — everything the
+    # human table prints, plus the guard report, as data
+    doc = {
+        "schema": "repro.sph.run/1",
+        "case": args.case,
+        "n": sim.n_particles,
+        "ds": float(case.ds),
+        "dt": float(cfg.dt),
+        "backend": cfg.resolved_backend,
+        "records": cfg.policy.records,
+        "nsteps": int(nsteps),
+        "observe_every": int(every),
+        "guard": guard,
+        "inject": args.inject,
+    }
+    if not as_json:
+        print(f"# {args.case}: N={sim.n_particles} ds={case.ds:.4g} "
+              f"dt={cfg.dt:.3e} backend={cfg.resolved_backend} "
+              f"records={cfg.policy.records} nsteps={nsteps} "
+              f"observe_every={every}"
+              + (f" guard=on inject={args.inject or '-'}" if guard else ""))
 
     try:
         if args.time:
@@ -102,6 +122,15 @@ def cmd_run(args) -> int:
             res, sps = sim.run(nsteps, observe_every=every,
                                guard=policy), None
     except recovery.SimulationDiverged as e:
+        if as_json:
+            doc.update(status="diverged", exit=1, diverged={
+                "step": int(e.step), "checks": list(e.checks),
+                "word": int(e.word),
+                "stats": {k: float(v) for k, v in (e.stats or {}).items()},
+                "events": [ev.to_json() for ev in e.events],
+            })
+            print(json.dumps(doc))
+            return 1
         print(f"# DIVERGED at step {e.step}: checks={e.checks} "
               f"stats={e.stats}", file=sys.stderr)
         for ev in e.events:
@@ -114,11 +143,38 @@ def cmd_run(args) -> int:
     ekin = np.asarray(obs.ekin)
     vmax = np.asarray(obs.vmax)
     rho_err = np.asarray(obs.rho_err)
+    stats = res.stats
+    bad = (
+        np.isnan(ekin).any() or np.isnan(vmax).any()
+        or not np.isfinite(ekin[-1])
+    )
+    overflow = bool(stats.overflow)
+    metrics = (case.validate(t, ekin)
+               if hasattr(case, "validate") and not bad else {})
+
+    if as_json:
+        doc.update(
+            status=("nonfinite" if bad
+                    else "overflow" if overflow else "ok"),
+            exit=1 if (bad or overflow) else 0,
+            observables={"t": t.tolist(), "ekin": ekin.tolist(),
+                         "vmax": vmax.tolist(),
+                         "rho_err": rho_err.tolist()},
+            stats={"steps": int(stats.steps),
+                   "rebuilds": int(stats.rebuilds),
+                   "overflow": overflow},
+            steps_per_sec=sps,
+            validation={k: float(v) for k, v in metrics.items()},
+        )
+        if res.report is not None:
+            doc["guard_report"] = res.report.to_json()
+        print(json.dumps(doc))
+        return doc["exit"]
+
     print(f"{'t':>10s} {'ekin':>12s} {'vmax':>10s} {'rho_err':>10s}")
     for row in zip(t, ekin, vmax, rho_err):
         print(f"{row[0]:10.4f} {row[1]:12.6e} {row[2]:10.4f} {row[3]:10.4f}")
 
-    stats = res.stats
     print(f"# steps={int(stats.steps)} rebuilds={int(stats.rebuilds)} "
           f"overflow={bool(stats.overflow)}"
           + (f" steps/sec={sps:.1f}" if sps is not None else ""))
@@ -136,24 +192,18 @@ def cmd_run(args) -> int:
         for ev in rep.events:
             print(f"#   step {ev.step}: {ev.checks} -> {ev.action} "
                   f"({ev.detail})")
-    bad = (
-        np.isnan(ekin).any() or np.isnan(vmax).any()
-        or not np.isfinite(ekin[-1])
-    )
     if bad:
         print("# FAILED: non-finite observables", file=sys.stderr)
         return 1
-    if bool(stats.overflow):
+    if overflow:
         # dropped neighbor pairs = silently wrong physics — fail loudly
         print("# FAILED: neighbor/cell-capacity overflow (raise "
               "max_neighbors / capacity for this resolution)",
               file=sys.stderr)
         return 1
 
-    if hasattr(case, "validate"):
-        metrics = case.validate(t, ekin)
-        for k, v in metrics.items():
-            print(f"# {k} = {v:.4g}")
+    for k, v in metrics.items():
+        print(f"# {k} = {v:.4g}")
     if hasattr(case, "front_position"):
         print(f"# surge front x = {case.front_position(cfg, res.state):.4f} "
               f"(tank width {case.width})")
@@ -267,6 +317,61 @@ def cmd_sweep(args) -> int:
     return 0
 
 
+def cmd_serve(args) -> int:
+    from repro.core import recovery as _rec
+    from repro.sph.serve import SimServer
+
+    logging.basicConfig(level=logging.INFO)
+    policy = _rec.GuardPolicy(
+        block=args.block or _rec.GuardPolicy.block, snapshot_every=1)
+    srv = SimServer(
+        host=args.host, port=args.port, slots=args.slots,
+        queue=args.queue, policy=policy,
+        checkpoint_dir=args.checkpoint,
+    )
+    # SIGTERM/SIGINT -> graceful drain: stop admitting, checkpoint
+    # in-flight lanes, answer RETRY_AFTER, exit 0
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda *_: srv.request_drain())
+    if args.case:
+        srv.prewarm(args.case, n=args.n, ds=args.ds)
+    print(f"# serving on {srv.host}:{srv.port} slots={srv.slots} "
+          f"queue={srv.queue_cap} block={policy.block}"
+          + (f" checkpoint={args.checkpoint}" if args.checkpoint else "")
+          + (f" predecessor={srv.predecessor}" if srv.predecessor else ""),
+          flush=True)
+    srv.serve_forever()
+    print("# drained cleanly", flush=True)
+    return 0
+
+
+def cmd_request(args) -> int:
+    from repro.sph import client
+
+    req: dict = {"case": args.case, "observe": args.observe}
+    if args.resume_token:
+        req = {"resume_token": args.resume_token}
+    if args.nsteps is not None:
+        req["nsteps"] = args.nsteps
+    if args.n is not None:
+        req["n"] = args.n
+    if args.ds is not None:
+        req["ds"] = args.ds
+    if args.deadline_s is not None:
+        req["deadline_s"] = args.deadline_s
+    if args.inject is not None:
+        req["inject"] = {"kind": args.inject}
+    frames, term = client.run_request(
+        args.host, args.port, req, timeout=args.timeout)
+    for f in frames:
+        print(json.dumps(f))
+    if term is None:
+        print("# connection closed without a terminal reply",
+              file=sys.stderr)
+        return 1
+    return 0 if term.get("type") in ("done", "stats") else 1
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.sph")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -298,6 +403,9 @@ def main(argv=None) -> int:
                     help="arm a named fault (implies --guard)")
     rp.add_argument("--set", action="append", metavar="FIELD=VALUE",
                     help="override any case dataclass field")
+    rp.add_argument("--json", action="store_true",
+                    help="machine-readable output: one JSON document "
+                    "(schema repro.sph.run/1) instead of the table")
     rp.set_defaults(fn=cmd_run)
 
     sp = sub.add_parser(
@@ -346,7 +454,62 @@ def main(argv=None) -> int:
                     help="override any case dataclass field")
     sp.set_defaults(fn=cmd_sweep)
 
+    vp = sub.add_parser(
+        "serve",
+        help="online simulation service: live-batch lane admission "
+        "over a socket",
+    )
+    vp.add_argument("case", nargs="?", default=None,
+                    choices=cases_lib.case_names(),
+                    help="optional case to prewarm (build + compile "
+                    "one block before the first request)")
+    vp.add_argument("--host", default="127.0.0.1")
+    vp.add_argument("--port", type=int, default=7853,
+                    help="listen port; 0 picks a free one (default 7853)")
+    vp.add_argument("--slots", type=int, default=8,
+                    help="lanes per shape bucket (default 8)")
+    vp.add_argument("--queue", type=int, default=32,
+                    help="admission queue bound; a full queue answers "
+                    "REJECTED busy (default 32)")
+    vp.add_argument("--block", type=int, default=None,
+                    help="engine block length / streaming granularity "
+                    "(default: policy's 32)")
+    vp.add_argument("--checkpoint", default=None, metavar="DIR",
+                    help="drain checkpoints + heartbeat under DIR "
+                    "(enables RETRY_AFTER resume tokens)")
+    vp.add_argument("--ds", type=float, default=None,
+                    help="prewarm resolution (spacing)")
+    vp.add_argument("--n", type=int, default=None,
+                    help="prewarm resolution (target fluid count)")
+    vp.set_defaults(fn=cmd_serve)
+
+    qp = sub.add_parser(
+        "request",
+        help="send one request to a running serve endpoint and print "
+        "the reply frames as JSON lines",
+    )
+    qp.add_argument("case", nargs="?", default=None,
+                    choices=cases_lib.case_names())
+    qp.add_argument("--host", default="127.0.0.1")
+    qp.add_argument("--port", type=int, default=7853)
+    qp.add_argument("--nsteps", type=int, default=None)
+    qp.add_argument("--n", type=int, default=None)
+    qp.add_argument("--ds", type=float, default=None)
+    qp.add_argument("--observe", action="store_true",
+                    help="stream per-block observable frames")
+    qp.add_argument("--deadline-s", type=float, default=None)
+    qp.add_argument("--inject", default=None, choices=["nan", "teleport"],
+                    help="poison the request (server answers DIVERGED "
+                    "after its lane-masked ladder is exhausted)")
+    qp.add_argument("--resume-token", default=None,
+                    help="resume drained work from a RETRY_AFTER token")
+    qp.add_argument("--timeout", type=float, default=300.0)
+    qp.set_defaults(fn=cmd_request)
+
     args = ap.parse_args(argv)
+    if getattr(args, "fn", None) is cmd_request and not (
+            args.case or args.resume_token):
+        qp.error("request wants a case or --resume-token")
     return args.fn(args)
 
 

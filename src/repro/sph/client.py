@@ -1,0 +1,47 @@
+"""Client helper for the ``repro.sph serve`` endpoint.
+
+One request per connection: :func:`request` opens a socket, sends the
+request frame, and yields reply frames until a TERMINAL frame arrives
+(done / diverged / timeout / retry_after / rejected / error);
+:func:`run_request` collects them and returns ``(frames, terminal)``.
+The CLI's ``python -m repro.sph request`` subcommand and the latency
+benchmark both sit on these.
+"""
+from __future__ import annotations
+
+import socket
+
+from repro.sph.serve import decode_state, recv_frame, send_frame
+
+TERMINAL = frozenset({"done", "diverged", "timeout", "retry_after",
+                      "rejected", "error", "stats"})
+
+
+def request(host: str, port: int, req: dict, *, timeout: float = 300.0):
+    """Generator of reply frames for one request; stops after the
+    terminal frame (or on EOF — a server killed without drain)."""
+    with socket.create_connection((host, port), timeout=timeout) as sock:
+        send_frame(sock, req)
+        while True:
+            frame = recv_frame(sock)
+            if frame is None:
+                return
+            yield frame
+            if frame.get("type") in TERMINAL:
+                return
+
+
+def run_request(host: str, port: int, req: dict, *,
+                timeout: float = 300.0) -> tuple[list, dict | None]:
+    """All frames + the terminal frame (None if the connection died
+    before one arrived)."""
+    frames = list(request(host, port, req, timeout=timeout))
+    last = frames[-1] if frames else None
+    return frames, (last if last and last.get("type") in TERMINAL else None)
+
+
+def final_state(done_frame: dict) -> dict:
+    """Flat {path: array} dict of a DONE frame's ``state_npz`` payload
+    (requested via ``return_state``) — bit-exact against the flattened
+    solo-run state."""
+    return decode_state(done_frame["state_npz"])

@@ -1,11 +1,17 @@
 """Checkpoint manager: atomicity, GC, async, reshard, carry resume."""
+import json
 import os
+import subprocess
+import sys
+
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
 
 import faults
-from repro.checkpoint.manager import CheckpointManager, reshard
+from repro.checkpoint.manager import (
+    CheckpointLockError, CheckpointManager, reshard)
 from repro.core import solver
 from repro.optim import adamw
 
@@ -202,3 +208,61 @@ def test_async_save_error_surfaces_on_wait(tmp_path, monkeypatch):
         raise AssertionError("async save error must surface on wait()")
     # the error is consumed: a second wait() is clean
     mgr.wait()
+
+
+# ---- directory lockfile ----------------------------------------------------
+
+def test_lock_conflict_with_live_foreign_owner(tmp_path):
+    """A second writer on a directory held by a LIVE process gets the
+    structured conflict error (owner pid attached), not silent
+    interleaved saves."""
+    proc = subprocess.Popen([sys.executable, "-c",
+                             "import time; time.sleep(60)"])
+    try:
+        with open(tmp_path / ".lock", "w") as f:
+            json.dump({"pid": proc.pid, "t": 0.0}, f)
+        with pytest.raises(CheckpointLockError) as exc:
+            CheckpointManager(str(tmp_path))
+        assert exc.value.owner_pid == proc.pid
+        assert str(tmp_path) in str(exc.value)
+    finally:
+        proc.kill()
+        proc.wait()
+
+
+def test_lock_dead_owner_reclaimed(tmp_path, rng):
+    """A crashed writer must not brick its directory: a lock held by a
+    DEAD pid is reclaimed (with a warning) and the directory works."""
+    proc = subprocess.Popen([sys.executable, "-c", "pass"])
+    proc.wait()  # reaped: the pid is dead
+    with open(tmp_path / ".lock", "w") as f:
+        json.dump({"pid": proc.pid, "t": 0.0}, f)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(rng))
+    assert mgr.all_steps() == [1]
+    with open(tmp_path / ".lock") as f:
+        assert json.load(f)["pid"] == os.getpid()
+    mgr.close()
+
+
+def test_lock_reentrant_same_process_and_close_releases(tmp_path, rng):
+    """Same-process reopen adopts the lock (per-bucket managers under
+    one root); close() releases it for the next process."""
+    mgr1 = CheckpointManager(str(tmp_path))
+    mgr2 = CheckpointManager(str(tmp_path))  # adopt, no conflict
+    mgr2.save(1, _tree(rng))
+    mgr1.close()
+    mgr2.close()
+    assert not os.path.exists(tmp_path / ".lock")
+    # released: a fresh open takes the lock cleanly
+    CheckpointManager(str(tmp_path)).close()
+
+
+def test_lock_torn_unreadable_lockfile_reclaimed(tmp_path):
+    """A torn lock write by a dying owner reads as dead after a beat —
+    the directory is reclaimed, not bricked."""
+    with open(tmp_path / ".lock", "w") as f:
+        f.write("{pid: 12")  # not JSON
+    mgr = CheckpointManager(str(tmp_path))
+    assert os.path.exists(tmp_path / ".lock")
+    mgr.close()

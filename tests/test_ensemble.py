@@ -136,6 +136,87 @@ class TestEnsembleCore:
                 dataclasses.replace(cfg, rebuild_every=5), policy)
 
 
+class TestLaneEngine:
+    """Lane retirement edge cases (satellite): slots are freed and
+    reused mid-sweep without perturbing live neighbors, and a slot
+    previously occupied by a quarantined lane hands its next tenant a
+    clean carry."""
+
+    def test_mid_sweep_completion_frees_lane_neighbors_bit_exact(self):
+        """A member finishing mid-sweep retires its lane while two
+        longer neighbors keep running; a NEW request re-admitted into
+        the freed slot runs next to them. Every final state — early
+        finisher, both neighbors, and the late tenant — bit-matches its
+        own solo run, so neither retirement nor the admission splice
+        perturbed anyone."""
+        cfg, st = faults.lattice()
+        policy = recovery.GuardPolicy(block=8, snapshot_every=1)
+        eng = ensemble.LaneEngine(cfg, slots=3, policy=policy)
+        s = _members(cfg, st, 4)
+        owner = {eng.admit(s[0], 16): 0,
+                 eng.admit(s[1], 32): 1,
+                 eng.admit(s[2], 32): 2}
+        assert eng.free_lanes == []
+        finals, readmitted = {}, False
+        for _ in range(16):
+            if not eng.live_lanes:
+                break
+            for ev in eng.step_block():
+                if ev.kind != "done":
+                    continue
+                finals[owner.pop(ev.lane)] = ev.state
+                if not readmitted:
+                    # the early finisher freed its slot mid-sweep...
+                    assert ev.lane in eng.free_lanes
+                    assert len(eng.live_lanes) == 2
+                    # ...and the replacement lands in that same slot
+                    lane = eng.admit(s[3], 16)
+                    assert lane == ev.lane
+                    owner[lane] = 3
+                    readmitted = True
+        assert readmitted
+        assert set(finals) == {0, 1, 2, 3}
+        for idx, nsteps in ((0, 16), (1, 32), (2, 32), (3, 16)):
+            assert _bitmatch(finals[idx], _solo(eng.cfg, s[idx], nsteps)), idx
+
+    def test_readmission_after_quarantine_starts_from_clean_carry(self):
+        """slots=1: a poisoned non-disarmable request burns through dt
+        backoff into quarantine (structured diverged event, slot
+        freed). The next tenant of that same slot must start from a
+        clean carry — its final state bit-matches a solo run, proving
+        no NaN rows or lane bookkeeping leaked from the quarantined
+        occupant."""
+        cfg, st = faults.lattice()
+        policy = recovery.GuardPolicy(
+            block=8, snapshot_every=1, max_dt_halvings=1)
+        eng = ensemble.LaneEngine(cfg, slots=1, policy=policy)
+        s = _members(cfg, st, 2)
+        fault = health.FaultSpec("nan_v", step=4)
+        assert eng.admit(s[0], 16, fault=fault, disarmable=False) == 0
+        diverged = None
+        for _ in range(8):
+            for ev in eng.step_block():
+                if ev.kind == "diverged":
+                    diverged = ev
+            if diverged is not None:
+                break
+        assert diverged is not None
+        assert "nan_v" in diverged.checks
+        assert [e.action for e in diverged.events] == \
+            ["halve_dt", "quarantine"]
+        assert eng.free_lanes == [0]
+        # same slot, clean tenant
+        assert eng.admit(s[1], 16) == 0
+        done = []
+        for _ in range(8):
+            done += [e for e in eng.step_block() if e.kind == "done"]
+            if not eng.live_lanes:
+                break
+        assert len(done) == 1 and done[0].lane == 0
+        assert done[0].events == []  # no ladder activity for the tenant
+        assert _bitmatch(done[0].state, _solo(eng.cfg, s[1], 16))
+
+
 class TestDurability:
     def test_kill_resume_with_torn_checkpoint_bit_identical(self, tmp_path):
         """ISSUE acceptance: simulate a SIGKILL mid-sweep (partial run,
@@ -176,6 +257,8 @@ class TestDurability:
             assert _bitmatch(a, b)
 
     def test_dead_process_heartbeat_detected_on_resume(self, tmp_path):
+        from repro.runtime.fault_tolerance import HeartbeatWriter
+
         cfg, st = faults.lattice()
         policy = recovery.GuardPolicy(block=8)
         mcfg = ensemble.member_config(cfg, policy)
@@ -183,13 +266,23 @@ class TestDurability:
         mgr = CheckpointManager(str(tmp_path), keep=0)
         ensemble.run_ensemble(
             mcfg, states, 8, policy, checkpoint=mgr, checkpoint_every=1)
-        assert os.path.exists(str(tmp_path / "host_0.hb"))
-        time.sleep(0.05)
+        # clean exit removes its heartbeat — a later resume must read
+        # "clean predecessor", not mistake it for a dead process
+        assert not os.path.exists(str(tmp_path / "host_0.hb"))
         _, _, rep = ensemble.run_ensemble(
             mcfg, states, 16, policy, checkpoint=mgr, checkpoint_every=1,
             resume=True, heartbeat_timeout_s=0.01)
-        assert rep.dead_process_detected
+        assert not rep.dead_process_detected
+        assert rep.predecessor == "clean"
         assert rep.resumed_from == 1
+        # plant a stale heartbeat: a predecessor that died mid-run
+        HeartbeatWriter(str(tmp_path), 0).beat(123)
+        time.sleep(0.05)
+        _, _, rep = ensemble.run_ensemble(
+            mcfg, states, 24, policy, checkpoint=mgr, checkpoint_every=1,
+            resume=True, heartbeat_timeout_s=0.01)
+        assert rep.dead_process_detected
+        assert rep.predecessor == "dead"
 
 
 class TestSweep:

@@ -1,4 +1,5 @@
 """Fault-tolerance runtime logic."""
+import os
 import time
 
 from repro.runtime.fault_tolerance import (
@@ -22,6 +23,41 @@ def test_heartbeat_timeout(tmp_path):
     mon = HeartbeatMonitor(str(tmp_path), timeout_s=0.05)
     time.sleep(0.1)
     assert mon.dead_hosts(expected=1) == [0]
+
+
+def test_heartbeat_clear_removes_file(tmp_path):
+    """Clean shutdown removes the heartbeat (and any torn .tmp), so a
+    later resume reads "absent" instead of mistaking the clean exit
+    for a dead process. clear() is idempotent."""
+    w = HeartbeatWriter(str(tmp_path), 0)
+    w.beat(7)
+    with open(w.path + ".tmp", "w") as f:
+        f.write("{")  # a torn in-flight write the crash left behind
+    w.clear()
+    assert not os.path.exists(w.path)
+    assert not os.path.exists(w.path + ".tmp")
+    w.clear()  # idempotent: nothing to remove is not an error
+
+
+def test_host_status_tristate(tmp_path):
+    mon = HeartbeatMonitor(str(tmp_path), timeout_s=60)
+    # never started
+    assert mon.host_status(0) == "absent"
+    # fresh beat
+    w = HeartbeatWriter(str(tmp_path), 0)
+    w.beat(1)
+    assert mon.host_status(0) == "alive"
+    # stale beat: the process stopped beating without clear()
+    stale = HeartbeatMonitor(str(tmp_path), timeout_s=0.01)
+    time.sleep(0.05)
+    assert stale.host_status(0) == "dead"
+    # clean shutdown: back to absent, NOT dead
+    w.clear()
+    assert stale.host_status(0) == "absent"
+    # corrupt file (killed mid-write after replace): counts as dead
+    with open(w.path, "w") as f:
+        f.write("{not json")
+    assert mon.host_status(0) == "dead"
 
 
 def test_straggler_watchdog():

@@ -1,0 +1,311 @@
+"""Online simulation service (``sph/serve.py`` + ``sph/client.py``).
+
+The contract under test:
+
+  * e2e over a REAL socket: concurrent requests across multiple shape
+    buckets complete, healthy responses BIT-IDENTICAL to solo
+    ``run_guarded`` runs, a poisoned request answered with a structured
+    DIVERGED reply (its neighbors untouched);
+  * backpressure: a full admission queue answers REJECTED busy, and the
+    shed requests' acceptance does not depend on the engine thread
+    (load-shedding happens in the reader);
+  * malformed frames answer structured ERROR without reaching the
+    engine;
+  * deadlines cancel overdue lanes with a TIMEOUT reply;
+  * SIGTERM drain hands out resume tokens honored by a RESTARTED server
+    (subprocess test: real signal, real processes, bit-exact
+    continuation to completion).
+"""
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import _flatten
+from repro.core import ensemble, recovery
+from repro.core.api import Simulation
+from repro.core.cases import resolve_ds
+from repro.sph import client
+from repro.sph.serve import SimServer, send_frame, recv_frame
+
+BLOCK = 8
+POLICY = recovery.GuardPolicy(block=BLOCK, snapshot_every=1)
+
+
+def _server(**kw):
+    kw.setdefault("slots", 4)
+    kw.setdefault("queue", 16)
+    kw.setdefault("policy", POLICY)
+    return SimServer(**kw)
+
+
+def _solo_state(n: int, nsteps: int):
+    """The reference a healthy serve reply must bit-match: a solo
+    guarded run under the engine's member config."""
+    sim = Simulation.from_case(
+        "taylor_green", ds=resolve_ds("taylor_green", n))
+    mcfg = ensemble.member_config(sim.cfg, POLICY)
+    state, _, report, _ = recovery.run_guarded(
+        mcfg, sim.state, nsteps, POLICY)
+    assert not report.recovered  # the oracle itself must stay clean
+    return state
+
+
+class TestE2E:
+    def test_concurrent_buckets_poisoned_member_bit_identity(self):
+        """8 concurrent requests, 2 shape buckets, 1 poisoned: every
+        healthy reply bit-matches its solo run, the poisoned one gets a
+        structured DIVERGED, and lane reuse never cross-contaminates."""
+        srv = _server().start()
+        reqs = []
+        for i in range(4):  # bucket A: n=100
+            reqs.append({"case": "taylor_green", "n": 100, "nsteps": 16,
+                         "return_state": True, "request_id": f"a{i}"})
+        for i in range(3):  # bucket B: n=150 (different shapes)
+            reqs.append({"case": "taylor_green", "n": 150, "nsteps": 16,
+                         "return_state": True, "request_id": f"b{i}"})
+        reqs.append({"case": "taylor_green", "n": 100, "nsteps": 16,
+                     "inject": {"kind": "nan", "step": 3},
+                     "request_id": "poison"})
+        results = {}
+
+        def fire(req):
+            _, term = client.run_request(
+                "127.0.0.1", srv.port, req, timeout=600.0)
+            results[req["request_id"]] = term
+
+        threads = [threading.Thread(target=fire, args=(r,)) for r in reqs]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(600)
+        srv.request_drain()
+        srv.join(60)
+
+        assert len(results) == 8
+        poisoned = results.pop("poison")
+        assert poisoned["type"] == "diverged"
+        assert "nan_v" in poisoned["checks"]
+        assert poisoned["stats"]["bad_v"] > 0
+        # the ladder ran its masked rungs before giving up
+        actions = [e["action"] for e in poisoned["events"]]
+        assert "halve_dt" in actions and actions[-1] == "quarantine"
+
+        assert all(t["type"] == "done" for t in results.values())
+        for n, prefix in ((100, "a"), (150, "b")):
+            want = {k: np.asarray(v)
+                    for k, v in _flatten(_solo_state(n, 16)).items()}
+            for rid in (r for r in results if r.startswith(prefix)):
+                got = client.final_state(results[rid])
+                assert set(got) == set(want), rid
+                for k in want:
+                    assert np.array_equal(got[k], want[k]), (rid, k)
+
+    def test_streamed_observables_and_events(self):
+        srv = _server().start()
+        frames, term = client.run_request(
+            "127.0.0.1", srv.port,
+            {"case": "taylor_green", "n": 100, "nsteps": 24,
+             "observe": True}, timeout=600.0)
+        srv.request_drain()
+        srv.join(60)
+        kinds = [f["type"] for f in frames]
+        assert kinds[0] == "accepted"
+        assert term["type"] == "done" and term["steps"] == 24
+        obs = [f for f in frames if f["type"] == "obs"]
+        # 24 steps / block 8 = 3 block boundaries; the last one is the
+        # DONE frame (which carries its own obs row), so 2 OBS frames
+        assert [f["step"] for f in obs] == [8, 16]
+        assert all(np.isfinite(f["ekin"]) for f in obs)
+        assert np.isfinite(term["obs"]["ekin"])
+
+    def test_nsteps_rounded_up_to_whole_blocks(self):
+        srv = _server().start()
+        frames, term = client.run_request(
+            "127.0.0.1", srv.port,
+            {"case": "taylor_green", "n": 100, "nsteps": 9},
+            timeout=600.0)
+        srv.request_drain()
+        srv.join(60)
+        assert frames[0]["nsteps"] == 16  # 9 -> 2 blocks of 8
+        assert term["type"] == "done" and term["steps"] == 16
+
+
+class TestRobustness:
+    def test_queue_overflow_rejected_busy(self):
+        """Load shedding is the READER's job: with the engine loop not
+        yet running nothing drains the queue, so the (queue+1)-th
+        concurrent request must be rejected — deterministically. The
+        late-started engine then completes the queued ones (admission
+        backlog survives a slow engine)."""
+        srv = _server(slots=2, queue=2)  # NOT started yet
+        results = []
+
+        def fire(i):
+            _, term = client.run_request(
+                "127.0.0.1", srv.port,
+                {"case": "taylor_green", "n": 100, "nsteps": 8,
+                 "request_id": f"q{i}"}, timeout=600.0)
+            results.append(term)
+
+        threads = [threading.Thread(target=fire, args=(i,))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        # all three frames are enqueued/rejected without any engine
+        deadline = time.monotonic() + 10
+        while len(srv.pending) < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert len(srv.pending) == 2
+        srv.start()
+        for t in threads:
+            t.join(600)
+        srv.request_drain()
+        srv.join(60)
+        kinds = sorted(t["type"] for t in results)
+        assert kinds == ["done", "done", "rejected"]
+        rej = next(t for t in results if t["type"] == "rejected")
+        assert rej["reason"] == "busy" and rej["queue"] == 2
+
+    def test_malformed_requests_structured_error(self):
+        srv = _server().start()
+        try:
+            for bad, expect in (
+                ({"case": "no_such_case"}, "unknown case"),
+                ({"case": "taylor_green", "nsteps": 0}, "nsteps"),
+                ({"case": "taylor_green",
+                  "inject": {"kind": "meteor"}}, "inject"),
+                ([1, 2, 3], "JSON object"),
+            ):
+                with socket.create_connection(
+                        ("127.0.0.1", srv.port), timeout=30) as s:
+                    send_frame(s, bad)
+                    reply = recv_frame(s)
+                assert reply["type"] == "error", bad
+                assert reply["reason"] == "malformed"
+                assert expect in reply["detail"]
+            # a non-JSON frame must not crash the reader either
+            with socket.create_connection(
+                    ("127.0.0.1", srv.port), timeout=30) as s:
+                s.sendall(b"\x00\x00\x00\x02{x")
+                reply = recv_frame(s)
+            assert reply["type"] == "error"
+            # the server is still alive and serving
+            _, term = client.run_request(
+                "127.0.0.1", srv.port,
+                {"case": "taylor_green", "n": 100, "nsteps": 8},
+                timeout=600.0)
+            assert term["type"] == "done"
+        finally:
+            srv.request_drain()
+            srv.join(60)
+
+    def test_deadline_timeout_cancels_lane(self):
+        # slots=1: the follow-up request can only complete if the
+        # timed-out lane was actually retired and its slot freed
+        srv = _server(slots=1).start()
+        t0 = time.monotonic()
+        _, term = client.run_request(
+            "127.0.0.1", srv.port,
+            {"case": "poiseuille", "n": 400, "nsteps": 800_000,
+             "deadline_s": 1.5}, timeout=600.0)
+        elapsed = time.monotonic() - t0
+        assert term["type"] == "timeout"
+        assert elapsed < 300  # cancelled, not run to completion
+        _, term = client.run_request(
+            "127.0.0.1", srv.port,
+            {"case": "poiseuille", "n": 400, "nsteps": 8},
+            timeout=600.0)
+        assert term["type"] == "done"
+        srv.request_drain()
+        srv.join(60)
+
+    def test_unknown_resume_token_structured_error(self, tmp_path):
+        srv = _server(checkpoint_dir=str(tmp_path)).start()
+        _, term = client.run_request(
+            "127.0.0.1", srv.port, {"resume_token": "deadbeef"},
+            timeout=60.0)
+        srv.request_drain()
+        srv.join(60)
+        assert term["type"] == "error" and term["reason"] == "bad_token"
+
+    def test_stats_op(self):
+        srv = _server().start()
+        _, term = client.run_request(
+            "127.0.0.1", srv.port, {"op": "stats"}, timeout=60.0)
+        srv.request_drain()
+        srv.join(60)
+        assert term["type"] == "stats"
+        assert term["queue_cap"] == 16 and term["draining"] is False
+
+
+@pytest.mark.slow
+class TestDrain:
+    def test_sigterm_drain_restart_resumes_to_completion(self, tmp_path):
+        """Real processes, real SIGTERM: the drained server checkpoints
+        the in-flight lane and hands out a resume token; a RESTARTED
+        server finishes the work from the checkpoint."""
+        env = {**os.environ,
+               "PYTHONPATH": os.path.join(os.path.dirname(__file__),
+                                          "..", "src")}
+        ckdir = str(tmp_path / "ck")
+
+        def start_server():
+            p = subprocess.Popen(
+                [sys.executable, "-m", "repro.sph", "serve",
+                 "--port", "0", "--slots", "2", "--queue", "4",
+                 "--block", "8", "--checkpoint", ckdir],
+                env=env, stdout=subprocess.PIPE,
+                stderr=subprocess.STDOUT, text=True)
+            for line in p.stdout:
+                if line.startswith("# serving on"):
+                    return p, int(line.split()[3].split(":")[1])
+            raise AssertionError("server never printed its banner")
+
+        srv, port = start_server()
+        long_req = subprocess.Popen(
+            [sys.executable, "-m", "repro.sph", "request",
+             "--port", str(port), "poiseuille", "--n", "400",
+             "--nsteps", "4000"],
+            env=env, stdout=subprocess.PIPE, text=True)
+        # wait until the lane has made some (but not all) progress —
+        # the stats op reports live-lane step counts
+        deadline = time.monotonic() + 300
+        while time.monotonic() < deadline:
+            _, st = client.run_request(
+                "127.0.0.1", port, {"op": "stats"}, timeout=30.0)
+            if st and any(s > 0 for s in st.get("live_steps", [])):
+                break
+            time.sleep(0.5)
+        else:
+            raise AssertionError("lane never made progress")
+        srv.send_signal(signal.SIGTERM)
+        out, _ = long_req.communicate(timeout=120)
+        frames = [json.loads(line) for line in out.splitlines()]
+        term = frames[-1]
+        assert term["type"] == "retry_after"
+        token = term["token"]
+        assert token and 0 < term["steps_done"] < 4000
+        assert srv.wait(timeout=60) == 0  # drained cleanly, exit 0
+        # clean drain removed the heartbeat
+        assert not os.path.exists(os.path.join(ckdir, "host_0.hb"))
+
+        srv2, port2 = start_server()
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.sph", "request",
+             "--port", str(port2), "--resume-token", token,
+             "--timeout", "600"],
+            env=env, capture_output=True, text=True, timeout=600)
+        frames = [json.loads(line) for line in r.stdout.splitlines()]
+        assert frames[-1]["type"] == "done", frames[-1]
+        assert frames[-1]["steps"] == 4000
+        assert r.returncode == 0
+        srv2.send_signal(signal.SIGTERM)
+        assert srv2.wait(timeout=60) == 0
