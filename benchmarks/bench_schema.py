@@ -1,0 +1,129 @@
+"""Schema validation for BENCH_nnps.json run records.
+
+``compare_bench --candidate`` diffs a fresh record against history by
+``(case, backend, records, …)`` key — a malformed row (typo'd field,
+string-valued metric, missing ``cases`` list) silently matches nothing
+and the regression check degrades to "nothing to compare". This module
+makes that failure LOUD: :func:`validate_record` returns a list of
+human-readable problems and compare_bench exits 2 when a candidate
+fails.
+
+Hand-rolled on purpose (stdlib only — no jsonschema dependency) and
+deliberately permissive about EXTRA keys: benchmarks grow new columns
+every few PRs, and the validator's job is catching malformed rows, not
+freezing the schema.
+"""
+from __future__ import annotations
+
+import numbers
+
+#: Labels a record may carry; absent label means the oldest benchmark
+#: (nnps_throughput's "rebuild_round") per compare_bench._label.
+KNOWN_LABELS = (
+    "rebuild_round", "fused_force", "half_records", "health_guard",
+    "ensemble", "serve",
+)
+
+#: Per-label REQUIRED per-case-row metrics: the columns compare_bench
+#: actually diffs. A row missing its label's metric can never flag a
+#: regression, so it is malformed by definition.
+ROW_REQUIRED = {
+    "rebuild_round": ("steps_per_sec", "nsteps"),
+    "fused_force": ("steps_per_sec", "nsteps"),
+    "half_records": ("steps_per_sec", "nsteps", "records"),
+    "health_guard": ("steps_per_sec", "guarded"),
+    "ensemble": ("sims_per_sec", "mode", "batch"),
+    "serve": ("sims_per_sec", "p95_latency_ms", "concurrency", "slots"),
+}
+
+#: Fields that must be numeric when present, across every label.
+NUMERIC_FIELDS = (
+    "steps_per_sec", "sims_per_sec", "physics_ms_per_step", "rebuild_ms",
+    "p50_latency_ms", "p95_latency_ms", "nsteps", "n_target",
+    "n_particles", "max_neighbors", "skin", "skin_frac_hc", "rebuilds",
+    "rebuild_frequency", "wall_s", "batch", "block", "concurrency",
+    "slots", "queue", "completed", "rejected", "cpu_count",
+    "hbm_model_bytes_per_step_gather", "hbm_model_bytes_per_step_fused",
+)
+
+#: Throughput/latency metrics that must additionally be positive.
+POSITIVE_FIELDS = ("steps_per_sec", "sims_per_sec", "p95_latency_ms",
+                   "nsteps")
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, numbers.Real) and not isinstance(v, bool)
+
+
+def validate_row(row, label: str, where: str) -> list[str]:
+    problems: list[str] = []
+    if not isinstance(row, dict):
+        return [f"{where}: case row is {type(row).__name__}, not an object"]
+    for field in ROW_REQUIRED.get(label, ()):
+        if field not in row:
+            problems.append(
+                f"{where}: {label!r} row missing required field "
+                f"{field!r}"
+            )
+    for field in NUMERIC_FIELDS:
+        if field in row and not _is_num(row[field]):
+            problems.append(
+                f"{where}: field {field!r} must be numeric, got "
+                f"{type(row[field]).__name__} ({row[field]!r})"
+            )
+    for field in POSITIVE_FIELDS:
+        if field in row and _is_num(row[field]) and row[field] <= 0:
+            problems.append(
+                f"{where}: field {field!r} must be positive, got "
+                f"{row[field]!r}"
+            )
+    if "backend" in row and not isinstance(row["backend"], str):
+        problems.append(f"{where}: 'backend' must be a string")
+    if "case" in row and row["case"] is not None \
+            and not isinstance(row["case"], str):
+        problems.append(f"{where}: 'case' must be a string")
+    return problems
+
+
+def validate_record(record, where: str = "record") -> list[str]:
+    """All schema problems in one BENCH run record ([] = valid)."""
+    if not isinstance(record, dict):
+        return [f"{where}: record is {type(record).__name__}, not an "
+                "object"]
+    problems: list[str] = []
+    label = record.get("label", "rebuild_round")
+    if not isinstance(label, str) or label not in KNOWN_LABELS:
+        problems.append(
+            f"{where}: unknown label {label!r} (known: "
+            f"{', '.join(KNOWN_LABELS)})"
+        )
+        label = "rebuild_round"
+    cases = record.get("cases")
+    if not isinstance(cases, list) or not cases:
+        problems.append(
+            f"{where}: 'cases' must be a non-empty list "
+            f"(got {type(cases).__name__})"
+        )
+        cases = []
+    for i, row in enumerate(cases):
+        problems.extend(validate_row(row, label, f"{where}.cases[{i}]"))
+    if label == "health_guard":
+        frac = record.get("guard_overhead_frac")
+        if frac is not None and (
+            not isinstance(frac, dict)
+            or not all(_is_num(v) for v in frac.values())
+        ):
+            problems.append(
+                f"{where}: 'guard_overhead_frac' must map tier -> number"
+            )
+    return problems
+
+
+def validate_history(history) -> list[str]:
+    """Validate a whole BENCH history list."""
+    if not isinstance(history, list):
+        return [f"history is {type(history).__name__}, not a list"]
+    problems: list[str] = []
+    for i, rec in enumerate(history):
+        problems.extend(validate_record(rec, where=f"history[{i}]"))
+    return problems

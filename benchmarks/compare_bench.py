@@ -24,7 +24,8 @@ records, skin_frac_hc, guarded) and flagging, beyond ``--threshold``
     every tier — this one needs no history and flags even the first
     record.
 
-Exit status: 1 if any regression was flagged, else 0. CI runs this as a
+Exit status: 1 if any regression was flagged, 2 if a ``--candidate``
+record fails ``bench_schema`` validation, else 0. CI runs this as a
 NON-blocking step (``continue-on-error``): CPU runner timings are noisy
 — the flag is a prompt to look, not a gate.
 
@@ -36,6 +37,11 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+try:
+    from benchmarks.bench_schema import validate_record
+except ImportError:  # invoked as a script from benchmarks/
+    from bench_schema import validate_record
 
 
 def _case_key(case: dict) -> tuple:
@@ -133,6 +139,15 @@ def main(argv=None) -> int:
     if args.candidate:
         with open(args.candidate) as f:
             new = json.load(f)
+        problems = validate_record(new, where=args.candidate)
+        if problems:
+            # a malformed candidate silently matches no history rows and
+            # the regression check degrades to a no-op — fail loudly
+            print(f"compare_bench: candidate record failed schema "
+                  f"validation ({len(problems)} problem(s)):")
+            for p in problems:
+                print(f"  {p}")
+            return 2
         matches = [r for r in history if _label(r) == _label(new)]
     else:
         if len(history) < 2:

@@ -22,6 +22,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import NNPS_STORE
+
 Array = jnp.ndarray
 
 
@@ -61,7 +63,7 @@ def encode(
     *,
     block: int,
     axis: int = -1,
-    dtype=jnp.float16,
+    dtype=NNPS_STORE,
     eps: float = 1e-30,
 ) -> Anchored:
     """Encode x into anchor + scaled low-precision residual.

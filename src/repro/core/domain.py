@@ -24,6 +24,8 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.precision import NNPS_STORE
+
 Array = jnp.ndarray
 
 
@@ -154,7 +156,7 @@ class Domain:
         return org + (cell_coords.astype(dtype) + 0.5) * hc
 
     def to_relative(
-        self, xn: Array, cell_coords: Array, dtype=jnp.float16
+        self, xn: Array, cell_coords: Array, dtype=NNPS_STORE
     ) -> Array:
         """x = 2 (x' - x'_cc) / h_c (paper Eq. 6); result nominally in [-1,1].
 

@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core import cells as cells_lib
 from repro.core.domain import Domain
+from repro.core.precision import NNPS_STORE
 
 Array = jnp.ndarray
 
@@ -276,7 +277,7 @@ def rcll_r2_cell_units(
     cell_delta: Array,
     weights: Array | None = None,
     *,
-    dtype=jnp.float16,
+    dtype=NNPS_STORE,
 ) -> Array:
     """Eq. (7) in reference-cell units from relative coords + cell delta.
 
@@ -311,7 +312,7 @@ def rcll_neighbors(
     rel: Array,
     cell_xy: Array,
     *,
-    dtype=jnp.float16,
+    dtype=NNPS_STORE,
     compute_dtype=None,
     k: int,
     capacity: int | None = None,
@@ -409,7 +410,7 @@ def rcll_neighbors_windows(
     cell_xy: Array,  # (N, d) int32 cell coords, cell-sorted
     counts: Array,  # (C,) int32 per-cell occupancy of the sorted arrays
     *,
-    dtype=jnp.float16,
+    dtype=NNPS_STORE,
     compute_dtype=None,
     k: int,
     window: int,

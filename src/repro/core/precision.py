@@ -24,6 +24,19 @@ DTYPES = {
     "fp16": jnp.float16,
 }
 
+# Canonical storage dtypes. THE sanctioned spellings of the half/full
+# tiers — library code outside this module must use these (or a
+# PrecisionPolicy) instead of jnp.float16/jnp.bfloat16 literals, so that
+# `sphlint check` can prove every precision decision flows through one
+# place. NNPS_STORE is the paper's fp16 coordinate/neighbor storage tier
+# (RCLL relative coordinates live exactly here); HALF_STORE/BF16_STORE
+# are the two 16-bit record layouts of the fused force pass; HIGH_STORE
+# is the TPU high tier (DESIGN.md section 7).
+NNPS_STORE = DTYPES["fp16"]
+HALF_STORE = DTYPES["fp16"]
+BF16_STORE = DTYPES["bf16"]
+HIGH_STORE = DTYPES["fp32"]
+
 
 def dtype_of(name: str):
     try:

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.precision import NNPS_STORE
+
 from repro.core import cells as cells_lib
 from repro.core import nnps
 from repro.core.domain import Domain
@@ -36,7 +38,7 @@ class RCLLState(NamedTuple):
     rel: Array  # (N, d) low-precision storage dtype
 
 
-def init_state(domain: Domain, xn: Array, dtype=jnp.float16) -> RCLLState:
+def init_state(domain: Domain, xn: Array, dtype=NNPS_STORE) -> RCLLState:
     """One-time transform from normalized absolute coordinates (Eqs. 5-6)."""
     cell_xy = domain.cell_coords_of(xn)
     rel = domain.to_relative(xn, cell_xy, dtype=dtype)
@@ -79,7 +81,7 @@ def advance(
     state: RCLLState,
     dxn: Array,
     *,
-    dtype=jnp.float16,
+    dtype=NNPS_STORE,
 ) -> RCLLState:
     """Eq. (8): advance relative coordinates by a *normalized* displacement.
 
@@ -102,7 +104,7 @@ def advance_ef(
     dxn: Array,
     carry: Array,
     *,
-    dtype=jnp.float16,
+    dtype=NNPS_STORE,
 ) -> tuple[RCLLState, Array]:
     """Eq. (8) with error feedback (beyond-paper refinement).
 
@@ -138,7 +140,7 @@ def neighbors(
     domain: Domain,
     state: RCLLState,
     *,
-    dtype=jnp.float16,
+    dtype=NNPS_STORE,
     k: int,
     capacity: int | None = None,
     include_self: bool = False,
@@ -208,7 +210,7 @@ def packed_neighbors(
     domain: Domain,
     pstate: PackedState,
     *,
-    dtype=jnp.float16,
+    dtype=NNPS_STORE,
     compute_dtype=None,
     k: int,
     include_self: bool = False,
@@ -262,7 +264,7 @@ def pair_r2_cell(
     state: RCLLState,
     nl: nnps.NeighborList,
     *,
-    dtype=jnp.float16,
+    dtype=NNPS_STORE,
     compute_dtype=None,
 ) -> Array:
     """Eq. (7) squared pair distances in reference-cell units for ``nl``.

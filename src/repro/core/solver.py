@@ -55,6 +55,7 @@ exercise the fused path with the reference path as the test oracle.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from functools import partial
 from typing import NamedTuple
 
@@ -66,6 +67,8 @@ from repro.core import fused, health, nnps, rcll, sph, statepack
 from repro.core import scheme as scheme_lib
 from repro.core.domain import Domain
 from repro.core.precision import PrecisionPolicy
+
+_log = logging.getLogger(__name__)
 
 Array = jnp.ndarray
 
@@ -618,6 +621,13 @@ def _resolved_records(cfg: SPHConfig) -> str:
     if records != "fp32":
         limit = fused.HALF_CELL_LIMIT.get(jnp.dtype(cfg.policy.records_dtype))
         if limit is not None and max(cfg.domain.ncells) >= limit:
+            # Build-time fallback, loud once per compile (this helper
+            # runs at trace time, not per step).
+            _log.warning(
+                "half-record layout %r disabled: grid %s exceeds the "
+                "%d-cell anchor range; using fp32 records",
+                records, tuple(cfg.domain.ncells), limit,
+            )
             return "fp32"
     return records
 

@@ -22,6 +22,7 @@ from repro.core import cells as cells_lib
 from repro.core import nnps as nnps_lib
 from repro.core import rcll as rcll_lib
 from repro.core.domain import Domain
+from repro.core.precision import NNPS_STORE
 from repro.kernels import nnps_pairwise, rcll_force, sph_gradient
 
 Array = jnp.ndarray
@@ -160,7 +161,7 @@ def rcll_neighbor_lists(
     *,
     k: int,
     radius_cell: float | None = None,
-    nnps_dtype=jnp.float16,
+    nnps_dtype=NNPS_STORE,
     compute_dtype=None,
     interpret: bool | None = None,
 ) -> nnps_lib.NeighborList:
@@ -220,7 +221,7 @@ def rcll_gradient_particles(
     rel: Array,  # (N, d)
     f: Array,  # (N,) f32
     *,
-    nnps_dtype=jnp.float16,
+    nnps_dtype=NNPS_STORE,
     interpret: bool | None = None,
     eps: float = 1e-12,
 ) -> Array:

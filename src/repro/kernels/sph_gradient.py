@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import bspline
+from repro.core.precision import NNPS_STORE
 from repro.kernels import tiling
 
 Array = jnp.ndarray
@@ -101,7 +102,7 @@ def rcll_gradient(
     hc_phys: tuple,
     h: float,
     dim: int,
-    nnps_dtype=jnp.float16,
+    nnps_dtype=NNPS_STORE,
     interpret: bool = True,
 ) -> tuple[Array, Array]:
     """Fused search+gradient: returns (num, den), each (C, d, cap) f32."""

@@ -1,6 +1,7 @@
 """CLI driver for the scenario layer.
 
     python -m repro.sph list [--names]
+    python -m repro.sph lint [check|trace|baseline] [args...]
     python -m repro.sph run <case> [--nsteps N] [--observe-every K]
                                    [--ds DS | --n N_TARGET]
                                    [--backend reference|xla|pallas]
@@ -372,6 +373,24 @@ def cmd_request(args) -> int:
     return 0 if term.get("type") in ("done", "stats") else 1
 
 
+def cmd_lint(args) -> int:
+    # alias for ``python -m tools.sphlint`` so the scenario CLI is the
+    # single entry point; tools/ lives at the repo root, outside the
+    # src/ package tree, so resolve it relative to this file
+    from pathlib import Path
+
+    repo_root = Path(__file__).resolve().parents[3]
+    if not (repo_root / "tools" / "sphlint").is_dir():
+        print("lint: tools/sphlint not found (running from an installed "
+              "package? invoke it from a repo checkout)", file=sys.stderr)
+        return 2
+    if str(repo_root) not in sys.path:
+        sys.path.insert(0, str(repo_root))
+    from tools.sphlint.__main__ import main as sphlint_main
+
+    return sphlint_main(args.sphlint_args or ["check"])
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.sph")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -505,6 +524,17 @@ def main(argv=None) -> int:
                     help="resume drained work from a RETRY_AFTER token")
     qp.add_argument("--timeout", type=float, default=300.0)
     qp.set_defaults(fn=cmd_request)
+
+    tp = sub.add_parser(
+        "lint",
+        help="static trace-hygiene analysis (alias for python -m "
+        "tools.sphlint; args pass through, e.g. "
+        "`lint check src/repro` or `lint trace --backends xla`)",
+    )
+    tp.add_argument("sphlint_args", nargs=argparse.REMAINDER,
+                    help="arguments forwarded to tools.sphlint "
+                    "(default: check)")
+    tp.set_defaults(fn=cmd_lint)
 
     args = ap.parse_args(argv)
     if getattr(args, "fn", None) is cmd_request and not (

@@ -1,0 +1,103 @@
+"""bench_schema: the BENCH record validator gating compare_bench."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from benchmarks.bench_schema import (  # noqa: E402
+    KNOWN_LABELS,
+    validate_history,
+    validate_record,
+)
+from benchmarks.compare_bench import main as compare_main  # noqa: E402
+
+
+def test_shipped_history_validates_clean():
+    hist = json.loads((REPO_ROOT / "BENCH_nnps.json").read_text())
+    assert validate_history(hist) == []
+
+
+def test_non_dict_record_rejected():
+    assert validate_record([1, 2])
+    assert validate_record("nope")
+
+
+def test_unknown_label_rejected():
+    probs = validate_record({"label": "bogus",
+                             "cases": [{"steps_per_sec": 1.0,
+                                        "nsteps": 10}]})
+    assert any("unknown label" in p for p in probs)
+
+
+def test_missing_cases_rejected():
+    assert any("'cases'" in p for p in validate_record({"label": "serve"}))
+    assert any("'cases'" in p
+               for p in validate_record({"label": "serve", "cases": []}))
+
+
+@pytest.mark.parametrize("label,row", [
+    ("rebuild_round", {"steps_per_sec": 5.0, "nsteps": 100}),
+    ("serve", {"sims_per_sec": 2.0, "p95_latency_ms": 30.0,
+               "concurrency": 4, "slots": 2}),
+    ("ensemble", {"sims_per_sec": 2.0, "mode": "batched", "batch": 8}),
+])
+def test_minimal_valid_rows_pass(label, row):
+    assert validate_record({"label": label, "cases": [row]}) == []
+
+
+def test_label_required_metric_enforced():
+    probs = validate_record({"label": "serve",
+                             "cases": [{"steps_per_sec": 5.0}]})
+    assert any("sims_per_sec" in p for p in probs)
+    assert any("p95_latency_ms" in p for p in probs)
+
+
+def test_numeric_and_positive_fields_enforced():
+    probs = validate_record({
+        "label": "rebuild_round",
+        "cases": [{"steps_per_sec": "fast", "nsteps": -3}],
+    })
+    assert any("must be numeric" in p for p in probs)
+    assert any("must be positive" in p for p in probs)
+
+
+def test_extra_keys_tolerated():
+    rec = {"label": "rebuild_round",
+           "cases": [{"steps_per_sec": 5.0, "nsteps": 10,
+                      "brand_new_column": "anything"}],
+           "some_future_field": {"nested": True}}
+    assert validate_record(rec) == []
+
+
+def test_known_labels_cover_shipped_history():
+    hist = json.loads((REPO_ROOT / "BENCH_nnps.json").read_text())
+    for rec in hist:
+        assert rec.get("label", "rebuild_round") in KNOWN_LABELS
+
+
+def test_compare_bench_candidate_exit_2_on_malformed(tmp_path, capsys,
+                                                     monkeypatch):
+    monkeypatch.chdir(REPO_ROOT)
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"label": "rebuild_round",
+                               "cases": [{"steps_per_sec": "fast"}]}))
+    rc = compare_main(["--candidate", str(bad)])
+    out = capsys.readouterr().out
+    assert rc == 2
+    assert "failed schema validation" in out
+
+
+def test_compare_bench_candidate_exit_0_on_valid(tmp_path, capsys,
+                                                 monkeypatch):
+    monkeypatch.chdir(REPO_ROOT)
+    hist = json.loads((REPO_ROOT / "BENCH_nnps.json").read_text())
+    cand = tmp_path / "cand.json"
+    cand.write_text(json.dumps(hist[-1]))
+    rc = compare_main(["--candidate", str(cand)])
+    capsys.readouterr()
+    assert rc == 0

@@ -1,0 +1,70 @@
+"""Hashability contract for the config-family dataclasses.
+
+These classes ride ``jax.jit`` as static arguments and key the
+serve/sweep normalized-config compile caches, so they must be frozen
+with hashable leaves, hash stably, and bucket identically when equal —
+the invariant sphlint's ``static-arg-hashability`` rule enforces
+statically, checked here at runtime.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import cases as cases_lib
+from repro.core.health import FaultSpec
+from repro.core.precision import APPROACHES, PrecisionPolicy
+from repro.core.recovery import GuardPolicy
+from repro.core.scheme import Scheme
+
+
+@pytest.mark.parametrize("name", ["dam_break", "taylor_green"])
+def test_sphconfig_hash_stable_and_bucketed(name):
+    ds = cases_lib.resolve_ds(name, 200)
+    cfg, _ = cases_lib.build_case(name, ds=ds).build()
+    cfg2, _ = cases_lib.build_case(name, ds=ds).build()
+    assert cfg == cfg2
+    assert hash(cfg) == hash(cfg)  # stable across calls
+    assert hash(cfg) == hash(cfg2)  # equal configs, equal hashes
+    bucket = {cfg: "compiled"}
+    assert bucket[cfg2] == "compiled"  # cache hit, not a cache split
+
+
+def test_sphconfig_field_change_changes_equality():
+    ds = cases_lib.resolve_ds("taylor_green", 200)
+    cfg, _ = cases_lib.build_case("taylor_green", ds=ds).build()
+    cfg_b = dataclasses.replace(cfg, dt=cfg.dt * 0.5)
+    assert cfg != cfg_b
+    assert len({cfg: 1, cfg_b: 2}) == 2
+
+
+@pytest.mark.parametrize("obj", [
+    PrecisionPolicy(),
+    *APPROACHES.values(),
+    GuardPolicy(),
+    FaultSpec(kind="nan_v", step=3),
+    Scheme(c0=10.0, rho0=1.0),
+], ids=lambda o: type(o).__name__)
+def test_config_family_is_frozen_and_hashable(obj):
+    assert dataclasses.fields(obj), "expected a dataclass"
+    assert type(obj).__dataclass_params__.frozen
+    assert hash(obj) == hash(obj)
+    clone = dataclasses.replace(obj)
+    assert obj == clone and hash(obj) == hash(clone)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        object.__setattr__  # appease linters; the real check below
+        setattr(obj, dataclasses.fields(obj)[0].name, None)
+
+
+def test_all_config_leaves_hashable():
+    """Every leaf of every shipped config dataclass must be hashable —
+    a list/dict leaf would crash jit static-arg hashing at trace time."""
+    ds = cases_lib.resolve_ds("dam_break", 200)
+    cfg, _ = cases_lib.build_case("dam_break", ds=ds).build()
+
+    def walk(obj, path="cfg"):
+        hash(obj)  # raises TypeError on an unhashable leaf
+        if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+            for f in dataclasses.fields(obj):
+                walk(getattr(obj, f.name), f"{path}.{f.name}")
+
+    walk(cfg)

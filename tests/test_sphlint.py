@@ -1,0 +1,242 @@
+"""sphlint's own test suite: fixture corpus, baseline, CLI, jaxpr audit.
+
+The fixture corpus (tools/sphlint/fixtures/) pairs each rule with a
+minimized replay of the historical incident it encodes (bad_*) and the
+idiomatic fixed form (good_*). The self-check test pins the committed
+baseline to the current tree: new findings AND stale entries both fail.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.sphlint import baseline as bl  # noqa: E402
+from tools.sphlint.__main__ import DEFAULT_PATHS, main  # noqa: E402
+from tools.sphlint.engine import Finding, lint_paths  # noqa: E402
+from tools.sphlint.rules import RULE_NAMES, default_rules  # noqa: E402
+
+FIXTURES = REPO_ROOT / "tools" / "sphlint" / "fixtures"
+
+RULE_FIXTURES = {
+    "dtype-literal": "dtype_literal",
+    "host-sync-in-scan": "host_sync",
+    "cond-under-vmap": "cond_under_vmap",
+    "static-arg-hashability": "static_arg",
+    "donation-alias": "donation_alias",
+    "silent-fallback": "silent_fallback",
+}
+
+
+def _lint(path: Path):
+    return lint_paths([str(path)])
+
+
+# --------------------------------------------------------------------------
+# rule corpus: every rule trips on its incident replay, never on the fix
+# --------------------------------------------------------------------------
+def test_registry_covers_all_fixture_rules():
+    assert set(RULE_FIXTURES) == set(RULE_NAMES)
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_FIXTURES))
+def test_bad_fixture_trips_its_rule(rule):
+    findings = _lint(FIXTURES / f"bad_{RULE_FIXTURES[rule]}.py")
+    assert any(f.rule == rule for f in findings), (
+        f"{rule}: bad fixture produced {[f.rule for f in findings]}"
+    )
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_FIXTURES))
+def test_bad_fixture_trips_only_its_rule(rule):
+    findings = _lint(FIXTURES / f"bad_{RULE_FIXTURES[rule]}.py")
+    assert {f.rule for f in findings} == {rule}
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_FIXTURES))
+def test_good_fixture_is_clean(rule):
+    findings = _lint(FIXTURES / f"good_{RULE_FIXTURES[rule]}.py")
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_pragmas_suppress_findings():
+    findings = _lint(FIXTURES / "pragma_suppressed.py")
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_fixture_dir_excluded_from_directory_sweep():
+    swept = lint_paths([str(FIXTURES.parent)])  # tools/sphlint as a dir
+    assert swept == [], [f.render() for f in swept]
+
+
+def test_severity_all_errors_for_gating_rules():
+    # CI gates on errors; every incident rule must block the merge
+    assert all(r.severity == "error" for r in default_rules())
+
+
+# --------------------------------------------------------------------------
+# baseline semantics: exact match, both directions
+# --------------------------------------------------------------------------
+def _sample_findings():
+    return lint_paths([str(FIXTURES / "bad_dtype_literal.py"),
+                       str(FIXTURES / "bad_silent_fallback.py")])
+
+
+def test_baseline_round_trip(tmp_path):
+    findings = _sample_findings()
+    path = tmp_path / "baseline.json"
+    bl.save(path, findings)
+    loaded = bl.load(path)
+    assert [f.key for f in loaded] == [f.key for f in findings]
+    new, matched, stale = bl.partition(findings, loaded)
+    assert new == [] and stale == [] and len(matched) == len(findings)
+
+
+def test_unbaselined_finding_is_new():
+    findings = _sample_findings()
+    new, matched, stale = bl.partition(findings, findings[1:])
+    assert new == [findings[0]]
+    assert stale == []
+
+
+def test_stale_baseline_entry_is_reported():
+    findings = _sample_findings()
+    ghost = Finding(rule="dtype-literal", path="deleted.py", line=1,
+                    col=0, message="long-gone finding")
+    new, matched, stale = bl.partition(findings, findings + [ghost])
+    assert new == []
+    assert stale == [ghost]
+
+
+def test_baseline_matches_with_multiplicity():
+    f = _sample_findings()[0]
+    new, matched, stale = bl.partition([f, f], [f])
+    assert len(new) == 1 and len(matched) == 1
+
+
+def test_committed_baseline_exactly_matches_tree(monkeypatch):
+    """The shipped tree must lint clean against the shipped baseline —
+    a new finding fails, and so does a stale (already-fixed) entry."""
+    monkeypatch.chdir(REPO_ROOT)
+    base = bl.load(REPO_ROOT / bl.BASELINE_NAME)
+    findings = lint_paths(DEFAULT_PATHS)
+    new, matched, stale = bl.partition(findings, base)
+    assert new == [], [f.render() for f in new]
+    assert stale == [], [f.render() for f in stale]
+
+
+# --------------------------------------------------------------------------
+# CLI exit codes
+# --------------------------------------------------------------------------
+def test_cli_exit_nonzero_on_each_rule(capsys):
+    for rule, stem in sorted(RULE_FIXTURES.items()):
+        rc = main(["check", str(FIXTURES / f"bad_{stem}.py"),
+                   "--no-baseline"])
+        assert rc == 1, f"{rule}: expected exit 1"
+    capsys.readouterr()
+
+
+def test_cli_exit_zero_on_clean_tree(capsys, monkeypatch):
+    monkeypatch.chdir(REPO_ROOT)
+    assert main(["check"]) == 0
+    capsys.readouterr()
+
+
+def test_cli_subtree_check_scopes_baseline(capsys, monkeypatch):
+    """Checking src/repro alone must not report the benchmarks-only
+    baseline entries as stale — the baseline is scoped to linted paths."""
+    monkeypatch.chdir(REPO_ROOT)
+    assert main(["check", "src/repro"]) == 0
+    out = capsys.readouterr()
+    assert "0 stale" in out.out + out.err
+
+
+def test_cli_baseline_regenerates_exactly(tmp_path, capsys, monkeypatch):
+    monkeypatch.chdir(REPO_ROOT)
+    out = tmp_path / "regen.json"
+    assert main(["baseline", "--baseline", str(out)]) == 0
+    committed = json.loads((REPO_ROOT / bl.BASELINE_NAME).read_text())
+    regen = json.loads(out.read_text())
+    assert regen["findings"] == committed["findings"]
+    capsys.readouterr()
+
+
+# --------------------------------------------------------------------------
+# Layer B: the jaxpr auditor's own invariants (no SPH build needed)
+# --------------------------------------------------------------------------
+def test_audit_flags_f16_arithmetic():
+    import jax
+    import jax.numpy as jnp
+
+    from tools.sphlint.trace import audit_jaxpr
+
+    jaxpr = jax.make_jaxpr(lambda x: x * x + x)(
+        jnp.ones((4,), jnp.float16))
+    r = audit_jaxpr(jaxpr, "t")
+    assert r["f16_violations"], r
+
+
+def test_audit_allows_structural_f16():
+    import jax
+    import jax.numpy as jnp
+
+    from tools.sphlint.trace import audit_jaxpr
+
+    def f(x):
+        h = x.astype(jnp.float16)  # convert: allowed
+        g = h[jnp.array([0, 1])]  # gather: allowed
+        return g.reshape(2, 1).astype(jnp.float32) * 2.0
+
+    jaxpr = jax.make_jaxpr(f)(jnp.ones((4,), jnp.float32))
+    r = audit_jaxpr(jaxpr, "t")
+    assert r["f16_violations"] == [], r
+    assert r["census"].get("float16", 0) >= 2
+
+
+def test_audit_finds_f16_arithmetic_inside_scan():
+    import jax
+    import jax.numpy as jnp
+
+    from tools.sphlint.trace import audit_jaxpr
+
+    def f(x):
+        def body(c, _):
+            return c + jnp.float16(1.0), None  # f16 add inside the scan
+
+        return jax.lax.scan(body, x, None, length=3)[0]
+
+    jaxpr = jax.make_jaxpr(f)(jnp.ones((4,), jnp.float16))
+    r = audit_jaxpr(jaxpr, "t")
+    assert any("add" in v for v in r["f16_violations"]), r
+
+
+def test_audit_flags_debug_callback():
+    import jax
+    import jax.numpy as jnp
+
+    from tools.sphlint.trace import audit_jaxpr
+
+    def f(x):
+        jax.debug.print("x = {}", x)
+        return x + 1.0
+
+    jaxpr = jax.make_jaxpr(f)(jnp.ones((4,), jnp.float32))
+    r = audit_jaxpr(jaxpr, "t")
+    assert r["callback_violations"], r
+
+
+def test_audit_census_counts_dtypes():
+    import jax
+    import jax.numpy as jnp
+
+    from tools.sphlint.trace import audit_jaxpr
+
+    jaxpr = jax.make_jaxpr(lambda x: (x + 1.0, (x > 0).astype(jnp.int32)))(
+        jnp.ones((4,), jnp.float32))
+    r = audit_jaxpr(jaxpr, "t")
+    assert r["census"].get("float32", 0) >= 1
+    assert r["census"].get("int32", 0) >= 1

@@ -1,0 +1,18 @@
+"""sphlint — trace-hygiene & mixed-precision static analysis.
+
+Two layers:
+
+* **Layer A** (``sphlint check``): pure-AST rules, no JAX import, fast
+  enough for a pre-commit hook. Every rule is a minimized replay of an
+  incident this repo actually paid for (see ``rules.py`` and the README
+  rule table).
+* **Layer B** (``sphlint trace``): compiles the production step/rebuild
+  programs and audits the jaxprs for the invariants the AST cannot see
+  (fp16-op confinement, in-scan callbacks, donation, buffer aliasing).
+
+Run as ``python -m tools.sphlint [check|trace|baseline]`` from the repo
+root, or via the ``python -m repro.sph lint`` alias.
+"""
+from tools.sphlint.engine import Finding, lint_paths  # noqa: F401
+
+__version__ = "1.0"

@@ -1,0 +1,140 @@
+"""sphlint CLI: ``python -m tools.sphlint {check,trace,baseline}``.
+
+``check``    Layer A — AST rules, stdlib only, <5s, CI-blocking.
+``trace``    Layer B — compile the production programs and audit the
+             jaxprs (imports jax; see ``trace.py``).
+``baseline`` Regenerate ``sphlint_baseline.json`` from current findings.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+DEFAULT_PATHS = ["src/repro", "benchmarks", "tools"]
+
+
+def _repo_root() -> Path:
+    return Path(__file__).resolve().parents[2]
+
+
+def _scope_baseline(base, paths):
+    """Baseline entries under the linted paths only — checking a subtree
+    must not report entries from unlinted siblings as stale."""
+    import os
+
+    prefixes = [os.path.normpath(p) for p in paths]
+    return [
+        f for f in base
+        if any(os.path.normpath(f.path) == p
+               or os.path.normpath(f.path).startswith(p + os.sep)
+               for p in prefixes)
+    ]
+
+
+def cmd_check(args) -> int:
+    from tools.sphlint import baseline as bl
+    from tools.sphlint.engine import lint_paths, render_findings
+
+    t0 = time.perf_counter()
+    paths = args.paths or DEFAULT_PATHS
+    findings = lint_paths(paths)
+    base_path = Path(args.baseline) if args.baseline else \
+        _repo_root() / bl.BASELINE_NAME
+    base = bl.load(base_path) if not args.no_baseline else []
+    base = _scope_baseline(base, paths)
+    new, matched, stale = bl.partition(findings, base)
+    dt = time.perf_counter() - t0
+
+    if new:
+        print(f"sphlint: {len(new)} unbaselined finding(s):",
+              file=sys.stderr)
+        render_findings(new, stream=sys.stderr)
+    if stale:
+        print(f"sphlint: {len(stale)} STALE baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} (finding gone — "
+              f"delete from {base_path.name} or rerun "
+              "`python -m tools.sphlint baseline`):", file=sys.stderr)
+        render_findings(stale, stream=sys.stderr)
+    errors = [f for f in new if f.severity == "error"]
+    status = 1 if (errors or stale) else 0
+    summary = (f"sphlint check: {len(findings)} finding(s) "
+               f"({len(matched)} baselined, {len(new)} new, "
+               f"{len(stale)} stale) in {dt:.2f}s")
+    print(summary, file=sys.stderr if status else sys.stdout)
+    if new and not errors and not stale:
+        print("sphlint: new findings are warnings only — not failing",
+              file=sys.stderr)
+    return status
+
+
+def cmd_baseline(args) -> int:
+    from tools.sphlint import baseline as bl
+    from tools.sphlint.engine import lint_paths
+
+    findings = lint_paths(args.paths or DEFAULT_PATHS)
+    base_path = Path(args.baseline) if args.baseline else \
+        _repo_root() / bl.BASELINE_NAME
+    bl.save(base_path, findings)
+    print(f"sphlint: wrote {len(findings)} finding(s) to {base_path}")
+    return 0
+
+
+def cmd_trace(args) -> int:
+    from tools.sphlint.trace import run_trace_audit
+
+    return run_trace_audit(
+        backends=[b.strip() for b in args.backends.split(",") if b.strip()],
+        cases=[c.strip() for c in args.cases.split(",") if c.strip()],
+        n=args.n,
+        report_path=Path(args.report) if args.report else None,
+        verbose=args.verbose,
+    )
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m tools.sphlint",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    c = sub.add_parser("check", help="run Layer A AST rules")
+    c.add_argument("paths", nargs="*", help=f"files/dirs "
+                   f"(default: {' '.join(DEFAULT_PATHS)})")
+    c.add_argument("--baseline", help="baseline JSON path "
+                   "(default: <repo>/sphlint_baseline.json)")
+    c.add_argument("--no-baseline", action="store_true",
+                   help="report every finding, ignore the baseline")
+    c.set_defaults(fn=cmd_check)
+
+    b = sub.add_parser("baseline",
+                       help="regenerate the committed baseline")
+    b.add_argument("paths", nargs="*")
+    b.add_argument("--baseline", help="output path")
+    b.set_defaults(fn=cmd_baseline)
+
+    t = sub.add_parser("trace", help="Layer B jaxpr audit (imports jax)")
+    t.add_argument("--backends", default="reference,xla,pallas",
+                   help="comma-separated force backends")
+    t.add_argument("--cases", default="dam_break,taylor_green",
+                   help="comma-separated registered cases")
+    t.add_argument("--n", type=int, default=300,
+                   help="particle budget per case (kept tiny: the audit "
+                   "inspects programs, not physics)")
+    t.add_argument("--report", help="write the JSON report here")
+    t.add_argument("--verbose", action="store_true",
+                   help="print per-program dtype census tables")
+    t.set_defaults(fn=cmd_trace)
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,66 @@
+"""Committed-baseline handling for sphlint.
+
+The baseline (``sphlint_baseline.json`` at the repo root) is the list
+of findings the team has triaged and accepted — typically legacy code
+slated for migration rather than new violations. Matching is EXACT and
+symmetric:
+
+* a finding not in the baseline fails the run (new violation);
+* a baseline entry with no matching finding ALSO fails the run (stale
+  baseline — the debt was paid, delete the entry).
+
+``python -m tools.sphlint baseline <paths>`` regenerates the file from
+the current findings; review the diff like any other code change.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from tools.sphlint.engine import Finding
+
+BASELINE_NAME = "sphlint_baseline.json"
+
+
+def load(path: Path) -> list[Finding]:
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    return [Finding.from_json(d) for d in data.get("findings", [])]
+
+
+def save(path: Path, findings: list[Finding]) -> None:
+    payload = {
+        "comment": (
+            "Triaged sphlint findings. Regenerate with "
+            "`python -m tools.sphlint baseline src/repro benchmarks`; "
+            "stale entries fail `sphlint check`."
+        ),
+        "findings": [f.to_json() for f in findings],
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def partition(findings: list[Finding], baseline: list[Finding]):
+    """Split into (new, matched, stale) by exact ``Finding.key``.
+
+    Duplicate keys are matched with multiplicity: two identical
+    findings need two baseline entries.
+    """
+    pool: dict[tuple, int] = {}
+    for b in baseline:
+        pool[b.key] = pool.get(b.key, 0) + 1
+    new: list[Finding] = []
+    matched: list[Finding] = []
+    for f in findings:
+        if pool.get(f.key, 0) > 0:
+            pool[f.key] -= 1
+            matched.append(f)
+        else:
+            new.append(f)
+    stale: list[Finding] = []
+    for b in baseline:
+        if pool.get(b.key, 0) > 0:
+            pool[b.key] -= 1
+            stale.append(b)
+    return new, matched, stale

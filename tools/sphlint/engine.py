@@ -1,0 +1,418 @@
+"""sphlint Layer A engine: AST visitor framework, pragmas, severities.
+
+Deliberately imports NOTHING heavier than the stdlib (no jax, no numpy):
+``sphlint check`` must run in well under 5 seconds so it can gate CI and
+pre-commit without anyone routing around it.
+
+Concepts
+--------
+* A :class:`Rule` inspects one :class:`FileContext` (parsed module +
+  pragma map + shared traced-reachability analysis) and yields
+  :class:`Finding` rows.
+* Inline pragmas suppress findings at source level::
+
+      x = jnp.float16  # sphlint: disable=dtype-literal
+
+  The pragma applies to its own line, or — written on a line of its own
+  — to the line immediately below. A file-level pragma in the first ten
+  lines (``# sphlint: disable-file=rule-a,rule-b``) suppresses a rule
+  for the whole file.
+* Findings that are real but triaged ride the committed baseline
+  (``baseline.py``) instead of pragmas — see the README workflow.
+
+The shared :class:`TraceAnalysis` computes, per module, which local
+functions are reachable from traced contexts (``lax.scan``/``lax.map``
+bodies, ``jax.jit``-decorated functions) and which are reachable from
+``jax.vmap`` — the substrate of the ``host-sync-in-scan`` and
+``cond-under-vmap`` rules.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import re
+import sys
+from pathlib import Path
+
+PRAGMA_RE = re.compile(r"#\s*sphlint:\s*disable=([\w\-,\s]+)")
+PRAGMA_FILE_RE = re.compile(r"#\s*sphlint:\s*disable-file=([\w\-,\s]+)")
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint finding. ``key`` (rule, path, line, message) is the
+    identity used for baseline matching."""
+
+    rule: str
+    path: str  # posix-relative to the invocation cwd
+    line: int
+    col: int
+    message: str
+    severity: str = "error"
+
+    @property
+    def key(self) -> tuple:
+        return (self.rule, self.path, self.line, self.message)
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "severity": self.severity,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Finding":
+        return cls(
+            rule=d["rule"], path=d["path"], line=int(d["line"]),
+            col=int(d.get("col", 0)), message=d["message"],
+            severity=d.get("severity", "error"),
+        )
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"[{self.rule}] {self.severity}: {self.message}")
+
+
+# --------------------------------------------------------------------------
+# Traced-reachability analysis (shared by host-sync-in-scan /
+# cond-under-vmap)
+# --------------------------------------------------------------------------
+#: Callables whose FUNCTION argument becomes a traced body. Matched on
+#: the dotted tail of the call target, so ``jax.lax.scan``, ``lax.scan``
+#: and a bare ``scan`` (from-import) all hit.
+TRACING_CALLS = {
+    "scan": 0, "map": 0, "while_loop": (0, 1), "fori_loop": 2,
+    "cond": (1, 2, 3), "switch": None,  # switch: every arg from 1 on
+    "vmap": 0, "pmap": 0, "jit": 0, "checkpoint": 0, "remat": 0,
+    "custom_vjp": 0, "custom_jvp": 0, "grad": 0, "value_and_grad": 0,
+    "shard_map": 0,
+}
+VMAP_CALLS = ("vmap", "pmap")
+JIT_DECORATORS = ("jit",)
+
+
+def dotted_name(node: ast.AST) -> str:
+    """'jax.lax.scan' for Attribute chains, 'scan' for Names, '' else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def call_tail(node: ast.Call) -> str:
+    """Last component of the call target's dotted name."""
+    name = dotted_name(node.func)
+    return name.rsplit(".", 1)[-1] if name else ""
+
+
+def _is_jax_namespace(name: str) -> bool:
+    """True when a dotted call target plausibly lives in jax (guards the
+    bare-name false positives: a local function called ``map`` is not
+    ``lax.map``)."""
+    head = name.split(".", 1)[0]
+    return head in ("jax", "lax", "jnp", "functools", "partial") or \
+        "." not in name
+
+
+class _FuncInfo:
+    __slots__ = ("node", "name", "calls", "parent")
+
+    def __init__(self, node, parent):
+        self.node = node
+        self.name = getattr(node, "name", "<lambda>")
+        self.parent = parent  # enclosing _FuncInfo or None
+        self.calls: set[str] = set()  # bare names this function calls
+
+
+class TraceAnalysis:
+    """Per-module reachability: which functions run under trace.
+
+    Roots:
+      * functions decorated with ``@jax.jit`` / ``@partial(jax.jit, …)``;
+      * named functions or lambdas passed to tracing combinators
+        (``lax.scan``, ``lax.cond``, ``jax.vmap``, …);
+      * nested defs inside any traced function.
+
+    Reachability then closes over same-module calls by bare name. The
+    vmap closure is computed separately (roots = ``jax.vmap``/``pmap``
+    arguments only) for the ``cond-under-vmap`` rule.
+    """
+
+    def __init__(self, tree: ast.Module):
+        self.funcs: dict[int, _FuncInfo] = {}  # id(node) -> info
+        self.by_name: dict[str, list[_FuncInfo]] = {}
+        self.traced_roots: set[int] = set()
+        self.vmap_roots: set[int] = set()
+        self.root_reason: dict[int, str] = {}
+        self._collect(tree)
+        self.traced: set[int] = self._closure(self.traced_roots)
+        self.vmapped: set[int] = self._closure(self.vmap_roots)
+
+    # -- collection --------------------------------------------------
+    def _collect(self, tree):
+        stack: list[_FuncInfo] = []
+        analysis = self
+
+        class V(ast.NodeVisitor):
+            def _enter(self, node):
+                info = _FuncInfo(node, stack[-1] if stack else None)
+                analysis.funcs[id(node)] = info
+                analysis.by_name.setdefault(info.name, []).append(info)
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        if analysis._is_jit_decorator(dec):
+                            analysis._root(node, "decorated with jax.jit")
+                stack.append(info)
+                self.generic_visit(node)
+                stack.pop()
+
+            visit_FunctionDef = _enter
+            visit_AsyncFunctionDef = _enter
+            visit_Lambda = _enter
+
+            def visit_Call(self, node):
+                analysis._note_tracing_call(node, stack)
+                if stack:
+                    tail = call_tail(node)
+                    if tail:
+                        stack[-1].calls.add(tail)
+                self.generic_visit(node)
+
+        V().visit(tree)
+
+    @staticmethod
+    def _is_jit_decorator(dec: ast.AST) -> bool:
+        name = dotted_name(dec)
+        if name.rsplit(".", 1)[-1] in JIT_DECORATORS:
+            return True
+        if isinstance(dec, ast.Call):
+            tail = call_tail(dec)
+            if tail in JIT_DECORATORS:
+                return True
+            if tail == "partial" and dec.args:
+                first = dotted_name(dec.args[0])
+                if first.rsplit(".", 1)[-1] in JIT_DECORATORS:
+                    return True
+        return False
+
+    def _root(self, node, reason, vmap=False):
+        self.traced_roots.add(id(node))
+        self.root_reason.setdefault(id(node), reason)
+        if vmap:
+            self.vmap_roots.add(id(node))
+
+    def _mark_arg(self, arg, reason, vmap):
+        """Mark a function-valued call argument as a traced root."""
+        if isinstance(arg, ast.Lambda):
+            self._root(arg, reason, vmap)
+        elif isinstance(arg, (ast.Name, ast.Attribute)):
+            name = dotted_name(arg).rsplit(".", 1)[-1]
+            for info in self.by_name.get(name, []):
+                self._root(info.node, reason, vmap)
+
+    def _note_tracing_call(self, node: ast.Call, stack):
+        tail = call_tail(node)
+        if tail not in TRACING_CALLS:
+            return
+        name = dotted_name(node.func)
+        if not _is_jax_namespace(name):
+            return
+        # jax.tree.map / tree_util.tree_map apply f OUTSIDE the trace —
+        # they are pytree plumbing, not tracing combinators.
+        if "tree" in name:
+            return
+        spec = TRACING_CALLS[tail]
+        vmap = tail in VMAP_CALLS
+        reason = f"passed to {dotted_name(node.func)}"
+        if tail == "switch":
+            positions = range(1, len(node.args))
+        elif isinstance(spec, tuple):
+            positions = spec
+        else:
+            positions = (spec,)
+        for pos in positions:
+            if pos < len(node.args):
+                self._mark_arg(node.args[pos], reason, vmap)
+        for kw in node.keywords:
+            if kw.arg in ("f", "fun", "body", "body_fun", "cond_fun"):
+                self._mark_arg(kw.value, reason, vmap)
+
+    # -- closure -----------------------------------------------------
+    def _closure(self, roots: set[int]) -> set[int]:
+        reached = set(roots)
+        # nested defs inside a traced function are traced
+        changed = True
+        while changed:
+            changed = False
+            for fid, info in self.funcs.items():
+                if fid in reached:
+                    continue
+                parent = info.parent
+                if parent is not None and id(parent.node) in reached:
+                    reached.add(fid)
+                    self.root_reason.setdefault(
+                        fid, f"nested in traced {parent.name!r}")
+                    changed = True
+            # same-module calls by bare name
+            for fid in list(reached):
+                for callee in self.funcs[fid].calls:
+                    for info in self.by_name.get(callee, []):
+                        if id(info.node) not in reached:
+                            reached.add(id(info.node))
+                            self.root_reason.setdefault(
+                                id(info.node),
+                                f"called from traced "
+                                f"{self.funcs[fid].name!r}")
+                            changed = True
+        return reached
+
+    def reason(self, node) -> str:
+        return self.root_reason.get(id(node), "traced context")
+
+
+# --------------------------------------------------------------------------
+# File context + rule protocol
+# --------------------------------------------------------------------------
+class FileContext:
+    """Everything a rule needs about one source file."""
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        self.disabled_lines: dict[int, set[str]] = {}
+        self.disabled_file: set[str] = set()
+        self._scan_pragmas()
+        self._trace: TraceAnalysis | None = None
+
+    @property
+    def trace(self) -> TraceAnalysis:
+        if self._trace is None:
+            self._trace = TraceAnalysis(self.tree)
+        return self._trace
+
+    def _scan_pragmas(self):
+        for i, line in enumerate(self.lines, start=1):
+            m = PRAGMA_FILE_RE.search(line)
+            if m and i <= 10:
+                self.disabled_file |= {
+                    r.strip() for r in m.group(1).split(",") if r.strip()
+                }
+                continue
+            m = PRAGMA_RE.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            self.disabled_lines.setdefault(i, set()).update(rules)
+            # a standalone pragma comment guards the NEXT line
+            if line.split("#", 1)[0].strip() == "":
+                self.disabled_lines.setdefault(i + 1, set()).update(rules)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        if rule in self.disabled_file or "all" in self.disabled_file:
+            return True
+        rules = self.disabled_lines.get(line, ())
+        return rule in rules or "all" in rules
+
+
+class Rule:
+    """Base rule: subclasses set ``name``/``severity`` and implement
+    ``check``."""
+
+    name = "abstract"
+    severity = "error"
+    #: fnmatch patterns (against the posix relpath) where the rule does
+    #: not apply at all — the sanctioned-site mechanism.
+    allow_paths: tuple = ()
+
+    def applies(self, rel: str) -> bool:
+        return not any(fnmatch.fnmatch(rel, p) for p in self.allow_paths)
+
+    def check(self, ctx: FileContext):
+        raise NotImplementedError
+
+    def finding(self, ctx: FileContext, node: ast.AST, message: str
+                ) -> Finding:
+        return Finding(
+            rule=self.name, path=ctx.rel,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0),
+            message=message, severity=self.severity,
+        )
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+def collect_files(paths: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            # fixture corpora (known-bad incident replays) are linted
+            # only when passed explicitly, never via directory sweep
+            out.extend(sorted(
+                f for f in path.rglob("*.py")
+                if "fixtures" not in f.parts
+            ))
+        elif path.suffix == ".py":
+            out.append(path)
+    return out
+
+
+def _relpath(path: Path) -> str:
+    try:
+        return path.resolve().relative_to(Path.cwd().resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def lint_paths(paths: list[str], rules=None) -> list[Finding]:
+    """Run ``rules`` (default: the full registry) over ``paths``.
+
+    Returns pragma-filtered findings sorted by (path, line, rule).
+    Syntax errors surface as findings of the pseudo-rule ``parse-error``
+    rather than crashing the whole run.
+    """
+    if rules is None:
+        from tools.sphlint.rules import default_rules
+        rules = default_rules()
+    findings: list[Finding] = []
+    for path in collect_files(paths):
+        rel = _relpath(path)
+        try:
+            source = path.read_text()
+            ctx = FileContext(path, rel, source)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            findings.append(Finding(
+                rule="parse-error", path=rel,
+                line=getattr(e, "lineno", 1) or 1, col=0,
+                message=f"could not parse: {e.msg if hasattr(e, 'msg') else e}",
+            ))
+            continue
+        for rule in rules:
+            if not rule.applies(rel):
+                continue
+            for f in rule.check(ctx):
+                if not ctx.suppressed(f.rule, f.line):
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return findings
+
+
+def render_findings(findings: list[Finding], stream=None) -> None:
+    stream = stream or sys.stdout
+    for f in findings:
+        print(f.render(), file=stream)

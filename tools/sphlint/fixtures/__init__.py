@@ -1,0 +1,8 @@
+"""Fixture corpus for sphlint's own tests.
+
+``bad_*.py`` files are MINIMIZED REPLAYS of real incidents from this
+repo's PR history — each must trip exactly its rule. ``good_*.py``
+files are the idiomatic fixed forms and must lint clean. The directory
+is skipped by directory sweeps (``engine.collect_files``); tests lint
+these files explicitly.
+"""

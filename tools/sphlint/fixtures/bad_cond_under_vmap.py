@@ -1,0 +1,23 @@
+"""BAD: the PR 7 batched rebuild-cadence bug, minimized.
+
+``lax.cond`` inside a vmapped step: under batching the cond lowers to
+``select`` and BOTH branches run for every lane — the "cheap" skip
+branch never actually skips the rebuild.
+"""
+import jax
+from jax import lax
+
+
+def _rebuild(carry):
+    return carry * 0
+
+
+def _advance(carry):
+    return carry + 1
+
+
+def step_one(carry):
+    return lax.cond(carry[0] > 0, _rebuild, _advance, carry)
+
+
+step_batch = jax.vmap(step_one)

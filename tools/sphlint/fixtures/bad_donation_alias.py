@@ -1,0 +1,18 @@
+"""BAD: the PR 3 donation-aliasing bug, minimized.
+
+The same buffer expression passed both as the donated argument and as
+a live argument: XLA either refuses the donation or the callee reads
+an invalidated buffer (``st.rc.cell_xy`` vs ``binning.cell_xy``).
+"""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def advance(cell_xy, binning_xy):
+    return cell_xy + 1, binning_xy
+
+
+def run(st):
+    return advance(st.rc.cell_xy, st.rc.cell_xy)

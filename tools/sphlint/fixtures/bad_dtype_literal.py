@@ -1,0 +1,16 @@
+"""BAD: scattered half-precision literals (pre-PR-9 rcll.py style)."""
+import jax.numpy as jnp
+
+
+def init_rel(x, dtype=jnp.float16):
+    """Storage dtype decided ad hoc instead of via PrecisionPolicy."""
+    return x.astype(dtype)
+
+
+def build_records(encode):
+    return encode(records="fp16")
+
+
+def pick_layout():
+    records_dtype = "bf16"
+    return records_dtype

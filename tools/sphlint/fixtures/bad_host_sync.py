@@ -1,0 +1,17 @@
+"""BAD: the PR 6 in-scan overflow callback, minimized.
+
+A ``jax.debug.callback`` plus host reads of the traced carry inside the
+``lax.scan`` body — a device->host sync point on every step.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def run(carry0, steps: int):
+    def body(count, _):
+        jax.debug.callback(lambda c: print("overflow", c), count)
+        peak = float(count)
+        sample = count.item()
+        return count + 1, jnp.float32(peak + sample)
+
+    return jax.lax.scan(body, carry0, None, length=steps)

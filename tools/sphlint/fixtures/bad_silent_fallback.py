@@ -1,0 +1,22 @@
+"""BAD: the PR 6 silent fp16->fp32 fallback, minimized.
+
+Precision silently degrades in two classic shapes: a conditional
+return of a different precision string, and an except handler that
+swaps the config's records field — neither logs, raises, nor records
+a GuardEvent.
+"""
+import dataclasses
+
+
+def resolve_records(cfg):
+    if max(cfg.ncells) >= 2048:
+        return "fp32"
+    return cfg.records
+
+
+def build(cfg, compile_half, compile_full):
+    try:
+        return compile_half(cfg)
+    except Exception:
+        cfg = dataclasses.replace(cfg, records="fp32")
+        return compile_full(cfg)

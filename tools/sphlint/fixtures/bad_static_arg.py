@@ -1,0 +1,18 @@
+"""BAD: an unfrozen, unhashable config riding jit as a static arg.
+
+The PR 7/8 class of bug: the sweep/serve compile caches key on the
+config — an unfrozen dataclass with list fields either crashes at
+trace time ("unhashable type") or silently splits the cache.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass
+class SweepConfig:
+    name: str = "sweep"
+    dts: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class MemberPolicy:
+    tags: dict = dataclasses.field(default_factory=dict)

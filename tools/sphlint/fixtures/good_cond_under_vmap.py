@@ -1,0 +1,24 @@
+"""GOOD: the branch decision hoisted OUT of the vmap (the PR 7 fix:
+reduce the per-lane predicates, cond once at batch level)."""
+import jax
+from jax import lax
+
+
+def _rebuild(batch):
+    return batch * 0
+
+
+def _advance(batch):
+    return batch + 1
+
+
+def _advance_lane(carry):
+    return carry + 1
+
+
+def step_batch(batch):
+    any_due = (batch[:, 0] > 0).any()
+    return lax.cond(any_due, _rebuild, _advance, batch)
+
+
+advance_batch = jax.vmap(_advance_lane)

@@ -1,0 +1,14 @@
+"""GOOD: the PR 3 fix — the live argument gets its own buffer."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def advance(cell_xy, binning_xy):
+    return cell_xy + 1, binning_xy
+
+
+def run(st):
+    return advance(st.rc.cell_xy, jnp.copy(st.rc.cell_xy))

@@ -1,0 +1,10 @@
+"""GOOD: precision flows through core/precision.py."""
+from repro.core.precision import NNPS_STORE, PrecisionPolicy
+
+
+def init_rel(x, dtype=NNPS_STORE):
+    return x.astype(dtype)
+
+
+def build_records(encode, policy: PrecisionPolicy):
+    return encode(records=policy.records)

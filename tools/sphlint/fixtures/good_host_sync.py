@@ -1,0 +1,18 @@
+"""GOOD: host work stays on host; the scan body stays on device."""
+import jax
+import jax.numpy as jnp
+
+
+def run(carry0, steps: int, h: float):
+    r_cell = float(h) * 2.0  # static config math, outside the trace
+
+    def body(count, _):
+        return count + 1, count.astype(jnp.float32)
+
+    carry, ys = jax.lax.scan(body, carry0, None, length=steps)
+    return carry, ys, r_cell
+
+
+def report(carry):
+    # host read AFTER the scan returns — one sync for the whole run
+    return float(jax.device_get(carry))

@@ -1,0 +1,21 @@
+"""GOOD: the fallback degrades LOUDLY (log / GuardEvent / raise)."""
+import dataclasses
+import logging
+
+log = logging.getLogger(__name__)
+
+
+def resolve_records(cfg):
+    if max(cfg.ncells) >= 2048:
+        log.warning("grid exceeds half-record anchor range; fp32 records")
+        return "fp32"
+    return cfg.records
+
+
+def build(cfg, compile_half, compile_full):
+    try:
+        return compile_half(cfg)
+    except Exception:
+        log.warning("half-record build failed; falling back to fp32")
+        cfg = dataclasses.replace(cfg, records="fp32")
+        return compile_full(cfg)

@@ -1,0 +1,13 @@
+"""GOOD: frozen config, hashable (tuple) leaves."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    name: str = "sweep"
+    dts: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class MemberPolicy:
+    tags: tuple = ()

@@ -1,0 +1,570 @@
+"""sphlint Layer A rules — one per incident this repo has paid for.
+
+Rule → incident map (the README carries the long-form table):
+
+  dtype-literal          PR 3/6: precision decisions scattered as raw
+                         ``jnp.float16`` / ``"fp16"`` literals instead
+                         of flowing through ``PrecisionPolicy``.
+  host-sync-in-scan      PR 6: the in-scan ``jax.debug.callback``
+                         overflow check — a device sync point on every
+                         step — retired by the health-word redesign.
+  cond-under-vmap        PR 7: ``lax.cond`` under ``vmap`` executes
+                         BOTH branches (the batched rebuild-cadence
+                         lesson) — a silent 2x cost or a hidden
+                         all-lanes rebuild.
+  static-arg-hashability PR 7/8: configs ride ``jax.jit`` as static
+                         args and key the serve/sweep compile caches —
+                         an unhashable or unfrozen config either
+                         crashes at trace time or silently splits the
+                         cache.
+  donation-alias         PR 3/8: ``st.rc.cell_xy`` aliased
+                         ``binning.cell_xy`` inside a donated carry;
+                         XLA refuses to donate one buffer through two
+                         arguments (prewarm donated-buffer race).
+  silent-fallback        PR 6: the build-time fp16→fp32 record fallback
+                         that had to be retrofitted with logging —
+                         precision/backend changes must be loud
+                         (GuardEvent or log), never silent.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.sphlint.engine import (
+    FileContext, Rule, call_tail, dotted_name,
+)
+
+HALF_DTYPE_ATTRS = ("float16", "bfloat16", "half")
+HALF_DTYPE_STRINGS = ("fp16", "bf16", "float16", "bfloat16")
+PRECISION_STRINGS = ("fp16", "bf16", "fp32", "fp64")
+LOG_CALL_TAILS = (
+    "warning", "warn", "error", "info", "debug", "exception", "critical",
+    "log",
+)
+EVENT_NAMES = ("GuardEvent",)
+
+
+def _contains_logging(node: ast.AST) -> bool:
+    """True when the subtree logs, raises, or records a GuardEvent —
+    i.e. the change it guards is LOUD."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Raise):
+            return True
+        if isinstance(sub, ast.Call):
+            name = dotted_name(sub.func)
+            tail = name.rsplit(".", 1)[-1]
+            if tail in LOG_CALL_TAILS and ("." in name or tail == "log"):
+                return True
+            if tail in EVENT_NAMES:
+                return True
+    return False
+
+
+# --------------------------------------------------------------------------
+class DtypeLiteralRule(Rule):
+    """Half-precision dtype literals outside the precision module.
+
+    Flags ``*.float16`` / ``*.bfloat16`` attribute access and raw
+    ``"fp16"``-family strings used as dtype/records arguments or
+    assigned to dtype-ish names. Precision decisions must flow through
+    ``core/precision.py`` (``PrecisionPolicy`` / the storage-dtype
+    constants); sanctioned encode/decode sites carry inline pragmas.
+    """
+
+    name = "dtype-literal"
+    severity = "error"
+    allow_paths = ("*core/precision.py",)
+
+    DTYPE_KWARGS = re.compile(
+        r"(dtype|records|coords|nnps|storage|compute)", re.IGNORECASE
+    )
+
+    def check(self, ctx: FileContext):
+        flagged: set[int] = set()  # id(node) already reported
+
+        def report(node, what):
+            if id(node) in flagged:
+                return None
+            flagged.add(id(node))
+            return self.finding(
+                ctx, node,
+                f"{what} — route precision through core/precision.py "
+                "(PrecisionPolicy or its storage-dtype constants), or "
+                "pragma a sanctioned encode/decode site",
+            )
+
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Attribute) and \
+                    node.attr in HALF_DTYPE_ATTRS:
+                base = dotted_name(node.value)
+                if base.rsplit(".", 1)[-1] in (
+                        "jnp", "np", "numpy", "jax", "torch"):
+                    f = report(node, f"half-precision dtype literal "
+                               f"`{base}.{node.attr}`")
+                    if f:
+                        yield f
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg and self.DTYPE_KWARGS.search(kw.arg) and \
+                            isinstance(kw.value, ast.Constant) and \
+                            kw.value.value in HALF_DTYPE_STRINGS:
+                        f = report(
+                            kw.value,
+                            f"raw dtype string {kw.value.value!r} passed "
+                            f"as `{kw.arg}=`")
+                        if f:
+                            yield f
+            elif isinstance(node, (ast.Assign, ast.AnnAssign)):
+                value = node.value
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                if isinstance(value, ast.Constant) and \
+                        value.value in HALF_DTYPE_STRINGS:
+                    for t in targets:
+                        tn = dotted_name(t)
+                        if tn and self.DTYPE_KWARGS.search(tn):
+                            f = report(
+                                value,
+                                f"raw dtype string {value.value!r} "
+                                f"assigned to `{tn}`")
+                            if f:
+                                yield f
+
+
+# --------------------------------------------------------------------------
+class HostSyncInScanRule(Rule):
+    """Host-sync operations on traced values inside scan/vmap/jit bodies.
+
+    ``float()`` / ``int()`` / ``bool()`` / ``.item()`` / ``np.asarray``
+    force a device→host transfer (a sync point per step when scanned);
+    ``jax.debug.callback`` / ``io_callback`` / ``debug.print`` insert
+    host callbacks into the compiled program. Static uses (shapes,
+    ``len``, ``finfo``, literals) are exempt.
+    """
+
+    name = "host-sync-in-scan"
+    severity = "error"
+
+    CAST_BUILTINS = ("float", "int", "bool", "complex")
+    NP_SYNC = ("asarray", "array")
+    CALLBACKS = ("callback", "pure_callback", "io_callback", "debug_print",
+                 "device_get")
+    #: parameter annotations that mark a TRACED value; anything else
+    #: (float, tuple, Domain, Scheme, …) is host-side configuration.
+    ARRAYISH = re.compile(r"(Array|ndarray|Tensor|ArrayLike)")
+
+    @classmethod
+    def _static_arg(cls, arg: ast.AST) -> bool:
+        """Heuristically static (host-side) expressions: literals,
+        shapes, lengths, finfo/iinfo fields, dataclass config floats."""
+        if isinstance(arg, ast.Constant):
+            return True
+        text = ast.dump(arg)
+        for marker in ("attr='shape'", "attr='ndim'", "attr='size'",
+                       "id='len'", "id='finfo'", "attr='finfo'",
+                       "attr='iinfo'", "id='range'", "attr='dtype'",
+                       "attr='itemsize'", "attr='nmant'", "attr='eps'"):
+            if marker in text:
+                return True
+        return False
+
+    def check(self, ctx: FileContext):
+        trace = ctx.trace
+        seen: set[int] = set()
+        for fid, info in trace.funcs.items():
+            if fid not in trace.traced:
+                continue
+            fn = info.node
+            reason = trace.reason(fn)
+            traced_names = self._traced_names(fn)
+            body = fn.body if isinstance(fn.body, list) else [fn.body]
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if not isinstance(node, ast.Call) or id(node) in seen:
+                        continue
+                    msg = self._classify(node, traced_names)
+                    if msg is None:
+                        continue
+                    seen.add(id(node))
+                    yield self.finding(
+                        ctx, node,
+                        f"{msg} inside a traced body ({reason}) — a "
+                        "host sync/callback per step; compute it on "
+                        "device or hoist it out of the scan",
+                    )
+
+    # -- traced-value data flow --------------------------------------
+    def _traced_names(self, fn) -> set[str]:
+        """Names in ``fn`` that (likely) hold traced arrays: non-static
+        Array-annotated or unannotated parameters, closed over
+        assignments whose RHS references a traced name."""
+        a = fn.args
+        params = list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+        static = self._static_params(fn)
+        traced: set[str] = set()
+        for p in params:
+            if p.arg in static or p.arg in ("self", "cls"):
+                continue
+            ann = getattr(p, "annotation", None)
+            if ann is not None and not self.ARRAYISH.search(
+                    ast.unparse(ann)):
+                continue  # float / tuple / Domain / Scheme → host config
+            traced.add(p.arg)
+        changed = True
+        while changed:
+            changed = False
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Assign):
+                    rhs, targets = sub.value, sub.targets
+                elif isinstance(sub, ast.AnnAssign) and sub.value:
+                    rhs, targets = sub.value, [sub.target]
+                elif isinstance(sub, ast.AugAssign):
+                    rhs, targets = sub.value, [sub.target]
+                else:
+                    continue
+                if self._static_arg(rhs) or \
+                        not self._refs(rhs, traced):
+                    continue
+                for t in targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name) and n.id not in traced:
+                            traced.add(n.id)
+                            changed = True
+        return traced
+
+    @staticmethod
+    def _refs(expr: ast.AST, names: set[str]) -> bool:
+        return any(isinstance(n, ast.Name) and n.id in names
+                   for n in ast.walk(expr))
+
+    @staticmethod
+    def _static_params(fn) -> set[str]:
+        """Parameter names declared static in the jit decorator."""
+        out: set[str] = set()
+        decs = getattr(fn, "decorator_list", [])
+        a = fn.args
+        positional = [p.arg for p in list(a.posonlyargs) + list(a.args)]
+        for dec in decs:
+            if not isinstance(dec, ast.Call):
+                continue
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    for n in ast.walk(kw.value):
+                        if isinstance(n, ast.Constant) and \
+                                isinstance(n.value, str):
+                            out.add(n.value)
+                elif kw.arg == "static_argnums":
+                    for n in ast.walk(kw.value):
+                        if isinstance(n, ast.Constant) and \
+                                isinstance(n.value, int) and \
+                                n.value < len(positional):
+                            out.add(positional[n.value])
+        return out
+
+    def _classify(self, node: ast.Call, traced: set[str]) -> str | None:
+        name = dotted_name(node.func)
+        tail = call_tail(node)
+        if isinstance(node.func, ast.Name) and \
+                tail in self.CAST_BUILTINS and node.args:
+            arg = node.args[0]
+            if not self._static_arg(arg) and self._refs(arg, traced):
+                return f"`{tail}()` cast of a traced value"
+            return None
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+            base = node.func.value
+            if self._refs(base, traced) or isinstance(base, ast.Name):
+                return "`.item()` host read"
+            return None
+        head = name.split(".", 1)[0]
+        if head in ("np", "numpy") and tail in self.NP_SYNC:
+            if node.args and self._refs(node.args[0], traced):
+                return f"`{name}` materializes a device value on host"
+            return None
+        if tail in self.CALLBACKS and (
+                "debug" in name or "jax" in name or
+                "experimental" in name or tail == "device_get"):
+            return f"`{name}` host callback"
+        if name in ("jax.debug.print", "debug.print"):
+            return f"`{name}` host callback"
+        return None
+
+
+# --------------------------------------------------------------------------
+class CondUnderVmapRule(Rule):
+    """``lax.cond`` in functions reachable from ``jax.vmap``.
+
+    Under batching, ``cond`` lowers to ``select`` — BOTH branches
+    execute for every lane (the PR 7 rebuild-cadence lesson: a single
+    lane's rebuild ran the full rebuild for the whole batch). Either
+    restructure so the cond sits outside the vmap, or acknowledge the
+    both-branches cost with a pragma.
+    """
+
+    name = "cond-under-vmap"
+    severity = "error"
+
+    def check(self, ctx: FileContext):
+        trace = ctx.trace
+        for fid, info in trace.funcs.items():
+            if fid not in trace.vmapped:
+                continue
+            for node in ast.walk(info.node):
+                if isinstance(node, ast.Call) and \
+                        call_tail(node) == "cond" and \
+                        "lax" in dotted_name(node.func):
+                    yield self.finding(
+                        ctx, node,
+                        f"`lax.cond` in `{info.name}`, reachable from "
+                        f"jax.vmap ({trace.reason(info.node)}): both "
+                        "branches execute per lane under batching — "
+                        "hoist the decision out of the vmap or pragma "
+                        "the accepted cost",
+                    )
+
+
+# --------------------------------------------------------------------------
+class StaticArgHashabilityRule(Rule):
+    """Config dataclasses must be frozen with hashable leaves.
+
+    Applies to ``@dataclasses.dataclass`` classes whose name marks them
+    as config-family (``*Config``/``*Policy``/``*Spec``/``*Scheme``/
+    ``*Profile``): they ride ``jax.jit`` as static arguments and key
+    the serve/sweep normalized-config caches, so they must be
+    ``frozen=True`` and must not carry unhashable (list/dict/set) or
+    mutable-default fields.
+    """
+
+    name = "static-arg-hashability"
+    severity = "error"
+
+    CONFIG_NAME = re.compile(r"(Config|Policy|Spec|Scheme|Profile)$")
+    UNHASHABLE_ANNOT = re.compile(
+        r"^(typing\.)?(list|List|dict|Dict|set|Set)\b"
+    )
+
+    def check(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            dc = self._dataclass_decorator(node)
+            if dc is None or not self.CONFIG_NAME.search(node.name):
+                continue
+            frozen = self._is_frozen(dc)
+            if not frozen:
+                yield self.finding(
+                    ctx, node,
+                    f"config dataclass `{node.name}` is not "
+                    "frozen=True: static jit args and compile-cache "
+                    "keys must be immutable and hashable",
+                )
+            for stmt in node.body:
+                if not isinstance(stmt, ast.AnnAssign) or \
+                        not isinstance(stmt.target, ast.Name):
+                    continue
+                ann = ast.unparse(stmt.annotation)
+                if self.UNHASHABLE_ANNOT.match(ann):
+                    yield self.finding(
+                        ctx, stmt,
+                        f"`{node.name}.{stmt.target.id}: {ann}` is an "
+                        "unhashable leaf — use a tuple / frozenset / "
+                        "frozen sub-dataclass",
+                    )
+                if isinstance(stmt.value, (ast.List, ast.Dict, ast.Set)):
+                    yield self.finding(
+                        ctx, stmt,
+                        f"`{node.name}.{stmt.target.id}` has a mutable "
+                        "default — unhashable and shared across "
+                        "instances",
+                    )
+
+    @staticmethod
+    def _dataclass_decorator(node: ast.ClassDef):
+        for dec in node.decorator_list:
+            name = dotted_name(dec if not isinstance(dec, ast.Call)
+                               else dec.func)
+            if name.rsplit(".", 1)[-1] == "dataclass":
+                return dec
+        return None
+
+    @staticmethod
+    def _is_frozen(dec) -> bool:
+        if not isinstance(dec, ast.Call):
+            return False
+        for kw in dec.keywords:
+            if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                return bool(kw.value.value)
+        return False
+
+
+# --------------------------------------------------------------------------
+class DonationAliasRule(Rule):
+    """The same buffer passed to a donating function twice.
+
+    A function jitted with ``donate_argnums`` invalidates its donated
+    arguments; passing one expression both as the donated argument and
+    as another argument makes XLA refuse the donation (loud at best) or
+    hands the callee an invalidated alias (the PR 3
+    ``st.rc.cell_xy``/``binning.cell_xy`` incident, the PR 8 prewarm
+    race). The deep structural form of this check (pytree leaves that
+    alias across arguments) lives in ``sphlint trace``.
+    """
+
+    name = "donation-alias"
+    severity = "error"
+
+    def check(self, ctx: FileContext):
+        donating = self._donating_functions(ctx.tree)
+        if not donating:
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            tail = call_tail(node)
+            if tail not in donating:
+                continue
+            donate = donating[tail]
+            exprs = [ast.dump(a) for a in node.args]
+            donated = {i for i in donate if i < len(exprs)}
+            for i in donated:
+                for j, other in enumerate(exprs):
+                    if j == i or exprs[i] != other:
+                        continue
+                    if isinstance(node.args[i], ast.Constant):
+                        continue
+                    yield self.finding(
+                        ctx, node.args[j],
+                        f"argument {j} of `{tail}` repeats donated "
+                        f"argument {i} (`{ast.unparse(node.args[i])}`): "
+                        "the donated buffer would alias a live "
+                        "argument — pass a copy (jnp.copy) or "
+                        "restructure",
+                    )
+
+    @staticmethod
+    def _donating_functions(tree) -> dict[str, tuple]:
+        """name -> donate_argnums for functions jitted with donation."""
+        out: dict[str, tuple] = {}
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                tail = call_tail(dec)
+                target = dec
+                if tail == "partial" and dec.args and \
+                        dotted_name(dec.args[0]).endswith("jit"):
+                    target = dec
+                elif tail != "jit":
+                    continue
+                for kw in target.keywords:
+                    if kw.arg == "donate_argnums":
+                        nums = DonationAliasRule._const_tuple(kw.value)
+                        if nums:
+                            out[node.name] = nums
+        return out
+
+    @staticmethod
+    def _const_tuple(node) -> tuple:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return (node.value,)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            vals = []
+            for e in node.elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                    vals.append(e.value)
+            return tuple(vals)
+        return ()
+
+
+# --------------------------------------------------------------------------
+class SilentFallbackRule(Rule):
+    """Precision/backend fallbacks must be loud.
+
+    Flags (a) ``except`` handlers that change a records/backend/dtype
+    field and (b) conditional returns of a precision string, when the
+    surrounding handler/branch neither logs, raises, nor records a
+    GuardEvent. The PR 6 incident: the build-time fp16→fp32 record
+    fallback ran silently until the health guard retrofitted the loud
+    path; new fallbacks must start loud.
+    """
+
+    name = "silent-fallback"
+    severity = "error"
+
+    PRECISION_FIELD = re.compile(r"(records|backend|dtype|policy|precision)",
+                                 re.IGNORECASE)
+
+    def check(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ExceptHandler):
+                yield from self._check_handler(ctx, node)
+            elif isinstance(node, ast.If):
+                yield from self._check_branch(ctx, node)
+
+    def _check_handler(self, ctx, handler: ast.ExceptHandler):
+        if _contains_logging(handler):
+            return
+        for sub in ast.walk(handler):
+            change = self._precision_change(sub)
+            if change:
+                yield self.finding(
+                    ctx, sub,
+                    f"except handler {change} without logging a "
+                    "GuardEvent or warning — silent precision/backend "
+                    "fallbacks hide real failures (the PR 6 fp16→fp32 "
+                    "incident)",
+                )
+                return
+
+    def _check_branch(self, ctx, node: ast.If):
+        # conditional `return "fp32"`-style fallback inside an un-loud
+        # branch of a function that also returns other precision values
+        for body in (node.body, node.orelse):
+            for stmt in body:
+                if isinstance(stmt, ast.Return) and \
+                        isinstance(stmt.value, ast.Constant) and \
+                        stmt.value.value in PRECISION_STRINGS:
+                    if not _contains_logging(node):
+                        yield self.finding(
+                            ctx, stmt,
+                            "conditional fallback returns "
+                            f"{stmt.value.value!r} without a log/"
+                            "GuardEvent — degrade loudly (see "
+                            "recovery._resolve_precision) or pragma a "
+                            "reviewed build-time fallback",
+                        )
+
+    def _precision_change(self, node) -> str | None:
+        if isinstance(node, ast.Call):
+            tail = call_tail(node)
+            if tail == "with_records":
+                return "changes the record dtype (`.with_records`)"
+            if tail == "replace":
+                for kw in node.keywords:
+                    if kw.arg and self.PRECISION_FIELD.search(kw.arg):
+                        return f"replaces `{kw.arg}=` on a config"
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                tn = dotted_name(t)
+                if tn and self.PRECISION_FIELD.search(tn.rsplit(".", 1)[-1]) \
+                        and isinstance(node.value, ast.Constant) and \
+                        node.value.value in PRECISION_STRINGS:
+                    return f"assigns {node.value.value!r} to `{tn}`"
+        return None
+
+
+# --------------------------------------------------------------------------
+def default_rules() -> list[Rule]:
+    return [
+        DtypeLiteralRule(),
+        HostSyncInScanRule(),
+        CondUnderVmapRule(),
+        StaticArgHashabilityRule(),
+        DonationAliasRule(),
+        SilentFallbackRule(),
+    ]
+
+
+RULE_NAMES = tuple(r.name for r in default_rules())
