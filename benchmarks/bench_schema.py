@@ -43,12 +43,13 @@ NUMERIC_FIELDS = (
     "n_particles", "max_neighbors", "skin", "skin_frac_hc", "rebuilds",
     "rebuild_frequency", "wall_s", "batch", "block", "concurrency",
     "slots", "queue", "completed", "rejected", "cpu_count",
+    "recovery_s", "worker_restarts",
     "hbm_model_bytes_per_step_gather", "hbm_model_bytes_per_step_fused",
 )
 
 #: Throughput/latency metrics that must additionally be positive.
 POSITIVE_FIELDS = ("steps_per_sec", "sims_per_sec", "p95_latency_ms",
-                   "nsteps")
+                   "nsteps", "recovery_s")
 
 
 def _is_num(v) -> bool:

@@ -59,6 +59,7 @@ def _case_key(case: dict) -> tuple:
         case.get("mode"),  # ensemble rows: sequential/batched/guarded
         case.get("concurrency"),  # serve rows: burst size
         case.get("slots"),  # serve rows: lanes per bucket
+        case.get("chaos"),  # serve chaos rows: worker-kill recovery
     )
 
 
@@ -107,6 +108,10 @@ def compare(old: dict, new: dict, threshold: float) -> tuple[list, list]:
             # are the service regressions steady steps/sec cannot see
             watched.append(("p95_ms", "p95_latency_ms", +1.0))
             watched.append(("sims/sec", "sims_per_sec", -1.0))
+        if case.get("recovery_s") and prev.get("recovery_s"):
+            # chaos rows: a slower worker-kill -> first-OBS recovery is
+            # a regression in the crash-containment path itself
+            watched.append(("recovery_s", "recovery_s", +1.0))
         for label, field, bad_sign in watched:
             before, after = prev.get(field), case.get(field)
             if not before or after is None:

@@ -18,13 +18,22 @@ item 2 deliverable (~100 concurrent dam-break requests with p50/p95
 latency and sims/sec on record; ``compare_bench`` flags p95 rises and
 sims/sec drops beyond its threshold).
 
-  PYTHONPATH=src python -m benchmarks.serve_latency [--quick]
+``--chaos`` adds a crash-recovery row: a multi-process
+:class:`FrontendServer` with ``chaos="kill"`` SIGKILLs its own engine
+worker mid-request and the row records ``recovery_s`` — kill to first
+post-restart OBS frame (worker respawn + recompile + checkpoint
+resume). ``compare_bench`` watches it like a latency: a rise beyond the
+threshold is flagged.
+
+  PYTHONPATH=src python -m benchmarks.serve_latency [--quick] [--chaos]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import shutil
+import tempfile
 import time
 from concurrent.futures import ThreadPoolExecutor
 
@@ -100,9 +109,71 @@ def run_burst(concurrency: int, slots: int, nsteps: int,
     return row
 
 
-def main(full: bool = True, append: bool = True, out: str | None = None):
+def run_chaos(slots: int = 2, nsteps: int = 96) -> dict:
+    """One request against a multi-process server whose supervisor
+    SIGKILLs the engine worker after its second block; the row's
+    ``recovery_s`` is kill -> first post-restart OBS (respawn +
+    recompile + checkpoint resume)."""
+    from repro.sph.supervisor import FrontendServer
+
+    block = 8  # fine-grained blocks: the kill lands mid-request
+    policy = recovery.GuardPolicy(block=block, snapshot_every=1)
+    ckdir = tempfile.mkdtemp(prefix="bench-chaos-")
+    srv = FrontendServer(slots=slots, queue=8, policy=policy,
+                         checkpoint_dir=ckdir, chaos="kill")
+    try:
+        srv.prewarm(CASE, n=N_TARGET)  # first compile off-clock
+        srv.start()
+        t0 = time.perf_counter()
+        frames, term = client.run_request(
+            "127.0.0.1", srv.port,
+            {"case": CASE, "n": N_TARGET, "nsteps": nsteps,
+             "observe": True}, timeout=600.0)
+        wall = time.perf_counter() - t0
+        stats = srv.stats()
+    finally:
+        srv.request_drain()
+        srv.join(60)
+        shutil.rmtree(ckdir, ignore_errors=True)
+    done = term is not None and term["type"] == "done"
+    recovered = [f for f in frames
+                 if f.get("action") == "recovering"]
+    if not (done and recovered and stats["recovery_s"]):
+        raise RuntimeError(
+            f"chaos row is meaningless: done={done} "
+            f"recovering_events={len(recovered)} "
+            f"recovery_s={stats['recovery_s']}")
+    row = {
+        "case": CASE,
+        "n_target": N_TARGET,
+        "backend": "xla",
+        "records": "fp16",
+        "nsteps": nsteps,
+        "block": block,
+        "concurrency": 1,
+        "slots": slots,
+        "queue": 8,
+        "completed": 1,
+        "rejected": 0,
+        "other": 0,
+        "chaos": "kill",
+        "worker_restarts": stats["worker_restarts"],
+        "p50_latency_ms": round(1e3 * wall, 1),
+        "p95_latency_ms": round(1e3 * wall, 1),
+        "sims_per_sec": round(1.0 / wall, 4),
+        "wall_s": round(wall, 3),
+        "recovery_s": round(stats["recovery_s"], 3),
+    }
+    emit("serve_latency", row)
+    return row
+
+
+def main(full: bool = True, append: bool = True, out: str | None = None,
+         chaos: bool = False):
     tiers = [(100, 8)] if full else [(12, 4)]
     rows = [run_burst(conc, slots, NSTEPS) for conc, slots in tiers]
+    if chaos:
+        rows.append(run_chaos())
     record = {
         "label": "serve",
         "case": CASE,
@@ -126,5 +197,9 @@ if __name__ == "__main__":
                     help="do not append to BENCH_nnps.json")
     ap.add_argument("--out", type=str, default=None,
                     help="also write the record to a standalone file")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add a worker-kill recovery row (recovery_s: "
+                    "SIGKILL to first post-restart OBS)")
     a = ap.parse_args()
-    main(full=not a.quick, append=not a.no_append, out=a.out)
+    main(full=not a.quick, append=not a.no_append, out=a.out,
+         chaos=a.chaos)

@@ -142,12 +142,22 @@ def _atexit_join(ref):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 quiet_reclaim: bool = False):
         """``keep``: retain the newest ``keep`` committed steps, garbage-
         collecting older ones after each save. ``keep=0`` explicitly
-        means KEEP ALL (no GC ever) — it is not "keep none"."""
+        means KEEP ALL (no GC ever) — it is not "keep none".
+
+        ``quiet_reclaim``: demote the dead-pid lock-reclaim warning to
+        DEBUG. A supervisor restarting a killed worker reopens one
+        manager per resumed lane — every one reclaims the dead pid's
+        lock, and that is the EXPECTED recovery path, not an anomaly
+        worth a warning per lane. The caller reports one summary line
+        instead (``reclaimed_from`` records the dead owner's pid)."""
         self.dir = directory
         self.keep = keep
+        self.quiet_reclaim = quiet_reclaim
+        self.reclaimed_from: int | None = None
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
         self._error: Exception | None = None
@@ -190,9 +200,10 @@ class CheckpointManager:
                 return
             if owner is not None and _pid_alive(owner):
                 raise CheckpointLockError(self.dir, owner)
-            log.warning(
+            (log.debug if self.quiet_reclaim else log.warning)(
                 "checkpoint: reclaiming %s from dead process %s",
                 path, owner)
+            self.reclaimed_from = owner
             try:
                 os.remove(path)
             except FileNotFoundError:

@@ -793,6 +793,9 @@ class LaneEngine:
         self.snap_steps = np.zeros(B, np.int64)
         self.lane_events: list[list] = [[] for _ in range(B)]
         self.blocks = 0
+        # lanes whose snapshot/ladder-meta changed since take_dirty():
+        # the continuous per-block checkpoint work list (serve workers)
+        self.dirty: set[int] = set()
 
     # ---- introspection ------------------------------------------------
     @property
@@ -888,6 +891,7 @@ class LaneEngine:
         self.halvings[i] = int(halvings)
         self.retries[i] = 0
         self.lane_events[i] = []
+        self.dirty.add(i)
         return i
 
     def retire(self, lane: int):
@@ -897,6 +901,18 @@ class LaneEngine:
         so neighbors are untouched by construction."""
         self.active[lane] = False
         self.armed[lane] = False
+        self.dirty.discard(lane)
+
+    def take_dirty(self) -> list[int]:
+        """Drain the set of lanes whose last-healthy snapshot (or
+        ladder meta: dt_scale/halvings/armed) moved since the previous
+        call. A serving worker checkpoints exactly these lanes after
+        each block, so a crash loses at most one block of progress;
+        retired/done lanes are dropped from the set (their checkpoint
+        dirs are deleted, not refreshed)."""
+        out = sorted(self.dirty)
+        self.dirty.clear()
+        return out
 
     def lane_snapshot(self, lane: int):
         """(host carry row, meta) at the lane's last healthy block
@@ -958,10 +974,16 @@ class LaneEngine:
             host = jax.tree.map(np.asarray, self.carry)
             self.snap = _update_snapshot(self.snap, host, healthy)
             self.snap_steps[healthy] = steps[healthy]
+            self.dirty.update(int(i) for i in np.nonzero(healthy)[0])
         events: list[LaneEvent] = []
         for i in np.nonzero(tripped)[0]:
             events.append(self._escalate(int(i), int(words[i]),
                                          _hw_member(hw, i)))
+            # a surviving tripped lane changed ladder meta (dt_scale /
+            # halvings / armed): re-checkpoint so a crash replays the
+            # same rung instead of re-deriving it from stale meta
+            if self.active[int(i)]:
+                self.dirty.add(int(i))
         for i in np.nonzero(healthy)[0]:
             i = int(i)
             row = {

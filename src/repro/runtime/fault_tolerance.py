@@ -48,25 +48,46 @@ class HeartbeatWriter:
 
 
 class HeartbeatMonitor:
-    def __init__(self, directory: str, timeout_s: float = 60.0):
+    """Staleness is judged by the heartbeat FILE's mtime, not the wall
+    time recorded inside it: the writer stamps ``t = time.time()``, so
+    an NTP step or suspend/resume between write and read would shift
+    the recorded clock and falsely flip hosts dead (or keep a dead one
+    alive). ``os.replace`` gives the file a fresh mtime from the same
+    filesystem clock the monitor stats it with, so the delta is immune
+    to wall-clock jumps; ``skew_s`` absorbs coarse-mtime filesystems
+    and NFS-style writer/reader clock offsets. The recorded ``t`` stays
+    in the returned record as a diagnostic only.
+    """
+
+    def __init__(self, directory: str, timeout_s: float = 60.0,
+                 skew_s: float = 2.0):
         self.dir = directory
         self.timeout = timeout_s
+        self.skew = skew_s
+
+    def _fresh(self, path: str) -> bool:
+        """mtime-based staleness check; False if the file vanished."""
+        try:
+            age = time.time() - os.stat(path).st_mtime
+        except OSError:
+            return False
+        return age <= self.timeout + self.skew
 
     def alive_hosts(self) -> dict[int, dict]:
-        now = time.time()
         out = {}
         if not os.path.isdir(self.dir):
             return out
         for name in os.listdir(self.dir):
             if not name.endswith(".hb"):
                 continue
+            path = os.path.join(self.dir, name)
             try:
-                with open(os.path.join(self.dir, name)) as f:
+                with open(path) as f:
                     rec = json.load(f)
             except (json.JSONDecodeError, OSError):
                 continue  # torn read: treat as missing this poll
             host = int(name.split("_")[1].split(".")[0])
-            if now - rec["t"] <= self.timeout:
+            if self._fresh(path):
                 out[host] = rec
         return out
 
@@ -82,12 +103,12 @@ class HeartbeatMonitor:
         path = os.path.join(self.dir, f"host_{host_id}.hb")
         try:
             with open(path) as f:
-                rec = json.load(f)
+                json.load(f)
         except FileNotFoundError:
             return "absent"
         except (json.JSONDecodeError, OSError):
             return "dead"  # torn/corrupt file from a mid-write kill
-        return "alive" if time.time() - rec["t"] <= self.timeout else "dead"
+        return "alive" if self._fresh(path) else "dead"
 
 
 @dataclasses.dataclass

@@ -320,16 +320,33 @@ def cmd_sweep(args) -> int:
 
 def cmd_serve(args) -> int:
     from repro.core import recovery as _rec
-    from repro.sph.serve import SimServer
 
     logging.basicConfig(level=logging.INFO)
     policy = _rec.GuardPolicy(
         block=args.block or _rec.GuardPolicy.block, snapshot_every=1)
-    srv = SimServer(
-        host=args.host, port=args.port, slots=args.slots,
-        queue=args.queue, policy=policy,
-        checkpoint_dir=args.checkpoint,
-    )
+    if args.single_process:
+        from repro.sph.serve import SimServer
+
+        srv = SimServer(
+            host=args.host, port=args.port, slots=args.slots,
+            queue=args.queue, policy=policy,
+            checkpoint_dir=args.checkpoint,
+        )
+        mode = "single-process"
+    else:
+        from repro.sph.supervisor import FrontendServer
+
+        srv = FrontendServer(
+            host=args.host, port=args.port, slots=args.slots,
+            queue=args.queue, policy=policy,
+            checkpoint_dir=args.checkpoint,
+            max_restarts=args.max_restarts,
+            hang_timeout_s=args.hang_timeout,
+            save_every=args.save_every,
+            drain_timeout_s=args.drain_timeout,
+            chaos=args.chaos,
+        )
+        mode = "multi-process"
     # SIGTERM/SIGINT -> graceful drain: stop admitting, checkpoint
     # in-flight lanes, answer RETRY_AFTER, exit 0
     for sig in (signal.SIGTERM, signal.SIGINT):
@@ -337,8 +354,9 @@ def cmd_serve(args) -> int:
     if args.case:
         srv.prewarm(args.case, n=args.n, ds=args.ds)
     print(f"# serving on {srv.host}:{srv.port} slots={srv.slots} "
-          f"queue={srv.queue_cap} block={policy.block}"
-          + (f" checkpoint={args.checkpoint}" if args.checkpoint else "")
+          f"queue={srv.queue_cap} block={policy.block} mode={mode}"
+          + (f" checkpoint={srv.ckdir}" if srv.ckdir else "")
+          + (f" chaos={args.chaos}" if args.chaos else "")
           + (f" predecessor={srv.predecessor}" if srv.predecessor else ""),
           flush=True)
     srv.serve_forever()
@@ -362,8 +380,14 @@ def cmd_request(args) -> int:
         req["deadline_s"] = args.deadline_s
     if args.inject is not None:
         req["inject"] = {"kind": args.inject}
-    frames, term = client.run_request(
-        args.host, args.port, req, timeout=args.timeout)
+    logging.basicConfig(level=logging.WARNING)
+    if args.retry > 0:
+        frames, term = client.run_request_resilient(
+            args.host, args.port, req, timeout=args.timeout,
+            retries=args.retry)
+    else:
+        frames, term = client.run_request(
+            args.host, args.port, req, timeout=args.timeout)
     for f in frames:
         print(json.dumps(f))
     if term is None:
@@ -495,11 +519,36 @@ def main(argv=None) -> int:
                     "(default: policy's 32)")
     vp.add_argument("--checkpoint", default=None, metavar="DIR",
                     help="drain checkpoints + heartbeat under DIR "
-                    "(enables RETRY_AFTER resume tokens)")
+                    "(enables RETRY_AFTER resume tokens); multi-process "
+                    "mode defaults to a temp dir so per-block recovery "
+                    "checkpoints always have a home")
     vp.add_argument("--ds", type=float, default=None,
                     help="prewarm resolution (spacing)")
     vp.add_argument("--n", type=int, default=None,
                     help="prewarm resolution (target fluid count)")
+    vp.add_argument("--single-process", action="store_true",
+                    help="run engines in the server process (legacy "
+                    "mode: no crash containment, no worker restarts)")
+    vp.add_argument("--max-restarts", type=int, default=3,
+                    help="worker restarts per shape bucket before its "
+                    "requests get RETRY_AFTER with resume tokens "
+                    "(default 3)")
+    vp.add_argument("--hang-timeout", type=float, default=600.0,
+                    help="seconds without block progress before a "
+                    "heartbeat-alive worker is declared hung and "
+                    "SIGKILLed (default 600)")
+    vp.add_argument("--save-every", type=int, default=1,
+                    help="blocks between per-lane recovery checkpoints "
+                    "inside each worker (default 1 = lose at most one "
+                    "block on a crash)")
+    vp.add_argument("--drain-timeout", type=float, default=60.0,
+                    help="seconds to wait for workers to finish final "
+                    "saves on SIGTERM drain (default 60)")
+    vp.add_argument("--chaos", default=None,
+                    choices=["kill", "hang", "oom-sim"],
+                    help="fault-injection harness: once a worker is "
+                    "busy and progressing, inject this fault (test/CI "
+                    "only; proves unattended recovery)")
     vp.set_defaults(fn=cmd_serve)
 
     qp = sub.add_parser(
@@ -523,6 +572,10 @@ def main(argv=None) -> int:
     qp.add_argument("--resume-token", default=None,
                     help="resume drained work from a RETRY_AFTER token")
     qp.add_argument("--timeout", type=float, default=300.0)
+    qp.add_argument("--retry", type=int, default=3, metavar="N",
+                    help="auto-recovery budget: on RETRY_AFTER resubmit "
+                    "the resume token, on mid-stream EOF reconnect, with "
+                    "capped exponential backoff (default 3; 0 disables)")
     qp.set_defaults(fn=cmd_request)
 
     tp = sub.add_parser(

@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import base64
 import dataclasses
+import hashlib
 import io
 import json
 import logging
@@ -144,6 +145,53 @@ def decode_state(blob: str) -> dict:
 _INJECT_KINDS = ("nan", "teleport")
 
 
+def build_overrides(req: dict) -> dict:
+    """Request fields -> ``build_case`` override kwargs. Numpy-only
+    (``resolve_ds`` never touches JAX), so the multi-process frontend
+    can normalize and route requests without owning a JAX runtime."""
+    over = dict(req.get("overrides") or {})
+    if req.get("ds") is not None:
+        over["ds"] = float(req["ds"])
+    elif req.get("n") is not None:
+        over["ds"] = cases_lib.resolve_ds(req["case"], int(req["n"]))
+    if req.get("backend") is not None:
+        over["backend"] = req["backend"]
+    if req.get("records") is not None:
+        over["policy"] = PrecisionPolicy(records=req["records"])
+    return over
+
+
+def request_key(req: dict) -> str:
+    """Canonical build/routing key: two requests with the same key
+    build byte-identical configs, so they share a build cache entry
+    (in-process) or an engine-worker process (multi-process)."""
+    over = build_overrides(req)
+    return json.dumps({"case": req["case"],
+                       "over": {k: repr(v) for k, v in over.items()}},
+                      sort_keys=True)
+
+
+def worker_tag(req: dict) -> str:
+    """Filesystem-safe name for the engine worker owning a request's
+    shape bucket (stable across frontend restarts: resume tokens are
+    located by scanning ``workers/<tag>/lanes/<token>``)."""
+    digest = hashlib.sha1(request_key(req).encode()).hexdigest()[:10]
+    return f"{req['case']}-{digest}"
+
+
+def build_request(req: dict, cache: dict):
+    """Case -> (cfg, state, default_nsteps), memoized on
+    :func:`request_key`: repeated requests for the same (case,
+    resolution, overrides) reuse the built arrays instead of re-running
+    the generator."""
+    key = request_key(req)
+    if key not in cache:
+        sim = Simulation.from_case(req["case"], **build_overrides(req))
+        cache[key] = (sim.cfg, sim.state,
+                      int(getattr(sim.case, "default_nsteps", 400)))
+    return cache[key]
+
+
 def validate_request(req) -> str | None:
     """Structural validation (reader thread — never touches JAX).
     Returns an error string for a malformed request, else None."""
@@ -198,6 +246,13 @@ class _Pending:
     return_state: bool = False
     deadline: float | None = None
     meta: dict | None = None  # resume meta (dt_scale, halvings, ...)
+    # multi-process routing state (FrontendServer only)
+    rid: str | None = None
+    token: str | None = None
+    wkey: str | None = None
+    steps: int = 0
+    recovering: bool = False
+    recovered: bool = False
 
     def reply(self, obj: dict) -> bool:
         if "request_id" in self.req:
@@ -228,15 +283,19 @@ class _Conn:
 
 
 # --------------------------------------------------------------------------
-# The server
+# The servers
 # --------------------------------------------------------------------------
-class SimServer:
-    """Live-batch SPH service over one listening socket.
+class ServerBase:
+    """Shared socket plumbing for the serving processes.
 
-    ``serve_forever()`` runs the engine loop on the CALLING thread (the
-    CLI runs it on the main thread so SIGTERM/SIGINT handlers can
-    trigger the drain); ``start()`` spawns it on a daemon thread for
-    in-process use (tests, the latency benchmark).
+    Owns the listener + accept thread, per-connection reader threads
+    (socket IO + structural validation ONLY), the bounded admission
+    queue, and the heartbeat/drain lifecycle. Subclasses implement one
+    scheduling round (``_tick``), graceful shutdown (``_drain``), and
+    the monitoring hooks (``_live_steps`` / ``_extra_stats``):
+    :class:`SimServer` runs the engines in-process; the multi-process
+    :class:`repro.sph.supervisor.FrontendServer` routes to per-bucket
+    engine-worker processes.
     """
 
     def __init__(
@@ -244,23 +303,16 @@ class SimServer:
         host: str = "127.0.0.1",
         port: int = 0,
         *,
-        slots: int = 8,
         queue: int = 32,
-        policy: recovery.GuardPolicy | None = None,
         checkpoint_dir: str | None = None,
         heartbeat_timeout_s: float = 60.0,
     ):
-        self.policy = policy or recovery.GuardPolicy()
-        self.slots = int(slots)
         self.queue_cap = int(queue)
         self.ckdir = checkpoint_dir
-        self.buckets: dict[tuple, ensemble.LaneEngine] = {}
-        self.live: dict[tuple, _Pending] = {}  # (bucket, lane) -> req
         self.pending: deque[_Pending] = deque()
         self.cond = threading.Condition()
         self.draining = threading.Event()
         self.stopped = threading.Event()
-        self._build_cache: dict[str, tuple] = {}
         self._thread: threading.Thread | None = None
         self._running = False
         self.completed = 0
@@ -278,8 +330,7 @@ class SimServer:
                     "serve: stale heartbeat in %s — the previous server "
                     "process died without draining; drained tokens (if "
                     "any) are still honored", self.ckdir)
-            elif status == "absent" and os.path.isdir(
-                    os.path.join(self.ckdir, "drain")):
+            elif status == "absent" and self._has_resumables():
                 self.predecessor = "clean"
             self.hb = HeartbeatWriter(self.ckdir, 0)
         self.lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -290,9 +341,10 @@ class SimServer:
         self._accept_thread = threading.Thread(
             target=self._accept_loop, daemon=True)
         self._accept_thread.start()
-        log.info("serve: listening on %s:%d (slots=%d queue=%d block=%d)",
-                 self.host, self.port, self.slots, self.queue_cap,
-                 self.policy.block)
+
+    def _has_resumables(self) -> bool:
+        """Do resume tokens from a previous (clean) run exist?"""
+        return os.path.isdir(os.path.join(self.ckdir, "drain"))
 
     # ---- socket side (reader threads) ---------------------------------
     def _accept_loop(self):
@@ -346,45 +398,117 @@ class SimServer:
                 conn.close()
 
     def stats(self) -> dict:
-        return {
+        out = {
             "queue": len(self.pending),
             # per-live-lane step counts at the last healthy boundary
-            # (reader-thread read of host vectors: monitoring only)
-            "live_steps": sorted(
-                int(self.buckets[k].snap_steps[lane])
-                for (k, lane) in list(self.live)),
+            # (reader-thread read of host state: monitoring only)
+            "live_steps": self._live_steps(),
             "queue_cap": self.queue_cap,
-            "live": len(self.live),
-            "buckets": len(self.buckets),
             "completed": self.completed,
             "rejected": self.rejected,
             "draining": self.draining.is_set(),
             "predecessor": self.predecessor,
         }
+        out.update(self._extra_stats())
+        return out
+
+    def _live_steps(self) -> list[int]:
+        return []
+
+    def _extra_stats(self) -> dict:
+        return {}
+
+    # ---- the loop (shared skeleton) ------------------------------------
+    def request_drain(self):
+        """Programmatic SIGTERM equivalent (tests, embedders)."""
+        self.draining.set()
+        with self.cond:
+            self.cond.notify()
+
+    def start(self):
+        self._thread = threading.Thread(
+            target=self.serve_forever, daemon=True)
+        self._thread.start()
+        return self
+
+    def join(self, timeout: float | None = None):
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def serve_forever(self):
+        self._running = True
+        try:
+            while not self.draining.is_set():
+                try:
+                    self._tick()
+                except Exception:  # noqa: BLE001
+                    # an engine bug must not strand every connected
+                    # client on a dead socket: log, then best-effort
+                    # drain (checkpoint + RETRY_AFTER where possible)
+                    log.exception("serve: engine tick failed — draining")
+                    self.draining.set()
+            self._drain()
+        finally:
+            self.stopped.set()
+            try:
+                self.lsock.close()
+            except OSError:
+                pass
+            self._shutdown()
+
+    def _shutdown(self):
+        """Post-drain cleanup hook (the frontend reaps its workers)."""
+
+    def _tick(self):
+        raise NotImplementedError
+
+    def _drain(self):
+        raise NotImplementedError
+
+
+class SimServer(ServerBase):
+    """Live-batch SPH service with every engine in-process.
+
+    ``serve_forever()`` runs the engine loop on the CALLING thread (the
+    CLI runs it on the main thread so SIGTERM/SIGINT handlers can
+    trigger the drain); ``start()`` spawns it on a daemon thread for
+    in-process use (tests, the latency benchmark).
+    """
+
+    def __init__(
+        self,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        *,
+        slots: int = 8,
+        queue: int = 32,
+        policy: recovery.GuardPolicy | None = None,
+        checkpoint_dir: str | None = None,
+        heartbeat_timeout_s: float = 60.0,
+    ):
+        self.policy = policy or recovery.GuardPolicy()
+        self.slots = int(slots)
+        self.buckets: dict[tuple, ensemble.LaneEngine] = {}
+        self.live: dict[tuple, _Pending] = {}  # (bucket, lane) -> req
+        self._build_cache: dict[str, tuple] = {}
+        super().__init__(host, port, queue=queue,
+                         checkpoint_dir=checkpoint_dir,
+                         heartbeat_timeout_s=heartbeat_timeout_s)
+        log.info("serve: listening on %s:%d (slots=%d queue=%d block=%d)",
+                 self.host, self.port, self.slots, self.queue_cap,
+                 self.policy.block)
+
+    def _live_steps(self) -> list[int]:
+        return sorted(
+            int(self.buckets[k].snap_steps[lane])
+            for (k, lane) in list(self.live))
+
+    def _extra_stats(self) -> dict:
+        return {"live": len(self.live), "buckets": len(self.buckets)}
 
     # ---- engine side (single thread owns all JAX work) -----------------
     def _build(self, req: dict):
-        """Case -> (cfg, state, default_nsteps), memoized: repeated
-        requests for the same (case, resolution, overrides) reuse the
-        built arrays instead of re-running the generator."""
-        over = dict(req.get("overrides") or {})
-        if req.get("ds") is not None:
-            over["ds"] = float(req["ds"])
-        elif req.get("n") is not None:
-            over["ds"] = cases_lib.resolve_ds(req["case"], int(req["n"]))
-        if req.get("backend") is not None:
-            over["backend"] = req["backend"]
-        if req.get("records") is not None:
-            over["policy"] = PrecisionPolicy(records=req["records"])
-        key = json.dumps({"case": req["case"],
-                          "over": {k: repr(v) for k, v in over.items()}},
-                         sort_keys=True)
-        if key not in self._build_cache:
-            sim = Simulation.from_case(req["case"], **over)
-            self._build_cache[key] = (
-                sim.cfg, sim.state,
-                int(getattr(sim.case, "default_nsteps", 400)))
-        return self._build_cache[key]
+        return build_request(req, self._build_cache)
 
     def _blocks_of(self, nsteps: int) -> int:
         """Targets are whole blocks: the engine advances every lane in
@@ -537,23 +661,6 @@ class SimServer:
         if self.hb is not None:
             self.hb.clear()  # clean shutdown: no stale-heartbeat ghost
 
-    # ---- the loop -------------------------------------------------------
-    def request_drain(self):
-        """Programmatic SIGTERM equivalent (tests, embedders)."""
-        self.draining.set()
-        with self.cond:
-            self.cond.notify()
-
-    def start(self) -> "SimServer":
-        self._thread = threading.Thread(
-            target=self.serve_forever, daemon=True)
-        self._thread.start()
-        return self
-
-    def join(self, timeout: float | None = None):
-        if self._thread is not None:
-            self._thread.join(timeout)
-
     def prewarm(self, case: str, **req):
         """Build a case and run one throwaway lane to completion so the
         block program is compiled before the first real request.
@@ -574,26 +681,6 @@ class SimServer:
                    for e in engine.step_block()):
                 break
         log.info("serve: prewarmed %s (n=%d)", case, key[1])
-
-    def serve_forever(self):
-        self._running = True
-        try:
-            while not self.draining.is_set():
-                try:
-                    self._tick()
-                except Exception:  # noqa: BLE001
-                    # an engine bug must not strand every connected
-                    # client on a dead socket: log, then best-effort
-                    # drain (checkpoint + RETRY_AFTER where possible)
-                    log.exception("serve: engine tick failed — draining")
-                    self.draining.set()
-            self._drain()
-        finally:
-            self.stopped.set()
-            try:
-                self.lsock.close()
-            except OSError:
-                pass
 
     def _tick(self):
         # 1) admit from the queue (FIFO per bucket; a full bucket does

@@ -275,9 +275,13 @@ class TestDurability:
         assert not rep.dead_process_detected
         assert rep.predecessor == "clean"
         assert rep.resumed_from == 1
-        # plant a stale heartbeat: a predecessor that died mid-run
-        HeartbeatWriter(str(tmp_path), 0).beat(123)
-        time.sleep(0.05)
+        # plant a stale heartbeat: a predecessor that died mid-run.
+        # Staleness is judged by file mtime (timeout + skew), so
+        # backdate the file instead of sleeping past the skew window.
+        w = HeartbeatWriter(str(tmp_path), 0)
+        w.beat(123)
+        old = time.time() - 60
+        os.utime(w.path, (old, old))
         _, _, rep = ensemble.run_ensemble(
             mcfg, states, 24, policy, checkpoint=mgr, checkpoint_every=1,
             resume=True, heartbeat_timeout_s=0.01)

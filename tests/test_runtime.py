@@ -20,7 +20,7 @@ def test_heartbeat_roundtrip(tmp_path):
 def test_heartbeat_timeout(tmp_path):
     w = HeartbeatWriter(str(tmp_path), 0)
     w.beat(1)
-    mon = HeartbeatMonitor(str(tmp_path), timeout_s=0.05)
+    mon = HeartbeatMonitor(str(tmp_path), timeout_s=0.05, skew_s=0.0)
     time.sleep(0.1)
     assert mon.dead_hosts(expected=1) == [0]
 
@@ -48,7 +48,7 @@ def test_host_status_tristate(tmp_path):
     w.beat(1)
     assert mon.host_status(0) == "alive"
     # stale beat: the process stopped beating without clear()
-    stale = HeartbeatMonitor(str(tmp_path), timeout_s=0.01)
+    stale = HeartbeatMonitor(str(tmp_path), timeout_s=0.01, skew_s=0.0)
     time.sleep(0.05)
     assert stale.host_status(0) == "dead"
     # clean shutdown: back to absent, NOT dead
@@ -58,6 +58,51 @@ def test_host_status_tristate(tmp_path):
     with open(w.path, "w") as f:
         f.write("{not json")
     assert mon.host_status(0) == "dead"
+
+
+def test_heartbeat_staleness_ignores_forged_wall_time(tmp_path):
+    """Liveness is judged by the heartbeat file's mtime, NOT the wall
+    time recorded inside it: an NTP step or suspend/resume that shifts
+    the writer's clock must not flip a beating host dead (or keep a
+    dead one alive)."""
+    import json
+
+    w = HeartbeatWriter(str(tmp_path), 0)
+    w.beat(3)
+    with open(w.path) as f:
+        rec = json.load(f)
+    # forge `t` an hour in the past (writer clock stepped backward);
+    # the file itself is fresh on disk -> still alive
+    rec["t"] -= 3600.0
+    with open(w.path, "w") as f:
+        json.dump(rec, f)
+    mon = HeartbeatMonitor(str(tmp_path), timeout_s=60)
+    assert mon.host_status(0) == "alive"
+    # the recorded wall time survives as a diagnostic in the record
+    assert mon.alive_hosts()[0]["t"] == rec["t"]
+    # forge `t` an hour in the FUTURE but age the file on disk past
+    # timeout+skew -> dead, regardless of the optimistic record
+    rec["t"] = time.time() + 3600.0
+    with open(w.path, "w") as f:
+        json.dump(rec, f)
+    old = time.time() - 100.0
+    os.utime(w.path, (old, old))
+    stale = HeartbeatMonitor(str(tmp_path), timeout_s=60, skew_s=2.0)
+    assert stale.host_status(0) == "dead"
+    assert 0 not in stale.alive_hosts()
+
+
+def test_heartbeat_skew_allowance(tmp_path):
+    """skew_s widens the mtime staleness window (coarse-mtime or NFS
+    filesystems); zero skew is the strict wall-clock-free check."""
+    w = HeartbeatWriter(str(tmp_path), 0)
+    w.beat(1)
+    old = time.time() - 5.0
+    os.utime(w.path, (old, old))
+    lax = HeartbeatMonitor(str(tmp_path), timeout_s=4.0, skew_s=2.0)
+    strict = HeartbeatMonitor(str(tmp_path), timeout_s=4.0, skew_s=0.0)
+    assert lax.host_status(0) == "alive"
+    assert strict.host_status(0) == "dead"
 
 
 def test_straggler_watchdog():

@@ -1,0 +1,266 @@
+"""Crash-contained multi-process serving (``sph/supervisor.py`` +
+``sph/worker.py`` + the resilient client).
+
+The contract under test:
+
+  * a REAL SIGKILL of an engine worker mid-request is invisible to the
+    request's outcome: the supervisor restarts the worker, the lane
+    resumes from its last block checkpoint, and the final state is
+    BIT-IDENTICAL to an uninterrupted solo run;
+  * a sibling shape bucket streams through the whole episode untouched
+    (no recovering event, bit-identical state) and the frontend process
+    never exits;
+  * the restarted worker reclaims its dead predecessor's lockfiles
+    QUIETLY — one summary line, no per-lane warning spam;
+  * ``--max-restarts`` exhaustion answers RETRY_AFTER with a resume
+    token that a later resubmission (fresh worker, fresh restart
+    budget) completes from the checkpoint;
+  * ``client.run_request_resilient`` survives RETRY_AFTER-with-token
+    and mid-stream EOF without manual intervention (unit-tested against
+    an in-process fake server — no JAX).
+"""
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import chaos
+from repro.checkpoint.manager import _flatten
+from repro.core import ensemble, recovery
+from repro.core.api import Simulation
+from repro.core.cases import resolve_ds
+from repro.sph import client
+from repro.sph.serve import recv_frame, request_key, send_frame, worker_tag
+
+BLOCK = 8
+POLICY = recovery.GuardPolicy(block=BLOCK, snapshot_every=1)
+
+
+def _solo_state(n: int, nsteps: int):
+    sim = Simulation.from_case(
+        "taylor_green", ds=resolve_ds("taylor_green", n))
+    mcfg = ensemble.member_config(sim.cfg, POLICY)
+    state, _, report, _ = recovery.run_guarded(
+        mcfg, sim.state, nsteps, POLICY)
+    assert not report.recovered
+    return {k: np.asarray(v) for k, v in _flatten(state).items()}
+
+
+def _assert_state_equal(done_frame, want, label):
+    got = client.final_state(done_frame)
+    assert set(got) == set(want), label
+    for k in want:
+        assert np.array_equal(got[k], want[k]), (label, k)
+
+
+class TestRouting:
+    def test_request_key_buckets_by_case_and_overrides(self):
+        a = {"case": "taylor_green", "n": 100, "nsteps": 16}
+        b = {"case": "taylor_green", "n": 150, "nsteps": 16}
+        c = {"case": "taylor_green", "n": 100, "nsteps": 999,
+             "observe": True}
+        assert request_key(a) != request_key(b)  # resolution = bucket
+        assert request_key(a) == request_key(c)  # nsteps/flags don't
+        assert worker_tag(a) != worker_tag(b)
+        assert worker_tag(a).startswith("taylor_green-")
+
+
+class _FakeServer:
+    """Scripted frame server: each accepted connection plays the next
+    scenario entry — a list of frames to send (after reading the
+    request), or the string "eof" to hang up mid-stream."""
+
+    def __init__(self, scenario):
+        self.scenario = list(scenario)
+        self.requests = []
+        self.sock = socket.socket()
+        self.sock.bind(("127.0.0.1", 0))
+        self.sock.listen(8)
+        self.port = self.sock.getsockname()[1]
+        threading.Thread(target=self._serve, daemon=True).start()
+
+    def _serve(self):
+        for entry in self.scenario:
+            try:
+                conn, _ = self.sock.accept()
+            except OSError:
+                return
+            with conn:
+                self.requests.append(recv_frame(conn))
+                if entry == "eof":
+                    continue  # close without a terminal frame
+                for frame in entry:
+                    send_frame(conn, frame)
+        self.sock.close()
+
+
+class TestResilientClient:
+    def test_retry_after_token_resubmitted(self):
+        fake = _FakeServer([
+            [{"type": "retry_after", "token": "tok-1", "steps_done": 8}],
+            [{"type": "obs", "step": 16, "ekin": 1.0},
+             {"type": "done", "steps": 16, "obs": {}}],
+        ])
+        frames, term = client.run_request_resilient(
+            "127.0.0.1", fake.port,
+            {"case": "taylor_green", "nsteps": 16, "observe": True},
+            retries=3, backoff_s=0.01)
+        assert term["type"] == "done"
+        # the resubmission carried the token, not the original case
+        assert fake.requests[1] == {"resume_token": "tok-1",
+                                    "observe": True}
+        # frames accumulate across attempts
+        assert [f["type"] for f in frames] == ["retry_after", "obs",
+                                               "done"]
+
+    def test_midstream_eof_reconnects(self):
+        fake = _FakeServer([
+            "eof",
+            [{"type": "done", "steps": 8, "obs": {}}],
+        ])
+        frames, term = client.run_request_resilient(
+            "127.0.0.1", fake.port,
+            {"case": "taylor_green", "nsteps": 8},
+            retries=2, backoff_s=0.01)
+        assert term["type"] == "done"
+        assert len(fake.requests) == 2
+        # both attempts sent the original request (no token yet)
+        assert fake.requests[0] == fake.requests[1]
+
+    def test_retry_budget_exhausted_returns_last_terminal(self):
+        fake = _FakeServer([
+            [{"type": "retry_after", "token": None}],
+            [{"type": "retry_after", "token": None}],
+        ])
+        _, term = client.run_request_resilient(
+            "127.0.0.1", fake.port, {"case": "taylor_green"},
+            retries=1, backoff_s=0.01)
+        assert term["type"] == "retry_after"
+        assert len(fake.requests) == 2  # initial + one retry, then stop
+
+    def test_nonrecoverable_terminal_passes_through(self):
+        fake = _FakeServer([
+            [{"type": "rejected", "reason": "busy", "queue": 1}],
+        ])
+        _, term = client.run_request_resilient(
+            "127.0.0.1", fake.port, {"case": "taylor_green"},
+            retries=3, backoff_s=0.01)
+        assert term["type"] == "rejected"
+        assert len(fake.requests) == 1  # no retries burned
+
+
+@pytest.mark.slow
+class TestSupervisorE2E:
+    def test_sigkill_recovery_bit_identical_sibling_unaffected(
+            self, tmp_path):
+        """The tentpole proof: SIGKILL one engine worker mid-request
+        (the supervisor's deterministic chaos-kill — a real SIGKILL
+        timed right after a committed block checkpoint); its request
+        must finish bit-identical to an uninterrupted run, a request in
+        a DIFFERENT bucket must stream through undisturbed, and the
+        frontend must never exit."""
+        srv = chaos.ServerProc("--chaos", "kill",
+                               checkpoint=str(tmp_path / "ck"),
+                               block=BLOCK)
+        results = {}
+
+        def fire(rid, req):
+            frames, term = client.run_request(
+                "127.0.0.1", srv.port, req, timeout=600.0)
+            results[rid] = (frames, term)
+
+        ta = threading.Thread(target=fire, args=("a", {
+            "case": "taylor_green", "n": 1000, "nsteps": 160,
+            "observe": True, "return_state": True}))
+        ta.start()
+        # chaos-kill fires once the victim worker has >= 2 blocks; the
+        # sibling starts only after the fire, so it runs exactly while
+        # the victim's bucket is dead/restarting
+        srv.wait_stats(lambda st: st["chaos_fired"], timeout=300,
+                       what="chaos fire")
+        assert srv.alive()
+        tb = threading.Thread(target=fire, args=("b", {
+            "case": "taylor_green", "n": 150, "nsteps": 64,
+            "observe": True, "return_state": True}))
+        tb.start()
+        ta.join(600)
+        tb.join(600)
+        assert srv.alive(), "frontend died during worker recovery"
+
+        frames_a, term_a = results["a"]
+        frames_b, term_b = results["b"]
+        assert term_a["type"] == "done" and term_a["steps"] == 160
+        assert term_b["type"] == "done" and term_b["steps"] == 64
+        # the killed bucket's client saw the recovery event...
+        assert any(f.get("action") == "recovering" for f in frames_a)
+        # ...the sibling bucket saw a clean, gap-free stream
+        assert not any(f.get("action") == "recovering" for f in frames_b)
+        obs_b = [f["step"] for f in frames_b if f["type"] == "obs"]
+        assert obs_b == list(range(BLOCK, 64, BLOCK))
+        # bit-identity for BOTH buckets
+        _assert_state_equal(term_a, _solo_state(1000, 160), "killed")
+        _assert_state_equal(term_b, _solo_state(150, 64), "sibling")
+        # the killed bucket re-covered every block boundary (duplicates
+        # around the kill point are allowed; gaps are not)
+        obs_a = {f["step"] for f in frames_a if f["type"] == "obs"}
+        assert obs_a == set(range(BLOCK, 160, BLOCK))
+
+        st = srv.stats()
+        assert st["worker_restarts"] >= 1
+        assert st["recovered_lanes"] >= 1
+        assert st["recovery_s"] is not None and st["recovery_s"] > 0
+        assert srv.stop() == 0
+        # quiet reclaim: the restarted worker logged ONE summary line,
+        # not a per-lane lockfile warning
+        spam = [ln for ln in srv.lines if "checkpoint: reclaiming" in ln]
+        assert spam == [], spam
+        assert any("reclaimed checkpoint lock(s)" in ln
+                   for ln in srv.lines)
+        assert any("# drained cleanly" in ln for ln in srv.lines)
+
+    def test_max_restarts_exhaustion_token_resumes(self, tmp_path):
+        """--max-restarts 0: the first real SIGKILL sheds the in-flight
+        request as RETRY_AFTER with a resume token; resubmitting the
+        token (fresh worker, fresh budget) finishes from the checkpoint
+        bit-identical to an uninterrupted run."""
+        srv = chaos.ServerProc("--max-restarts", "0",
+                               checkpoint=str(tmp_path / "ck"),
+                               block=BLOCK)
+        box = {}
+
+        def fire():
+            box["r"] = client.run_request(
+                "127.0.0.1", srv.port,
+                {"case": "taylor_green", "n": 1000, "nsteps": 160,
+                 "return_state": True}, timeout=600.0)
+
+        t = threading.Thread(target=fire)
+        t.start()
+        # kill by hand (test-driven injection) once a block checkpoint
+        # has certainly committed
+        st = srv.wait_stats(
+            lambda st: any(w["blocks"] >= 2 and w["assigned"]
+                           for w in st["workers"]),
+            timeout=300, what="2 blocks of progress")
+        pids = srv.worker_pids()
+        assert pids, st
+        chaos.sigkill(next(iter(pids.values())))
+        t.join(120)
+        _, term = box["r"]
+        assert term["type"] == "retry_after", term
+        token = term["token"]
+        assert token and term["steps_done"] > 0
+        assert srv.alive()
+
+        # the resilient client path: resubmit the token to completion
+        frames, done = client.run_request_resilient(
+            "127.0.0.1", srv.port,
+            {"resume_token": token, "return_state": True},
+            retries=3, timeout=600.0)
+        assert done["type"] == "done" and done["steps"] == 160
+        _assert_state_equal(done, _solo_state(1000, 160), "resumed")
+        accepted = next(f for f in frames if f["type"] == "accepted")
+        assert accepted["resumed"] is True
+        assert srv.stop() == 0
